@@ -1,0 +1,2 @@
+# Benchmark harnesses: one per paper table/figure. Run via
+#   PYTHONPATH=src python -m benchmarks.run

@@ -1,0 +1,70 @@
+"""Fig. 9: contribution of each optimization to throughput on a fixed 4-node
+hybrid grid (V=2 × B=2), skewed workload. Paper: balanced load 1.75x,
+pipeline+async 1.25x, pruning 1.51x; gains shrink on uniform workloads."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.bench_skew import make_hot_queries
+from benchmarks.common import calibrated_rate, corpus, emit, modeled_qps
+from repro.core import assign_queries, harmony_search, preassign
+from repro.core.router import (
+    estimate_cluster_hits,
+    load_aware_assignment,
+    ring_offsets,
+    round_robin_assignment,
+)
+from repro.core.types import PartitionPlan
+
+
+def _run(index, cfg, q, rate, *, balanced, stagger, pipeline, pruning, probes):
+    V, B = 2, 2
+    hits = estimate_cluster_hits(probes, index.nlist) if balanced else None
+    assign = (
+        load_aware_assignment(index.sizes, hits, V)
+        if balanced
+        else round_robin_assignment(index.nlist, V)
+    )
+    plan = PartitionPlan(v_shards=V, d_blocks=B, cluster_to_shard=assign,
+                         ring_offsets=ring_offsets(V, B, stagger))
+    corpus_ = preassign(index, plan)
+    res = harmony_search(index, corpus_, q, enable_pruning=pruning,
+                         pipeline=pipeline)
+    return modeled_qps(res.stats, q.shape[0], rate, pipelined=pipeline)
+
+
+def main():
+    ds, cfg, index = corpus()
+    print("# fig9: optimization ablations, fixed 2x2 grid, skewed workload")
+    q = make_hot_queries(ds, 0.75)
+    probes = assign_queries(index, q)
+    rate = calibrated_rate(index, cfg, q)
+
+    full = _run(index, cfg, q, rate, balanced=True, stagger=True,
+                pipeline=True, pruning=True, probes=probes)
+    no_bal = _run(index, cfg, q, rate, balanced=False, stagger=True,
+                  pipeline=True, pruning=True, probes=probes)
+    no_pipe = _run(index, cfg, q, rate, balanced=True, stagger=True,
+                   pipeline=False, pruning=True, probes=probes)
+    no_prune = _run(index, cfg, q, rate, balanced=True, stagger=True,
+                    pipeline=True, pruning=False, probes=probes)
+    emit("fig9.full", 1e6 / full, f"qps={full:.0f}")
+    emit("fig9.balanced_load_gain", 0.0, f"x{full / no_bal:.2f};paper=1.75x")
+    emit("fig9.pipeline_gain", 0.0, f"x{full / no_pipe:.2f};paper=1.25x")
+    emit("fig9.pruning_gain", 0.0, f"x{full / no_prune:.2f};paper=1.51x")
+
+    # uniform workload: balance/pipeline gains shrink (paper's Sift1M note)
+    from benchmarks.common import query_set
+
+    qu = query_set(ds.nb, ds.dim, skew=0.0)
+    pu = assign_queries(index, qu)
+    fu = _run(index, cfg, qu, rate, balanced=True, stagger=True,
+              pipeline=True, pruning=True, probes=pu)
+    nu = _run(index, cfg, qu, rate, balanced=False, stagger=True,
+              pipeline=True, pruning=True, probes=pu)
+    emit("fig9.uniform.balanced_load_gain", 0.0, f"x{fu / nu:.2f}")
+
+
+if __name__ == "__main__":
+    main()

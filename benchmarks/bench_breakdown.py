@@ -1,0 +1,47 @@
+"""Fig. 8: time breakdown (computation / communication / other) per mode,
+under the paper's hardware model (Xeon-class nodes, 100 Gb/s links) so
+communication shares are visible. Claims: only dimension-touching modes
+pay partial-result communication; comm share dimension > harmony > vector;
+comm share shrinks as dimensionality grows."""
+
+from __future__ import annotations
+
+from benchmarks.common import corpus, emit, query_set, run_mode
+
+PAPER_RATE = 2.0e11   # effective per-node f32 FLOP/s (56-thread Xeon + MKL)
+NET_BW = 12.5e9       # 100 Gb/s
+
+
+def _shares(res, n_nodes=4):
+    st = res.stats
+    comp_s = st["pair_flops"] / n_nodes / PAPER_RATE
+    comm_s = sum(st["comm_bytes"].values()) / NET_BW / n_nodes
+    other_s = 0.1 * comp_s + 2e-5 * st["visits"]   # scheduling/merge overhead
+    tot = comp_s + comm_s + other_s
+    return comp_s / tot, comm_s / tot, other_s / tot, tot
+
+
+def main():
+    print("# fig8: comp/comm/other under the paper's hardware model")
+    comm_share = {}
+    for dim in (128, 256):
+        ds, cfg, index = corpus(dim=dim)
+        q = query_set(ds.nb, dim, skew=0.25)
+        for mode in ("harmony", "vector", "dimension"):
+            res, _, _ = run_mode(index, cfg, q, mode, 4)
+            comp, comm, other, tot = _shares(res)
+            comm_share[(dim, mode)] = comm
+            emit(
+                f"fig8.d{dim}.{mode}",
+                1e6 * tot / q.shape[0],
+                f"comp={comp:.2f};comm={comm:.2f};other={other:.2f};"
+                f"partial_result_bytes={res.stats['comm_bytes'].get('partial_results', 0)}",
+            )
+    ok_order = comm_share[(128, "dimension")] >= comm_share[(128, "harmony")] >= comm_share[(128, "vector")]
+    ok_dim = comm_share[(256, "dimension")] <= comm_share[(128, "dimension")]
+    emit("fig8.claim.comm_order", 0.0, f"dim>=harmony>=vector:{ok_order}")
+    emit("fig8.claim.comm_dilutes_with_dim", 0.0, f"{ok_dim}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Fig. 10: index build time breakdown — Train / Add / Pre-assign per
+distribution mode. Claims: train+add identical across modes (the index
+structure is unchanged); pre-assign grows with dimension splitting and
+data size."""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import corpus, emit
+from repro.config import HarmonyConfig
+from repro.core import build_ivf, plan_search, preassign
+from repro.data import make_dataset
+
+
+def main():
+    print("# fig10: build time breakdown")
+    for label, nb in (("1.2m_like", 20_000), ("2.2m_like", 40_000)):
+        ds = make_dataset(nb=nb, dim=128, n_components=64, spread=0.6, seed=7)
+        cfg = HarmonyConfig(dim=128, nlist=256, nprobe=16, topk=10, kmeans_iters=8)
+        index = build_ivf(ds.x, cfg)
+        for mode, nodes in (("vector", 4), ("dimension", 4), ("harmony", 4)):
+            d = plan_search(index, nodes, cfg.replace(mode=mode))
+            c = preassign(index, d.plan)
+            emit(
+                f"fig10.{label}.{mode}",
+                1e6 * (index.build_times["train"] + index.build_times["add"] + c.preassign_time),
+                f"train={index.build_times['train']:.2f}s;add={index.build_times['add']:.3f}s;"
+                f"preassign={c.preassign_time:.3f}s",
+            )
+
+
+if __name__ == "__main__":
+    main()

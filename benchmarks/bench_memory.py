@@ -1,0 +1,36 @@
+"""Tables 4 + 5: index memory per node and peak query-time memory.
+Claims: each distributed node holds ≈ 1/N of the single-node index;
+dimension-touching modes add ≤ a few % overhead (per-block norms +
+intermediate partial results), diluting as dimension grows."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import corpus, emit, query_set, run_mode
+from repro.core import plan_search, preassign
+
+
+def main():
+    print("# table4/5: memory")
+    for dim in (64, 128, 256):
+        ds, cfg, index = corpus(dim=dim)
+        faiss_bytes = index.memory_bytes()
+        q = query_set(ds.nb, dim, skew=0.0)
+        for mode, nodes in (("vector", 4), ("dimension", 4), ("harmony", 4)):
+            d = plan_search(index, nodes, cfg.replace(mode=mode))
+            c = preassign(index, d.plan)
+            per_node = c.memory_bytes() / d.plan.v_shards / max(d.plan.d_blocks, 1)
+            overhead = c.memory_bytes() / (index.x.nbytes + index.ids.nbytes) - 1.0
+            res, _, _ = run_mode(index, cfg, q, mode, nodes)
+            peak = per_node + res.stats["max_pair_buffer"] * 4
+            emit(
+                f"table4.d{dim}.{mode}",
+                0.0,
+                f"faiss_MB={faiss_bytes/2**20:.1f};per_node_MB={per_node/2**20:.1f};"
+                f"overhead={overhead:.3f};peak_query_MB={peak/2**20:.1f}",
+            )
+
+
+if __name__ == "__main__":
+    main()

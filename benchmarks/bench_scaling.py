@@ -1,0 +1,33 @@
+"""Fig. 11: (a) speedup vs dimension/dataset size (Gaussian corpora, like
+the paper's §6.5.1); (b) node scaling 4→8→16. Claims: speedup grows with
+D and NB; harmony ≥ node count at scale (pruning super-linearity); pure
+dimension mode eventually flattens from comm overhead."""
+
+from __future__ import annotations
+
+from benchmarks.common import corpus, emit, oracle_qps, query_set, run_mode
+
+
+def main():
+    print("# fig11a: dims × size, 4 nodes")
+    for dim in (64, 128, 256):
+        for nb in (10_000, 40_000):
+            ds, cfg, index = corpus(nb=nb, dim=dim)
+            q = query_set(nb, dim, skew=0.0)
+            qps0, _ = oracle_qps(index, q)
+            res, qps, _ = run_mode(index, cfg, q, "harmony", 4)
+            emit(f"fig11a.d{dim}.n{nb}", 1e6 / qps,
+                 f"speedup={qps / qps0:.2f}")
+    print("# fig11b: node scaling")
+    ds, cfg, index = corpus()
+    q = query_set(ds.nb, ds.dim, skew=0.0)
+    qps0, _ = oracle_qps(index, q)
+    for nodes in (4, 8, 16):
+        for mode in ("harmony", "vector", "dimension"):
+            res, qps, _ = run_mode(index, cfg, q, mode, nodes)
+            emit(f"fig11b.{mode}.n{nodes}", 1e6 / qps,
+                 f"speedup={qps / qps0:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""Shared benchmark scaffolding.
+
+One corpus family at CPU-measurable scale (the paper's billion-scale
+shapes live in the dry-run/roofline, not here). All benches emit CSV rows
+``name,us_per_call,derived`` via :func:`emit`.
+
+Throughput convention: this container has ONE core, so the distributed
+engine runs its 4–16 "nodes" serially. ``modeled_qps`` converts the
+per-(stage, shard) compute walls into the cluster's critical path
+(max-over-shards per stage, plus the comm model) — the standard simulation
+methodology when reproducing a cluster paper on one box; measured serial
+walls are reported alongside.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.config import HarmonyConfig
+from repro.core import HardwareModel, build_ivf, harmony_search, plan_search, preassign, search_oracle
+from repro.core.search import SearchStats
+from repro.data import brute_force_topk, make_dataset, make_queries, recall_at_k
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+@functools.lru_cache(maxsize=8)
+def corpus(nb: int = 40_000, dim: int = 128, ncomp: int = 64, spread: float = 0.6,
+           nlist: int = 256, nprobe: int = 16, seed: int = 7):
+    ds = make_dataset(nb=nb, dim=dim, n_components=ncomp, spread=spread, seed=seed)
+    cfg = HarmonyConfig(dim=dim, nlist=nlist, nprobe=nprobe, topk=10, kmeans_iters=8)
+    index = build_ivf(ds.x, cfg)
+    return ds, cfg, index
+
+
+@functools.lru_cache(maxsize=16)
+def query_set(nb: int, dim: int, skew: float, nq: int = 256, seed: int = 3,
+              noise: float = 0.2, tail: float = 0.0):
+    ds, cfg, index = corpus(nb=nb, dim=dim)
+    return make_queries(ds, nq=nq, skew=skew, noise=noise, seed=seed,
+                        tail_fraction=tail)
+
+
+_CAL = {}
+
+
+def calibrated_rate(index, cfg, q) -> float:
+    """Effective node flops rate, calibrated once per corpus from the
+    measured single-node scan (pair_flops / measured compute wall). All
+    modes are then modeled on this same per-node hardware rate."""
+    key = (id(index), q.shape)
+    if key not in _CAL:
+        decision = plan_search(index, 1, cfg.replace(mode="vector"))
+        corpus_ = preassign(index, decision.plan)
+        res = harmony_search(index, corpus_, q, enable_pruning=False,
+                             pipeline=False)
+        _CAL[key] = res.stats["pair_flops"] / max(res.stats["wall_comp_s"], 1e-9)
+    return _CAL[key]
+
+
+def modeled_qps(stats: dict, nq: int, rate: float,
+                net_bw: float = 12.5e9, latency: float = 15e-6,
+                pipelined: bool = True) -> float:
+    """Critical-path throughput from per-(stage, machine) flops.
+
+    pipelined=True → steady-state pipelining (Fig. 5): every machine works
+    continuously on its slice of successive batches, so throughput is
+    limited by the busiest machine's TOTAL flops. pipelined=False →
+    stage-barriered ("synchronous execution" ablation): each stage waits
+    for its slowest machine, cost = Σ_stages max_machine."""
+    from collections import defaultdict
+
+    agg = defaultdict(dict)
+    totals = defaultdict(float)
+    for key, fl in stats["machine_flops"].items():
+        stage, machine = key.split(":")
+        agg[stage][machine] = agg[stage].get(machine, 0.0) + fl
+        totals[machine] += fl
+    if not agg:
+        comp = 0.0
+    elif pipelined:
+        comp = max(totals.values()) / rate
+    else:
+        comp = sum(max(m.values()) for m in agg.values()) / rate
+    comm = sum(stats["comm_bytes"].values()) / net_bw + latency * stats["visits"]
+    return nq / max(comp + comm, 1e-12)
+
+
+def faiss_like_qps(index, cfg, q, nprobe=None):
+    """Single-node IVF baseline: same engine, one shard, no pruning or
+    pipeline (cost proportional to probed candidates, like Faiss)."""
+    rate = calibrated_rate(index, cfg, q)
+    decision = plan_search(index, 1, cfg.replace(mode="vector"))
+    corpus_ = preassign(index, decision.plan)
+    res = harmony_search(index, corpus_, q, nprobe=nprobe,
+                         enable_pruning=False, pipeline=False)
+    return modeled_qps(res.stats, q.shape[0], rate), res
+
+
+def run_mode(
+    index,
+    cfg: HarmonyConfig,
+    q: np.ndarray,
+    mode: str,
+    n_nodes: int,
+    nprobe: Optional[int] = None,
+    balanced: bool = True,
+    stagger: bool = True,
+    enable_pruning: Optional[bool] = None,
+    pipeline: bool = True,
+    probes_sample: Optional[np.ndarray] = None,
+):
+    """Plan + preassign + search one mode; returns (result, modeled_qps,
+    serial_wall_s)."""
+    cfg2 = cfg.replace(mode=mode)
+    if enable_pruning is not None:
+        cfg2 = cfg2.replace(enable_pruning=enable_pruning)
+    # the planner's cost model runs on the same hardware model the
+    # throughput model evaluates on (calibrated per-node flops rate)
+    hw = HardwareModel(flops_rate=calibrated_rate(index, cfg, q))
+    decision = plan_search(
+        index, n_nodes, cfg2, probes_sample=probes_sample,
+        balanced=balanced, stagger=stagger, hw=hw,
+    )
+    corpus_ = preassign(index, decision.plan)
+    t0 = time.perf_counter()
+    res = harmony_search(
+        index, corpus_, q, nprobe=nprobe,
+        enable_pruning=enable_pruning, pipeline=pipeline,
+    )
+    serial = time.perf_counter() - t0
+    rate = calibrated_rate(index, cfg, q)
+    qps = modeled_qps(res.stats, q.shape[0], rate, pipelined=pipeline)
+    return res, qps, serial
+
+
+def oracle_qps(index, q: np.ndarray, nprobe: Optional[int] = None) -> Tuple[float, object]:
+    res = search_oracle(index, q, nprobe=nprobe)
+    return q.shape[0] / max(res.stats["wall_s"], 1e-9), res

@@ -1,0 +1,79 @@
+"""Benchmark driver: one harness per paper table/figure (DESIGN.md §6),
+plus the dry-run/roofline summary when benchmarks/dryrun_results.json is
+present. Prints ``name,us_per_call,derived`` CSV."""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+
+def main() -> None:
+    t0 = time.time()
+    from benchmarks import (
+        bench_ablation,
+        bench_breakdown,
+        bench_build,
+        bench_memory,
+        bench_pruning_ratio,
+        bench_qps_recall,
+        bench_scaling,
+        bench_skew,
+    )
+
+    print("name,us_per_call,derived")
+    for mod in (
+        bench_qps_recall,
+        bench_skew,
+        bench_breakdown,
+        bench_ablation,
+        bench_pruning_ratio,
+        bench_build,
+        bench_memory,
+        bench_scaling,
+    ):
+        mod.main()
+
+    # dry-run/roofline summary (produced by repro.launch.dryrun + roofline)
+    dr = Path(__file__).resolve().parent / "dryrun_results.json"
+    if dr.exists():
+        cells = json.loads(dr.read_text())
+        ok = sum(1 for c in cells if c.get("ok"))
+        print(f"dryrun.cells,{0.0:.1f},ok={ok}/{len(cells)}")
+    rf = Path(__file__).resolve().parent / "roofline.json"
+    if rf.exists():
+        rows = json.loads(rf.read_text())
+        for r in rows:
+            if r.get("mesh") != "pod16x16":
+                continue
+            print(
+                f"roofline.{r['arch']}.{r['shape']},0.0,"
+                f"bound={r['dominant']};compute_s={r['compute_s']:.3g};"
+                f"memory_s={r['memory_s']:.3g};collective_s={r['collective_s']:.3g};"
+                f"model_flops_ratio={r.get('model_flops_ratio', 0):.2f}"
+            )
+    # §Perf: optimized-variant deltas (EXPERIMENTS.md hillclimb)
+    opt = Path(__file__).resolve().parent / "dryrun_results_opt.json"
+    if rf.exists() and opt.exists():
+        from repro.launch.roofline import analyze
+
+        base = {(r["arch"], r["shape"]): r for r in json.loads(rf.read_text())
+                if r["mesh"] == "pod16x16"}
+        for r in analyze(json.loads(opt.read_text()), "pod16x16"):
+            b = base.get((r["arch"], r["shape"]))
+            if not b:
+                continue
+            dom = b["dominant"]
+            key = f"{dom}_s"
+            print(
+                f"perf.{r['arch']}.{r['shape']},0.0,"
+                f"dominant_term[{dom}]={b[key]:.3g}->{r[key]:.3g}s"
+                f";x{b[key]/max(r[key], 1e-12):.1f}"
+                f";MF_HLO={b['model_flops_ratio']:.2f}->{r['model_flops_ratio']:.2f}"
+            )
+    print(f"# total bench wall: {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""repro: HARMONY distributed ANNS + multi-arch LM framework on JAX/TPU.
+
+The paper's primary contribution lives in ``repro.core`` (multi-granularity
+partitioning, monotonic dimension-level pruning, cost-model planner, ring
+pipeline). Substrates: ``repro.models``, ``repro.train``, ``repro.serve``,
+``repro.data``, ``repro.checkpoint``, ``repro.runtime``, ``repro.sharding``,
+``repro.kernels`` (Pallas), ``repro.launch`` (mesh / dry-run / drivers).
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,146 @@
+"""Sharded checkpointing with manifest, retention, async writes, and
+**resharding restore** (load into a different mesh — the elastic-scaling
+path).
+
+Layout per step::
+
+    <dir>/step_000042/
+        manifest.json        # tree structure, shapes, dtypes, step
+        arrays.npz           # one entry per leaf (path-keyed)
+
+Each process writes its addressable shards; in this single-process
+container that is the full array (the npz key scheme ``<leaf>@shard0``
+leaves room for per-process shard files on real multi-host). Restore
+optionally takes ``shardings`` (a pytree of NamedSharding) and places
+leaves directly onto the (possibly different) target mesh.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = leaf
+    return flat
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3, async_write: bool = False):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_write = async_write
+        self._pending: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree) -> Path:
+        flat = _flatten(tree)
+        # np.load returns ml_dtypes (bf16) arrays as raw void — store them
+        # as uint16 views and reconstruct from the manifest dtype on load.
+        host = {}
+        for k, v in flat.items():
+            a = np.asarray(v)
+            host[k] = a.view(np.uint16) if a.dtype.name == "bfloat16" else a
+        manifest = {
+            "step": step,
+            "leaves": {
+                k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                for k, v in host.items()
+            },
+            "time": time.time(),
+        }
+        final = self.dir / f"step_{step:09d}"
+
+        def write():
+            tmp = self.dir / f".tmp_step_{step:09d}"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            np.savez(tmp / "arrays.npz", **{f"{k}@shard0": v for k, v in host.items()})
+            (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+            if final.exists():
+                shutil.rmtree(final)
+            tmp.rename(final)          # atomic publish
+            self._gc()
+
+        if self.async_write:
+            self.wait()
+            self._pending = threading.Thread(target=write, daemon=True)
+            self._pending.start()
+        else:
+            write()
+        return final
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(self.dir / f"step_{s:09d}", ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for p in self.dir.glob("step_*"):
+            m = re.fullmatch(r"step_(\d+)", p.name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, target_like, step: Optional[int] = None,
+                shardings=None):
+        """Restore into the structure of ``target_like``. ``shardings``
+        (same pytree structure, of NamedSharding) reshards onto a possibly
+        different mesh — the elastic restart path."""
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = self.dir / f"step_{step:09d}"
+        data = np.load(d / "arrays.npz")
+        flat_t = _flatten(target_like)
+        flat_s = _flatten(shardings) if shardings is not None else {}
+        import ml_dtypes
+
+        out = {}
+        for key, like in flat_t.items():
+            arr = data[f"{key}@shard0"]
+            want = getattr(like, "dtype", None)
+            if want is not None and str(want) == "bfloat16":
+                arr = arr.view(ml_dtypes.bfloat16) if arr.dtype == np.uint16 else arr
+            elif want is not None and arr.dtype.kind != "V":
+                arr = arr.astype(want)
+            if key in flat_s:
+                out[key] = jax.device_put(arr, flat_s[key])
+            else:
+                out[key] = jax.numpy.asarray(arr)
+        # unflatten back into the target structure
+        leaves_paths = jax.tree_util.tree_flatten_with_path(target_like)
+        treedef = jax.tree_util.tree_structure(target_like)
+        keys = [
+            "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            for path, _ in leaves_paths[0]
+        ]
+        return jax.tree_util.tree_unflatten(treedef, [out[k] for k in keys])

@@ -1,0 +1,25 @@
+"""HARMONY core: the paper's contribution.
+
+Public API:
+
+* index: :func:`build_ivf`, :func:`preassign`, :func:`assign_queries`
+* planning: :func:`plan_search` (cost model 4.2), :class:`PartitionPlan`
+* search: :func:`harmony_search` (staged engine), :func:`search_oracle`
+  (single-node baseline/ground truth), :mod:`repro.core.pipeline`
+  (TPU-target SPMD ring engine)
+"""
+
+from repro.core.index import IVFIndex, ShardedCorpus, build_ivf, preassign, assign_queries, dim_block_bounds
+from repro.core.types import PartitionPlan, SearchResult
+from repro.core.planner import plan_search, factorizations, PlanDecision
+from repro.core.cost_model import HardwareModel, WorkloadStats, plan_cost, TPU_V5E
+from repro.core.search import harmony_search, search_oracle
+from repro.core.pruning import TopKHeap, prewarm_tau, partial_scores_block
+
+__all__ = [
+    "IVFIndex", "ShardedCorpus", "build_ivf", "preassign", "assign_queries",
+    "dim_block_bounds", "PartitionPlan", "SearchResult",
+    "plan_search", "factorizations", "PlanDecision", "HardwareModel",
+    "WorkloadStats", "plan_cost", "TPU_V5E", "harmony_search",
+    "search_oracle", "TopKHeap", "prewarm_tau", "partial_scores_block",
+]

@@ -1,0 +1,196 @@
+"""IVF index build and multi-granularity (vector × dimension) layout.
+
+Build stages mirror the paper's Fig. 10 breakdown:
+
+* **Train** — k-means over the corpus (``repro.core.kmeans``).
+* **Add** — assign every base vector to its nearest centroid and pack the
+  corpus cluster-contiguously (so probed clusters are contiguous row
+  ranges — this is what makes tile-level pruning effective on TPU).
+* **Pre-assign** — lay the packed corpus out on the ``v_shards × d_blocks``
+  machine grid of a :class:`PartitionPlan`: rows (grouped by cluster) to
+  vector shards, dimension blocks to model ranks, and precompute per-block
+  squared norms used by the monotone partial-distance recursion.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.config import HarmonyConfig
+from repro.core.kmeans import kmeans_fit_np
+from repro.core.types import PartitionPlan
+
+
+@dataclass
+class IVFIndex:
+    """Single-logical-copy IVF index (packed, cluster-sorted)."""
+
+    cfg: HarmonyConfig
+    centers: np.ndarray          # [nlist, D]
+    x: np.ndarray                # [NB, D] packed cluster-contiguously
+    ids: np.ndarray              # [NB] original vector ids of packed rows
+    cluster_of: np.ndarray       # [NB] cluster id per packed row (non-decreasing)
+    offsets: np.ndarray          # [nlist + 1] row offsets per cluster
+    build_times: Dict[str, float]
+
+    @property
+    def nb(self) -> int:
+        return int(self.x.shape[0])
+
+    @property
+    def dim(self) -> int:
+        return int(self.x.shape[1])
+
+    @property
+    def nlist(self) -> int:
+        return int(self.centers.shape[0])
+
+    @property
+    def sizes(self) -> np.ndarray:
+        return self.offsets[1:] - self.offsets[:-1]
+
+    def cluster_rows(self, c: int) -> Tuple[int, int]:
+        return int(self.offsets[c]), int(self.offsets[c + 1])
+
+    def memory_bytes(self) -> int:
+        return sum(a.nbytes for a in (self.centers, self.x, self.ids, self.offsets))
+
+
+def build_ivf(x: np.ndarray, cfg: HarmonyConfig) -> IVFIndex:
+    """Train + Add stages."""
+    t0 = time.perf_counter()
+    centers, assign = kmeans_fit_np(
+        x, cfg.nlist, iters=cfg.kmeans_iters, seed=cfg.kmeans_seed
+    )
+    t_train = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    order = np.argsort(assign, kind="stable")
+    x_sorted = np.ascontiguousarray(x[order], dtype=np.float32)
+    cluster_sorted = assign[order]
+    counts = np.bincount(assign, minlength=cfg.nlist)
+    offsets = np.zeros((cfg.nlist + 1,), np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    t_add = time.perf_counter() - t0
+
+    return IVFIndex(
+        cfg=cfg,
+        centers=centers.astype(np.float32),
+        x=x_sorted,
+        ids=order.astype(np.int64),
+        cluster_of=cluster_sorted.astype(np.int32),
+        offsets=offsets,
+        build_times={"train": t_train, "add": t_add},
+    )
+
+
+def assign_queries(index: IVFIndex, q: np.ndarray, nprobe: Optional[int] = None) -> np.ndarray:
+    """Nearest-``nprobe`` centroids per query (the client-side purple table
+    of Fig. 4). Returns [NQ, nprobe] int32 cluster ids."""
+    nprobe = nprobe or index.cfg.nprobe
+    qn = np.sum(q * q, axis=1)[:, None]
+    cn = np.sum(index.centers * index.centers, axis=1)[None, :]
+    d = qn - 2.0 * (q @ index.centers.T) + cn
+    return np.argsort(d, axis=1)[:, :nprobe].astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Pre-assign: sharded layout on the V × B grid
+# ---------------------------------------------------------------------------
+
+
+def dim_block_bounds(dim: int, d_blocks: int) -> List[Tuple[int, int]]:
+    """Contiguous dimension blocks; D is padded implicitly (zero dims do
+    not change L2/IP). Block b covers [bounds[b][0], bounds[b][1])."""
+    per = -(-dim // d_blocks)  # ceil
+    return [(b * per, min(dim, (b + 1) * per)) for b in range(d_blocks)]
+
+
+@dataclass
+class ShardedCorpus:
+    """The Pre-assign product: device-grid-resident corpus.
+
+    ``x_shard[v]`` holds shard v's rows padded to ``cap`` with zeros and
+    ``valid[v]`` marking real rows. ``xnorm2_blk[v, b]`` is the per-row
+    squared norm restricted to dimension block b — the term that makes each
+    stage's partial distance self-contained
+    (``d_b² = ‖p‖²_b − 2·p·q|_b + ‖q‖²_b``).
+    """
+
+    plan: PartitionPlan
+    x_shard: np.ndarray          # [V, cap, D] float32
+    ids_shard: np.ndarray        # [V, cap] int64, -1 pad
+    cluster_shard: np.ndarray    # [V, cap] int32, -1 pad
+    valid: np.ndarray            # [V, cap] bool
+    xnorm2_blk: np.ndarray       # [V, B, cap] float32
+    # host-side lookup: for each cluster, its (shard, start, stop) rows
+    cluster_slices: Dict[int, Tuple[int, int, int]]
+    preassign_time: float
+
+    @property
+    def cap(self) -> int:
+        return int(self.x_shard.shape[1])
+
+    def memory_bytes(self) -> int:
+        return sum(
+            a.nbytes
+            for a in (
+                self.x_shard,
+                self.ids_shard,
+                self.cluster_shard,
+                self.valid,
+                self.xnorm2_blk,
+            )
+        )
+
+
+def preassign(index: IVFIndex, plan: PartitionPlan, pad_to: int = 64) -> ShardedCorpus:
+    """Distribute clusters to vector shards per ``plan.cluster_to_shard``
+    and precompute per-dimension-block norms."""
+    t0 = time.perf_counter()
+    V, B, D = plan.v_shards, plan.d_blocks, index.dim
+    shard_rows: List[List[int]] = [[] for _ in range(V)]
+    cluster_slices: Dict[int, Tuple[int, int, int]] = {}
+    for c in range(index.nlist):
+        v = int(plan.cluster_to_shard[c])
+        lo, hi = index.cluster_rows(c)
+        start = len(shard_rows[v])
+        shard_rows[v].extend(range(lo, hi))
+        cluster_slices[c] = (v, start, start + (hi - lo))
+
+    cap = max(1, max(len(r) for r in shard_rows))
+    cap = -(-cap // pad_to) * pad_to  # round up for tile alignment
+
+    x_shard = np.zeros((V, cap, D), np.float32)
+    ids_shard = np.full((V, cap), -1, np.int64)
+    cluster_shard = np.full((V, cap), -1, np.int32)
+    valid = np.zeros((V, cap), bool)
+    for v in range(V):
+        rows = np.asarray(shard_rows[v], np.int64)
+        n = len(rows)
+        if n:
+            x_shard[v, :n] = index.x[rows]
+            ids_shard[v, :n] = index.ids[rows]
+            cluster_shard[v, :n] = index.cluster_of[rows]
+            valid[v, :n] = True
+
+    bounds = dim_block_bounds(D, B)
+    xnorm2_blk = np.zeros((V, B, cap), np.float32)
+    for b, (lo, hi) in enumerate(bounds):
+        seg = x_shard[:, :, lo:hi]
+        xnorm2_blk[:, b] = np.sum(seg * seg, axis=2)
+
+    return ShardedCorpus(
+        plan=plan,
+        x_shard=x_shard,
+        ids_shard=ids_shard,
+        cluster_shard=cluster_shard,
+        valid=valid,
+        xnorm2_blk=xnorm2_blk,
+        cluster_slices=cluster_slices,
+        preassign_time=time.perf_counter() - t0,
+    )

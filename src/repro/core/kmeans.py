@@ -1,0 +1,78 @@
+"""Pure-JAX Lloyd k-means for IVF index training.
+
+Matches Faiss's `train` stage (paper Fig. 10 "Train"): k-means over a
+training sample, k-means++-style seeding (greedy farthest-point on a
+sample for determinism), fixed iteration count, empty-cluster re-seeding.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _pairwise_sq_l2(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """[n, d] x [m, d] -> [n, m] squared L2 distances."""
+    an = jnp.sum(a * a, axis=1)[:, None]
+    bn = jnp.sum(b * b, axis=1)[None, :]
+    return an - 2.0 * (a @ b.T) + bn
+
+
+def _init_centers(x: jnp.ndarray, k: int, key: jax.Array) -> jnp.ndarray:
+    """Greedy farthest-point init on a subsample (deterministic given key)."""
+    n = x.shape[0]
+    idx0 = jax.random.randint(key, (), 0, n)
+    first = x[idx0]
+
+    def body(carry, _):
+        centers, count = carry
+        d = _pairwise_sq_l2(x, centers)          # [n, k]
+        # only the first `count` centers are valid
+        valid = jnp.arange(centers.shape[0]) < count
+        d = jnp.where(valid[None, :], d, jnp.inf)
+        mind = jnp.min(d, axis=1)                # [n]
+        nxt = jnp.argmax(mind)
+        centers = centers.at[count].set(x[nxt])
+        return (centers, count + 1), None
+
+    centers0 = jnp.zeros((k, x.shape[1]), x.dtype).at[0].set(first)
+    (centers, _), _ = jax.lax.scan(body, (centers0, 1), None, length=k - 1)
+    return centers
+
+
+@partial(jax.jit, static_argnames=("k", "iters"))
+def kmeans_fit(
+    x: jnp.ndarray, k: int, iters: int = 12, seed: int = 0
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (centers [k, d], assignment [n])."""
+    key = jax.random.PRNGKey(seed)
+    # subsample for init to bound the O(n·k) greedy pass
+    n = x.shape[0]
+    sub = min(n, 4096)
+    perm = jax.random.permutation(key, n)[:sub]
+    centers = _init_centers(x[perm], k, key)
+
+    def step(centers, _):
+        d = _pairwise_sq_l2(x, centers)           # [n, k]
+        assign = jnp.argmin(d, axis=1)            # [n]
+        one_hot = jax.nn.one_hot(assign, k, dtype=x.dtype)  # [n, k]
+        counts = jnp.sum(one_hot, axis=0)         # [k]
+        sums = one_hot.T @ x                      # [k, d]
+        new = sums / jnp.maximum(counts, 1.0)[:, None]
+        # re-seed empties at the farthest point from its center
+        far = jnp.argmax(jnp.min(d, axis=1))
+        new = jnp.where((counts > 0)[:, None], new, x[far][None, :])
+        return new, None
+
+    centers, _ = jax.lax.scan(step, centers, None, length=iters)
+    assign = jnp.argmin(_pairwise_sq_l2(x, centers), axis=1)
+    return centers, assign
+
+
+def kmeans_fit_np(x: np.ndarray, k: int, iters: int = 12, seed: int = 0):
+    c, a = kmeans_fit(jnp.asarray(x, jnp.float32), k, iters, seed)
+    return np.asarray(c), np.asarray(a)

@@ -1,0 +1,56 @@
+"""Load-aware routing: cluster → vector-shard assignment (§4.2.2).
+
+Two assignment policies:
+
+* ``round_robin`` — the naive baseline (cluster id mod V). This is what the
+  Fig. 9 "w/o balanced load" ablation uses.
+* ``load_aware`` — greedy LPT (longest-processing-time) bin packing on
+  *expected pair load* (cluster size × query hit rate from a workload
+  sample). This is HARMONY's load-aware distribution.
+
+Also provides ring start-offset scheduling: staggering which dimension
+block a shard's visit processes first, so late (well-pruned) pipeline
+slots rotate across the machine grid (Fig. 5(b)'s deferred-block trick).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+def round_robin_assignment(nlist: int, v_shards: int) -> np.ndarray:
+    return (np.arange(nlist) % v_shards).astype(np.int32)
+
+
+def load_aware_assignment(
+    cluster_sizes: np.ndarray,
+    cluster_hits: Optional[np.ndarray],
+    v_shards: int,
+) -> np.ndarray:
+    """Greedy LPT on expected load = size × hits (hits default 1)."""
+    nlist = len(cluster_sizes)
+    hits = np.ones(nlist) if cluster_hits is None else np.asarray(cluster_hits, float)
+    load = cluster_sizes.astype(float) * np.maximum(hits, 1e-9)
+    order = np.argsort(-load, kind="stable")
+    shard_load = np.zeros(v_shards)
+    out = np.zeros(nlist, np.int32)
+    for c in order:
+        v = int(np.argmin(shard_load))
+        out[c] = v
+        shard_load[v] += load[c]
+    return out
+
+
+def ring_offsets(v_shards: int, d_blocks: int, stagger: bool = True) -> np.ndarray:
+    """Start offsets per shard for the dimension ring. Staggered offsets
+    spread the expensive slot-0 work across dimension blocks."""
+    if not stagger or d_blocks <= 1:
+        return np.zeros(v_shards, np.int32)
+    return (np.arange(v_shards) % d_blocks).astype(np.int32)
+
+
+def estimate_cluster_hits(probes: np.ndarray, nlist: int) -> np.ndarray:
+    """Per-cluster query hit counts from a probe sample [NQ, P]."""
+    return np.bincount(probes.reshape(-1), minlength=nlist).astype(np.float64)

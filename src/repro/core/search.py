@@ -1,0 +1,366 @@
+"""End-to-end search paths.
+
+Two engines, both exact w.r.t. the probed candidate set:
+
+* :func:`search_oracle` — single-node Faiss-like IVF scan (the paper's
+  baseline and our ground truth for all exactness tests).
+* :func:`harmony_search` — the paper's Algorithm 1 as a host-scheduled,
+  stage-synchronous engine with **dynamic candidate compaction** between
+  dimension stages. This is the CPU-measured reproduction path; the
+  TPU-target SPMD path (masked accumulators + Pallas tile-skip) lives in
+  ``repro.core.pipeline`` and is validated against the same oracle.
+
+Schedule realized here (per DESIGN.md):
+
+* vector-level pipeline = queries visit their probed vector shards in ring
+  order, one shard per stage; top-K heaps tighten τ between stages
+  (Fig. 5(a): stage A's results prune stage B's work).
+* dimension-level pipeline = within a visit, dimension blocks are processed
+  in a per-shard rotated order (``plan.ring_offsets``), partial sums are
+  accumulated, and pairs whose running S² exceeds τ are pruned; rows dead
+  for every query are compacted away (Fig. 5(b)).
+"""
+
+from __future__ import annotations
+
+import time
+from collections import defaultdict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.config import HarmonyConfig
+from repro.core.index import IVFIndex, ShardedCorpus, assign_queries, dim_block_bounds
+from repro.core.pruning import TopKHeap, partial_scores_block, prewarm_tau
+from repro.core.types import PartitionPlan, SearchResult
+
+
+# ---------------------------------------------------------------------------
+# Oracle (single-node Faiss-like)
+# ---------------------------------------------------------------------------
+
+
+def search_oracle(
+    index: IVFIndex,
+    q: np.ndarray,
+    k: Optional[int] = None,
+    nprobe: Optional[int] = None,
+    chunk: int = 128,
+) -> SearchResult:
+    """Exact top-k over probed clusters (masked full scan, chunked)."""
+    cfg = index.cfg
+    k = k or cfg.topk
+    probes = assign_queries(index, q, nprobe)
+    nq = q.shape[0]
+    out_s = np.full((nq, k), np.inf, np.float32)
+    out_i = np.full((nq, k), -1, np.int64)
+    t0 = time.perf_counter()
+    for lo in range(0, nq, chunk):
+        hi = min(nq, lo + chunk)
+        member = np.zeros((hi - lo, index.nlist), bool)
+        member[np.arange(hi - lo)[:, None], probes[lo:hi]] = True
+        mask = member[:, index.cluster_of]                     # [m, NB]
+        if cfg.metric == "l2":
+            d = (
+                np.sum(q[lo:hi] * q[lo:hi], axis=1)[:, None]
+                - 2.0 * (q[lo:hi] @ index.x.T)
+                + np.sum(index.x * index.x, axis=1)[None, :]
+            )
+        else:
+            d = -(q[lo:hi] @ index.x.T)
+        d = np.where(mask, d, np.inf).astype(np.float32)
+        part = np.argpartition(d, kth=k - 1, axis=1)[:, :k]
+        sc = np.take_along_axis(d, part, axis=1)
+        order = np.argsort(sc, axis=1, kind="stable")
+        out_s[lo:hi] = np.take_along_axis(sc, order, axis=1)
+        out_i[lo:hi] = index.ids[np.take_along_axis(part, order, axis=1)]
+        out_i[lo:hi][out_s[lo:hi] == np.inf] = -1
+    dt = time.perf_counter() - t0
+    return SearchResult(ids=out_i, scores=out_s, stats={"wall_s": dt})
+
+
+# ---------------------------------------------------------------------------
+# HARMONY staged engine
+# ---------------------------------------------------------------------------
+
+
+class SearchStats:
+    """Structural + timing counters for benchmarks and the roofline model."""
+
+    def __init__(self, d_blocks: int, v_shards: int):
+        self.slice_total = np.zeros(d_blocks, np.int64)   # pairs reaching slot j
+        self.slice_alive = np.zeros(d_blocks, np.int64)   # pairs computed at slot j
+        self.pair_flops = 0                                # pair-level (pruned) flops
+        self.row_flops = 0                                 # compacted-matmul flops
+        self.dense_flops = 0                               # no-pruning flops
+        self.shard_pair_flops = np.zeros(v_shards, np.int64)
+        self.comm_bytes = defaultdict(int)
+        self.visits = 0
+        self.stages = 0
+        self.wall_comp_s = 0.0
+        self.wall_other_s = 0.0
+        # per-(stage, machine) pair-flops — machine (v, b) of the V×B grid
+        # owns dimension block b of shard v; the cluster's critical path is
+        # max-over-machines per stage (dimension blocks pipeline across
+        # machines in steady state, per Fig. 5)
+        self.machine_flops = defaultdict(float)   # (stage, v*B+b) → flops
+        self.d_blocks = d_blocks
+        self.max_pair_buffer = 0         # peak acc elements in any visit
+
+    def parallel_wall_s(self, flops_rate: float = 5e9,
+                        net_bw: float = 12.5e9, latency: float = 15e-6) -> float:
+        """Critical-path wall time of the modeled cluster: per stage the
+        busiest machine's pair-flops / rate, plus the comm model. The
+        benchmarks calibrate ``flops_rate`` from a measured single-node
+        run so modes are compared on one consistent hardware model."""
+        per_stage: Dict[int, float] = defaultdict(float)
+        agg: Dict[int, Dict[int, float]] = defaultdict(lambda: defaultdict(float))
+        for (stage, machine), fl in self.machine_flops.items():
+            agg[stage][machine] += fl
+        comp = sum(max(m.values()) for m in agg.values()) / flops_rate if agg else 0.0
+        comm = sum(self.comm_bytes.values()) / net_bw + latency * max(self.visits, 1)
+        return comp + comm
+
+    def as_dict(self) -> Dict:
+        tot = np.maximum(self.slice_total, 1)
+        return {
+            "slice_pruned_ratio": (1.0 - self.slice_alive / tot).tolist(),
+            "pair_flops": int(self.pair_flops),
+            "row_flops": int(self.row_flops),
+            "dense_flops": int(self.dense_flops),
+            "shard_pair_flops": self.shard_pair_flops.tolist(),
+            "comm_bytes": dict(self.comm_bytes),
+            "visits": self.visits,
+            "stages": self.stages,
+            "wall_comp_s": self.wall_comp_s,
+            "wall_other_s": self.wall_other_s,
+            "parallel_wall_s": self.parallel_wall_s(),
+            "machine_flops": {f"{k[0]}:{k[1]}": float(v)
+                              for k, v in self.machine_flops.items()},
+            "max_pair_buffer": int(self.max_pair_buffer),
+        }
+
+
+def _visit_schedule(
+    probes: np.ndarray, plan: PartitionPlan
+) -> List[List[Tuple[int, np.ndarray]]]:
+    """Ring visit order: query i's probed shards, starting from the shard of
+    its top-1 probe and walking the ring. Returns per-stage lists of
+    (shard, query_indices)."""
+    nq = probes.shape[0]
+    V = plan.v_shards
+    shard_of = plan.cluster_to_shard[probes]               # [NQ, P]
+    per_stage: List[Dict[int, List[int]]] = []
+    max_stages = 0
+    visit_lists: List[np.ndarray] = []
+    for i in range(nq):
+        shards = shard_of[i]
+        start = shards[0]
+        uniq = np.unique(shards)
+        # ring order from start
+        order = np.argsort((uniq - start) % V, kind="stable")
+        visit_lists.append(uniq[order])
+        max_stages = max(max_stages, len(uniq))
+    schedule: List[List[Tuple[int, np.ndarray]]] = []
+    for s in range(max_stages):
+        by_shard: Dict[int, List[int]] = defaultdict(list)
+        for i, visits in enumerate(visit_lists):
+            if s < len(visits):
+                by_shard[int(visits[s])].append(i)
+        schedule.append(
+            [(v, np.asarray(qs, np.int64)) for v, qs in sorted(by_shard.items())]
+        )
+    return schedule
+
+
+def harmony_search(
+    index: IVFIndex,
+    corpus: ShardedCorpus,
+    q: np.ndarray,
+    k: Optional[int] = None,
+    nprobe: Optional[int] = None,
+    enable_pruning: Optional[bool] = None,
+    pipeline: bool = True,
+    collect_stats: bool = True,
+) -> SearchResult:
+    """Distributed HARMONY search (host-scheduled reproduction engine)."""
+    cfg = index.cfg
+    plan = corpus.plan
+    k = k or cfg.topk
+    metric = cfg.metric
+    if enable_pruning is None:
+        enable_pruning = cfg.enable_pruning
+    nq, D = q.shape
+    V, B = plan.v_shards, plan.d_blocks
+    bounds = dim_block_bounds(D, B)
+    stats = SearchStats(B, V)
+
+    t_host0 = time.perf_counter()
+    probes = assign_queries(index, q, nprobe)
+    tau0 = (
+        prewarm_tau(index, q, probes, k, cfg.prewarm_samples, metric)
+        if enable_pruning
+        else np.full((nq,), np.inf, np.float32)
+    )
+    heap = TopKHeap.empty(nq, k)
+    schedule = (
+        _visit_schedule(probes, plan)
+        if pipeline
+        else [_all_visits(probes, plan)]
+    )
+    stats.wall_other_s += time.perf_counter() - t_host0
+
+    for stage in schedule:
+        stats.stages += 1
+        pending: List[Tuple[np.ndarray, TopKHeap]] = []
+        tau_stage = np.minimum(tau0, heap.tau) if enable_pruning else tau0
+        for v, qidx in stage:
+            local = _process_visit(
+                corpus=corpus,
+                probes=probes,
+                q=q,
+                qidx=qidx,
+                v=v,
+                plan=plan,
+                bounds=bounds,
+                tau_in=tau_stage[qidx],
+                k=k,
+                metric=metric,
+                enable_pruning=enable_pruning,
+                stats=stats,
+                stage_idx=stats.stages - 1,
+            )
+            if local is not None:
+                pending.append((qidx, local))
+                stats.comm_bytes["result_return"] += len(qidx) * k * 12
+        # stage barrier: merges become visible to the next stage
+        t0 = time.perf_counter()
+        for qidx, local in pending:
+            heap.merge_rows(qidx, local.scores, local.ids)
+        stats.wall_other_s += time.perf_counter() - t0
+
+    res = SearchResult(ids=heap.ids, scores=heap.scores, stats=stats.as_dict())
+    return res
+
+
+def _process_visit(
+    corpus: ShardedCorpus,
+    probes: np.ndarray,
+    q: np.ndarray,
+    qidx: np.ndarray,
+    v: int,
+    plan: PartitionPlan,
+    bounds: Sequence[Tuple[int, int]],
+    tau_in: np.ndarray,
+    k: int,
+    metric: str,
+    enable_pruning: bool,
+    stats: "SearchStats",
+    stage_idx: int,
+) -> Optional[TopKHeap]:
+    """One (shard, query-group) visit.
+
+    Vector-level pipeline (Alg. 1 VectorPipeline): probed clusters on this
+    shard are scanned sequentially in probe-rank order; after each cluster
+    batch the *local* heap refines τ, so later batches prune harder.
+    Dimension-level pipeline (Alg. 1 DimensionPipeline): within a batch,
+    dimension blocks are processed in the shard's rotated ring order with
+    monotone partial-sum pruning and dead-row compaction between slices.
+    """
+    V, B = plan.v_shards, plan.d_blocks
+    D = q.shape[1]
+    t0 = time.perf_counter()
+    cl = probes[qidx]                                      # [m, P]
+    on_shard = plan.cluster_to_shard[cl] == v              # [m, P]
+    if not on_shard.any():
+        stats.wall_other_s += time.perf_counter() - t0
+        return None
+    # probe-rank-ordered cluster scan: rank r = best rank among group queries
+    best_rank: Dict[int, int] = {}
+    m, P = cl.shape
+    for r in range(P):
+        for c in cl[:, r][on_shard[:, r]]:
+            best_rank.setdefault(int(c), r)
+    ordered = sorted(best_rank, key=lambda c: (best_rank[c], c))
+    stats.visits += 1
+    local = TopKHeap.empty(len(qidx), k)
+    tau_local = tau_in.astype(np.float32).copy()
+    qg = q[qidx]
+    stats.comm_bytes["query_dispatch"] += qg.size * 4
+    stats.wall_other_s += time.perf_counter() - t0
+
+    # staggered ring: base rotation by shard and stage; on top of it, the
+    # queries of a visit are split into B sub-groups whose ring starts are
+    # rotated per group (Fig. 5(b): Q1 starts D1, Q2 starts D2, ...) — this
+    # is what spreads the unprunable first-slot work across all machines.
+    offset = (int(plan.ring_offsets[v % V]) + stage_idx) % B
+
+    for c in ordered:
+        cv, lo_r, hi_r = corpus.cluster_slices[c]
+        assert cv == v
+        nrows = hi_r - lo_r
+        if nrows == 0:
+            continue
+        sub_all = np.nonzero((cl == c).any(axis=1) & on_shard.any(axis=1))[0]
+        if sub_all.size == 0:
+            continue
+        for g in range(min(B, len(sub_all))):
+            sub = sub_all[g::B]
+            if sub.size == 0:
+                continue
+            order = np.roll(np.arange(B), -((offset + g) % B))
+            t0 = time.perf_counter()
+            ms = len(sub)
+            acc = np.zeros((ms, nrows), np.float32)
+            live_rows = np.arange(lo_r, hi_r)
+            tau_g = tau_local[sub]
+            stats.slice_total += ms * nrows   # every pair reaches every slot
+            for pos, b in enumerate(order):
+                blo, bhi = bounds[b]
+                alive_pair = np.isfinite(acc)
+                n_alive = int(alive_pair.sum())
+                stats.slice_alive[pos] += n_alive
+                keep = alive_pair.any(axis=0)
+                if not keep.all():
+                    acc = acc[:, keep]
+                    live_rows = live_rows[keep]
+                    alive_pair = alive_pair[:, keep]
+                if acc.shape[1] == 0:
+                    break
+                xr = corpus.x_shard[v, live_rows, blo:bhi]
+                xn = corpus.xnorm2_blk[v, b, live_rows]
+                part = partial_scores_block(xr, qg[sub][:, blo:bhi], xn, metric)
+                acc = np.where(alive_pair, acc + part, np.inf)
+                nflop = 2 * n_alive * (bhi - blo)
+                stats.pair_flops += nflop
+                stats.row_flops += 2 * acc.shape[1] * ms * (bhi - blo)
+                stats.shard_pair_flops[v] += nflop
+                stats.machine_flops[(stage_idx, v * B + int(b))] += nflop
+                if enable_pruning and pos < B - 1:
+                    acc = np.where(acc > tau_g[:, None], np.inf, acc)
+                    stats.comm_bytes["partial_results"] += int(np.isfinite(acc).sum()) * 4
+                stats.comm_bytes["threshold_sync"] += ms * 4
+            stats.dense_flops += 2 * nrows * ms * D
+            stats.wall_comp_s += time.perf_counter() - t0
+            stats.max_pair_buffer = max(stats.max_pair_buffer, ms * nrows)
+
+            t0 = time.perf_counter()
+            if acc.shape[1]:
+                ids = corpus.ids_shard[v, live_rows]
+                local.merge_rows(sub, acc, np.broadcast_to(ids, acc.shape))
+                if enable_pruning:
+                    tau_local[sub] = np.minimum(tau_local[sub], local.tau[sub])
+            stats.wall_other_s += time.perf_counter() - t0
+    return local
+
+
+def _all_visits(probes: np.ndarray, plan: PartitionPlan):
+    """Non-pipelined dispatch: every (shard, probing queries) visit in one
+    stage — the 'synchronous execution' ablation (Fig. 9)."""
+    shard_of = plan.cluster_to_shard[probes]
+    out = []
+    for v in range(plan.v_shards):
+        qs = np.nonzero((shard_of == v).any(axis=1))[0]
+        if qs.size:
+            out.append((v, qs.astype(np.int64)))
+    return out

@@ -1,0 +1,44 @@
+"""Core datatypes: partition plans, routing tables, search results."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class PartitionPlan:
+    """A HARMONY partition plan π.
+
+    The machine grid is ``v_shards × d_blocks`` (vector-based × dimension-
+    based). ``cluster_to_shard[c]`` maps IVF cluster c to a vector shard —
+    the load-aware part of the plan. ``ring_offset[g]`` staggers the
+    dimension-ring start of query group g (the paper's "defer hot blocks to
+    late stages" scheduling).
+    """
+
+    v_shards: int
+    d_blocks: int
+    cluster_to_shard: np.ndarray            # [nlist] int32
+    ring_offsets: Optional[np.ndarray] = None   # [v_shards] int32, default zeros
+    mode: str = "harmony"                   # harmony | vector | dimension
+
+    def __post_init__(self):
+        assert self.cluster_to_shard.ndim == 1
+        if self.ring_offsets is None:
+            object.__setattr__(
+                self, "ring_offsets", np.zeros((self.v_shards,), np.int32)
+            )
+
+    @property
+    def n_nodes(self) -> int:
+        return self.v_shards * self.d_blocks
+
+
+@dataclass
+class SearchResult:
+    ids: np.ndarray                         # [NQ, K] int64 (original vector ids, -1 pad)
+    scores: np.ndarray                      # [NQ, K] float32 (ascending; sq-L2 or -IP)
+    stats: dict = field(default_factory=dict)

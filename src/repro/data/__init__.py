@@ -1,0 +1,17 @@
+from repro.data.vectors import (
+    VectorDataset,
+    make_dataset,
+    make_queries,
+    brute_force_topk,
+    recall_at_k,
+)
+from repro.data.tokens import TokenPipeline
+
+__all__ = [
+    "VectorDataset",
+    "make_dataset",
+    "make_queries",
+    "brute_force_topk",
+    "recall_at_k",
+    "TokenPipeline",
+]

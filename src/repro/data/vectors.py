@@ -1,0 +1,151 @@
+"""Synthetic vector corpora for ANNS experiments.
+
+The container is offline, so the paper's open datasets (Sift1M, Msong, …)
+are replaced by Gaussian-mixture corpora with the same controllable
+properties the paper varies: size NB, dimensionality D, cluster count, and
+*query skew* (fraction of queries hitting a small set of hot clusters —
+the paper's Fig. 7 manipulates exactly this).
+
+Everything is deterministic given a seed.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+
+@dataclass
+class VectorDataset:
+    """A corpus plus generation metadata."""
+
+    x: np.ndarray                  # [NB, D] float32 base vectors
+    centers: np.ndarray            # [C, D] mixture centers used for generation
+    labels: np.ndarray             # [NB] generating component of each vector
+    seed: int
+
+    @property
+    def nb(self) -> int:
+        return int(self.x.shape[0])
+
+    @property
+    def dim(self) -> int:
+        return int(self.x.shape[1])
+
+
+def make_dataset(
+    nb: int = 20_000,
+    dim: int = 64,
+    n_components: int = 32,
+    spread: float = 0.25,
+    seed: int = 0,
+    component_weights: Optional[np.ndarray] = None,
+) -> VectorDataset:
+    """Gaussian-mixture corpus. ``spread`` controls intra-cluster stddev
+    relative to unit-norm centers (small spread → easy pruning, like Star;
+    large spread → hard pruning, like Glove — paper Table 3's variance)."""
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(n_components, dim)).astype(np.float32)
+    centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+    if component_weights is None:
+        component_weights = np.full((n_components,), 1.0 / n_components)
+    component_weights = np.asarray(component_weights, dtype=np.float64)
+    component_weights = component_weights / component_weights.sum()
+    labels = rng.choice(n_components, size=nb, p=component_weights)
+    # Per-dim noise scaled by 1/sqrt(dim): total noise norm ≈ `spread`
+    # regardless of D, so cluster contrast (inter-center distance ≈ √2 vs
+    # intra-cluster spread) matches real embedding corpora at any dim.
+    # Per-point lognormal radius gives the smooth distance continuum real
+    # corpora show (varying local density) — without it distances are
+    # bi-level (χ² concentration) and pruning curves look nothing like the
+    # paper's Table 3.
+    radius = spread * np.exp(0.5 * rng.normal(size=(nb, 1)))
+    noise = (radius / np.sqrt(dim)) * rng.normal(size=(nb, dim))
+    x = centers[labels] + noise.astype(np.float32)
+    return VectorDataset(x=x.astype(np.float32), centers=centers, labels=labels, seed=seed)
+
+
+def make_queries(
+    ds: VectorDataset,
+    nq: int = 256,
+    skew: float = 0.0,
+    hot_fraction: float = 0.125,
+    noise: float = 0.25,
+    seed: int = 1,
+    tail_fraction: float = 0.0,
+) -> np.ndarray:
+    """Queries drawn near corpus components.
+
+    ``skew`` ∈ [0,1]: probability mass routed to the ``hot_fraction`` hottest
+    components. skew=0 → uniform workload; skew→1 → all queries hit a few
+    components (paper Fig. 7's imbalanced loads).
+    """
+    rng = np.random.default_rng(seed)
+    c = ds.centers.shape[0]
+    n_hot = max(1, int(round(hot_fraction * c)))
+    p = np.full((c,), (1.0 - skew) / c, dtype=np.float64)
+    p[:n_hot] += skew / n_hot
+    p /= p.sum()
+    comp = rng.choice(c, size=nq, p=p)
+    # Queries are perturbed *corpus points* of the chosen component (the
+    # standard held-out-sample methodology of Sift1M etc.), not component
+    # centers — centers sit at the densest spot and make pruning look
+    # artificially weak.
+    # ``tail_fraction``>0 draws sources from the furthest-from-center
+    # fraction of each component — boundary queries whose true neighbors
+    # straddle several IVF lists, giving the gradual recall-vs-nprobe
+    # curves of real corpora.
+    radius = np.linalg.norm(ds.x - ds.centers[ds.labels], axis=1)
+    q = np.empty((nq, ds.dim), np.float32)
+    for i, ci in enumerate(comp):
+        rows = np.nonzero(ds.labels == ci)[0]
+        if len(rows) == 0:
+            rows = np.arange(ds.nb)
+        if tail_fraction > 0:
+            order = rows[np.argsort(radius[rows])]
+            n_tail = max(1, int(tail_fraction * len(rows)))
+            rows = order[-n_tail:]
+        src = rows[rng.integers(len(rows))]
+        q[i] = ds.x[src]
+    jitter = (noise / np.sqrt(ds.dim)) * rng.normal(size=(nq, ds.dim))
+    q = q + jitter.astype(np.float32)
+    return q.astype(np.float32)
+
+
+def brute_force_topk(
+    x: np.ndarray, q: np.ndarray, k: int, metric: str = "l2"
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact top-k ground truth. Returns (indices [NQ,k], scores [NQ,k]).
+
+    Scores are squared-L2 (ascending) or negative inner product (so that
+    smaller is always better, matching the search engine's convention).
+    """
+    xj = jnp.asarray(x)
+    qj = jnp.asarray(q)
+    if metric == "l2":
+        d = (
+            jnp.sum(qj * qj, axis=1)[:, None]
+            - 2.0 * qj @ xj.T
+            + jnp.sum(xj * xj, axis=1)[None, :]
+        )
+    elif metric == "ip":
+        d = -(qj @ xj.T)
+    else:
+        raise ValueError(f"unknown metric {metric!r}")
+    import jax
+
+    neg, idx = jax.lax.top_k(-d, k)  # top_k is max-k; negate for min-k
+    return np.asarray(idx), np.asarray(-neg)
+
+
+def recall_at_k(pred_idx: np.ndarray, true_idx: np.ndarray) -> float:
+    """Standard recall@k: |pred ∩ true| / k averaged over queries."""
+    assert pred_idx.shape == true_idx.shape
+    nq, k = pred_idx.shape
+    hits = 0
+    for i in range(nq):
+        hits += len(set(pred_idx[i].tolist()) & set(true_idx[i].tolist()))
+    return hits / (nq * k)

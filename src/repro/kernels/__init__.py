@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for HARMONY's compute hot-spot (distance scoring).
+
+* ``distance.py`` — pl.pallas_call kernel: partial-distance accumulate with
+  tile-granular early-stop pruning (BlockSpec VMEM tiling, MXU matmul).
+* ``ops.py`` — jit'd wrappers (auto interpret=True off-TPU).
+* ``ref.py`` — pure-jnp oracles defining the exact semantics.
+"""
+
+from repro.kernels.ops import partial_distance_update, masked_topk
+from repro.kernels.topk_update import running_topk_update
+
+__all__ = ["partial_distance_update", "masked_topk", "running_topk_update"]

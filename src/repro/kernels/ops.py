@@ -1,0 +1,74 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU hosts (this container) the kernels execute under
+``interpret=True`` — the kernel body runs as regular JAX ops so the
+BlockSpec/when logic is validated end-to-end; on TPU they compile to
+Mosaic. Call sites never need to care.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.distance import partial_distance_update as _pallas_update
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def partial_distance_update(
+    x: jnp.ndarray,
+    xn2: jnp.ndarray,
+    q: jnp.ndarray,
+    qn2: jnp.ndarray,
+    acc: jnp.ndarray,
+    tau: jnp.ndarray,
+    *,
+    prune: bool = True,
+    metric: str = "l2",
+    tile_m: int = 128,
+    tile_n: int = 128,
+    tile_k: int = 128,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """acc' = acc + partial_distance_block, pruned against τ.
+
+    Returns (acc' [M,N] f32, tile_skip_map [m_tiles, n_tiles] int32).
+    ``use_pallas=False`` routes to the pure-jnp oracle (fast XLA path used
+    by CPU-measured benchmarks; the skip map is then computed post-hoc).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    if use_pallas:
+        return _pallas_update(
+            x, xn2, q, qn2, acc, tau,
+            prune=prune, metric=metric,
+            tile_m=tile_m, tile_n=tile_n, tile_k=tile_k,
+            interpret=interpret,
+        )
+    out = ref.partial_distance_update_ref(
+        x, xn2, q, qn2, acc, tau, prune=prune, metric=metric
+    )
+    skip = _tile_skip_map(acc, tile_m, tile_n)
+    return out, skip
+
+
+def _tile_skip_map(acc: jnp.ndarray, tile_m: int, tile_n: int) -> jnp.ndarray:
+    """Which [tile_m, tile_n] tiles were fully pruned on entry (post-hoc)."""
+    m, n = acc.shape
+    mp, np_ = -(-m // tile_m) * tile_m, -(-n // tile_n) * tile_n
+    a = jnp.pad(acc, ((0, mp - m), (0, np_ - n)), constant_values=jnp.inf)
+    a = a.reshape(mp // tile_m, tile_m, np_ // tile_n, tile_n)
+    alive = jnp.isfinite(a).any(axis=(1, 3))
+    return (~alive).astype(jnp.int32)
+
+
+def masked_topk(scores: jnp.ndarray, ids: jnp.ndarray, k: int):
+    """Ascending top-k of finite entries (oracle-backed; see ref)."""
+    return ref.masked_topk_ref(scores, ids, k)

@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These define the exact semantics the kernels must match (asserted by the
+shape/dtype sweep in tests/kernels/). All math in f32 accumulation.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def partial_distance_update_ref(
+    x: jnp.ndarray,       # [N, Db]  candidate rows, this dimension block
+    xn2: jnp.ndarray,     # [N]      per-row squared norm of this block
+    q: jnp.ndarray,       # [M, Db]  query rows, this dimension block
+    qn2: jnp.ndarray,     # [M]      per-query squared norm of this block
+    acc: jnp.ndarray,     # [M, N]   running partial distances; +inf = pruned
+    tau: jnp.ndarray,     # [M]      per-query pruning threshold
+    *,
+    prune: bool = True,
+    metric: str = "l2",
+) -> jnp.ndarray:
+    """acc' = acc + d_b²  (or −partial dot), then prune acc' > τ → +inf.
+
+    +inf entries stay +inf (pruned pairs never resurrect); pruning keeps
+    exactly the entries ≤ τ (monotone partial sums make this exact).
+    """
+    xf = x.astype(jnp.float32)
+    qf = q.astype(jnp.float32)
+    if metric == "l2":
+        part = (
+            qn2.astype(jnp.float32)[:, None]
+            - 2.0 * (qf @ xf.T)
+            + xn2.astype(jnp.float32)[None, :]
+        )
+    elif metric == "ip":
+        part = -(qf @ xf.T)
+    else:
+        raise ValueError(metric)
+    out = acc.astype(jnp.float32) + part
+    out = jnp.where(jnp.isfinite(acc), out, jnp.inf)
+    if prune:
+        out = jnp.where(out > tau.astype(jnp.float32)[:, None], jnp.inf, out)
+    return out
+
+
+def masked_topk_ref(scores: jnp.ndarray, ids: jnp.ndarray, k: int):
+    """Ascending top-k of finite scores per row; +inf/invalid → (-1, +inf).
+
+    scores [M, N] float32 (smaller = better), ids [M, N] int32/int64.
+    Returns (top_scores [M, k], top_ids [M, k]).
+    """
+    import jax
+
+    neg, idx = jax.lax.top_k(-scores, k)          # max-k of negated = min-k
+    top_scores = -neg
+    top_ids = jnp.take_along_axis(ids, idx, axis=1)
+    top_ids = jnp.where(jnp.isfinite(top_scores), top_ids, -1)
+    return top_scores, top_ids
+
+
+def running_topk_ref(scores, ids, run_s, run_i, k: int):
+    """Merge candidate (scores, ids) into the running ascending top-K.
+    scores [M,C] (+inf invalid), run_s/run_i [M,K]. Returns (s', i')."""
+    import jax
+
+    import jax.numpy as jnp
+
+    cat_s = jnp.concatenate([run_s, scores], axis=1)
+    cat_i = jnp.concatenate([run_i, ids], axis=1)
+    neg, pos = jax.lax.top_k(-cat_s, k)
+    out_s = -neg
+    out_i = jnp.take_along_axis(cat_i, pos, axis=1)
+    out_i = jnp.where(jnp.isfinite(out_s), out_i, -1)
+    return out_s, out_i

@@ -1,0 +1,338 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+cell on the production meshes (16×16 single-pod, 2×16×16 multi-pod), plus
+the paper's own ANNS pipeline at billion-vector scale.
+
+Per cell and mesh this records into a JSON cache (benchmarks/ and the
+roofline report read it — nothing is recompiled downstream):
+
+* ``memory_analysis`` (argument/output/temp bytes per device),
+* ``cost_analysis`` flops / bytes accessed,
+* collective result-bytes by op kind parsed from the compiled HLO,
+* compile wall time.
+
+Each cell is lowered TWICE — full stack and ``n_units_override=0`` —
+because XLA's cost analysis counts a ``lax.scan`` body once regardless of
+trip count: total = zero_variant + n_units × (full − zero). Inner
+recurrent/attention chunk loops are unrolled (``unroll_chunks``) when the
+chunk count is ≤ MAX_UNROLL so the per-unit body cost is exact; cells
+where that would blow up HLO size keep the inner scan and record its trip
+count for the analytic correction (see EXPERIMENTS.md).
+
+Usage:
+  python -m repro.launch.dryrun [--arch A]... [--shape S]... \
+      [--mesh single|multi|both] [--anns] [--out benchmarks/dryrun_results.json]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro import configs as cfgs
+from repro.config import ModelConfig, ShapeSpec, applicable_shapes, shape_by_name
+from repro.launch.hlo import collective_bytes, count_collectives
+from repro.launch.mesh import make_production_mesh
+from repro.models import RunCtx, decode_step, init_cache, init_params, prefill
+from repro.sharding.rules import (
+    batch_axes,
+    batch_shardings,
+    cache_shardings,
+    opt_shardings,
+    param_shardings,
+)
+from repro.train import OptConfig, init_opt_state, make_train_step
+
+MAX_UNROLL = 64          # inner-loop unroll budget (HLO-size vs exactness)
+# beyond-paper optimizations, toggled by --opt (EXPERIMENTS.md §Perf)
+OPT_FLAGS = {"kv_range_chunking": False, "shard_heads": False,
+             "remat_policy": "full"}
+DEFAULT_OUT = Path(__file__).resolve().parents[3] / "benchmarks" / "dryrun_results.json"
+
+
+def _ctx_for(cfg: ModelConfig, shape: ShapeSpec, mesh, n_override):
+    """Unroll inner chunk loops whenever the cell actually has them, so the
+    per-unit HLO cost is exact (cost_analysis counts scan bodies once).
+
+    decode steps have no full-sequence chunk loops → nothing to unroll;
+    transformer families only chunk attention (q); ssm/hybrid also chunk
+    the recurrence (rec). sLSTM's per-timestep scan can never be unrolled —
+    the roofline corrects those layers analytically (EXPERIMENTS.md).
+    """
+    q_chunk = 2048 if shape.seq_len > 8192 else 1024
+    rec_chunk = 512 if shape.seq_len > 8192 else 256
+    if shape.kind == "decode":
+        trips = 1
+    elif cfg.family in ("ssm", "hybrid"):
+        trips = max(-(-shape.seq_len // q_chunk), -(-shape.seq_len // rec_chunk))
+    else:
+        trips = -(-shape.seq_len // q_chunk)
+    unroll = trips <= MAX_UNROLL
+    return RunCtx(
+        mesh=mesh, unroll_chunks=unroll, q_chunk=q_chunk, rec_chunk=rec_chunk,
+        n_units_override=n_override,
+        kv_range_chunking=OPT_FLAGS["kv_range_chunking"],
+        shard_heads=OPT_FLAGS["shard_heads"],
+        remat_policy=OPT_FLAGS["remat_policy"],
+    ), {"q_chunk": q_chunk, "rec_chunk": rec_chunk, "inner_unrolled": unroll,
+        "opt": dict(OPT_FLAGS),
+        "inner_trips": {"q": -(-shape.seq_len // q_chunk),
+                        "rec": -(-shape.seq_len // rec_chunk),
+                        "effective": trips}}
+
+
+def _abstract(fn, *a, **k):
+    return jax.eval_shape(fn, *a, **k)
+
+
+def _batch_sds(cfg: ModelConfig, shape: ShapeSpec):
+    B, S = shape.global_batch, shape.seq_len
+    i32, f32 = jax.numpy.int32, jax.numpy.float32
+    if cfg.frontend == "audio_frames":
+        return {
+            "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), f32),
+            "targets": jax.ShapeDtypeStruct((B, S), i32),
+            "loss_mask": jax.ShapeDtypeStruct((B, S), f32),
+        }
+    out = {
+        "tokens": jax.ShapeDtypeStruct((B, S), i32),
+        "targets": jax.ShapeDtypeStruct((B, S), i32),
+    }
+    if cfg.rope_style == "mrope":
+        out["positions"] = jax.ShapeDtypeStruct((3, B, S), i32)
+    return out
+
+
+def _analyze(lowered, compiled) -> dict:
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    txt = compiled.as_text()
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "collective_result_bytes": collective_bytes(txt),
+        "collective_counts": count_collectives(txt),
+        "memory": {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(ma, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", 0),
+            "alias_bytes": getattr(ma, "alias_size_in_bytes", 0),
+        },
+    }
+
+
+def run_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, mesh_name: str) -> dict:
+    """Lower+compile one (arch, shape, mesh): full and zero-stack variants."""
+    from repro.models.lm import unit_layout
+
+    layout = unit_layout(cfg)
+    results = {"arch": cfg.name, "shape": shape.name, "mesh": mesh_name,
+               "kind": shape.kind, "n_units": layout["n_units"],
+               "unit_layers": layout["unit_layers"],
+               "tail_locals": layout.get("tail_locals", 0),
+               "variants": {}, "ok": False}
+
+    p_shape = _abstract(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    p_sh = param_shardings(p_shape, cfg, mesh)
+
+    for variant, n_override in (("full", None), ("zero", 0)):
+        ctx, ctx_meta = _ctx_for(cfg, shape, mesh, n_override)
+        t0 = time.time()
+        if shape.kind == "train":
+            ocfg = OptConfig(name=cfg.optimizer)
+            o_shape = _abstract(lambda: init_opt_state(p_shape, ocfg))
+            o_sh = opt_shardings(o_shape, p_shape, cfg, mesh)
+            b_sds = _batch_sds(cfg, shape)
+            b_sh = batch_shardings(cfg, shape, mesh)
+            step = make_train_step(cfg, ocfg, ctx)
+            lowered = jax.jit(
+                step, in_shardings=(p_sh, o_sh, b_sh)
+            ).lower(p_shape, o_shape, b_sds)
+        elif shape.kind == "prefill":
+            b_sds = _batch_sds(cfg, shape)
+            b_sh = batch_shardings(cfg, shape, mesh)
+            step = partial(prefill, cfg=cfg, ctx=ctx)
+            lowered = jax.jit(
+                lambda p, b: prefill(p, cfg, b, ctx),
+                in_shardings=(p_sh, b_sh),
+            ).lower(p_shape, b_sds)
+        else:  # decode
+            B, S = shape.global_batch, shape.seq_len
+            c_shape = _abstract(lambda: init_cache(cfg, B, S))
+            c_sh = cache_shardings(cfg, c_shape, shape, mesh)
+            ba = batch_axes(mesh)
+            bsz = int(np.prod([mesh.shape[a] for a in ba]))
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            tok_sh = NamedSharding(mesh, P(ba if B % bsz == 0 and B >= bsz else None))
+            tok = jax.ShapeDtypeStruct((B,), jax.numpy.int32)
+            pos = jax.ShapeDtypeStruct((B,), jax.numpy.int32)
+            lowered = jax.jit(
+                lambda p, t, po, c: decode_step(p, cfg, t, po, c, ctx),
+                in_shardings=(p_sh, tok_sh, tok_sh, c_sh),
+            ).lower(p_shape, tok, pos, c_shape)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        entry = _analyze(lowered, compiled)
+        entry.update({"lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+                      "ctx": ctx_meta})
+        results["variants"][variant] = entry
+        print(f"    {variant}: lower {t_lower:.1f}s compile {t_compile:.1f}s "
+              f"flops {entry['flops']:.3g} temp {entry['memory']['temp_bytes']/2**30:.2f} GiB",
+              flush=True)
+    results["ok"] = True
+    return results
+
+
+def run_anns_cell(mesh, mesh_name: str, multi_pod: bool) -> dict:
+    """The paper's own workload: HARMONY SPMD pipeline at SpaceV1B scale.
+
+    --opt: the §4.2 cost model evaluated with TPU v5e constants picks a
+    vector-heavy factorization (dimension rings are ICI/HBM-hostile at
+    197 TFLOP/s — see EXPERIMENTS.md §Perf): V=128 × B=2 instead of 16×16,
+    and the corpus is stored bf16 (accumulators stay f32)."""
+    import jax as _jax
+
+    from repro.core.pipeline import SpmdConfig, input_specs, make_spmd_search
+
+    n_pods = 2 if multi_pod else 1
+    if OPT_FLAGS["kv_range_chunking"]:          # --opt
+        ax = ("pod", "data", "model") if multi_pod else ("data", "model")
+        shp = (2, 128, 2) if multi_pod else (128, 2)
+        mesh = _jax.make_mesh(shp, ax,
+                              axis_types=(_jax.sharding.AxisType.Auto,) * len(ax))
+        scfg = SpmdConfig(
+            v_shards=128, d_blocks=2, n_pods=n_pods,
+            qb=1024, cap=2**19, dim=128, nprobe=64, k=10, chunk=2**15,
+            x_dtype="bfloat16", use_pallas=False,
+        )
+    else:
+        scfg = SpmdConfig(
+            v_shards=16, d_blocks=16, n_pods=n_pods,
+            qb=1024, cap=2**22, dim=128, nprobe=64, k=10, chunk=2**16,
+            use_pallas=False,     # jnp scoring path lowers on the CPU backend
+        )
+    res = {"arch": "harmony-anns", "shape": "spacev1b_like", "mesh": mesh_name,
+           "kind": "serve", "variants": {}, "ok": False,
+           "scfg": {"cap": scfg.cap, "chunk": scfg.chunk, "qb": scfg.qb,
+                    "dim": scfg.dim, "n_chunks": scfg.n_chunks,
+                    "v_shards": scfg.v_shards, "d_blocks": scfg.d_blocks,
+                    "x_dtype": scfg.x_dtype, "opt": dict(OPT_FLAGS)}}
+    step = make_spmd_search(scfg, mesh)
+    sds = input_specs(scfg)
+    t0 = time.time()
+    lowered = step.lower(
+        sds["x_blocks"], sds["xn2_blocks"], sds["cluster_ids"],
+        sds["row_ids"], sds["queries"], sds["probes"], sds["tau0"],
+    )
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    entry = _analyze(lowered, compiled)
+    entry.update({"lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+                  "inner_trips": {"chunks": scfg.n_chunks, "ring": scfg.d_blocks}})
+    res["variants"]["full"] = entry
+    res["ok"] = True
+    print(f"    anns: lower {t_lower:.1f}s compile {t_compile:.1f}s "
+          f"flops {entry['flops']:.3g}", flush=True)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--shape", action="append", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--anns", action="store_true", help="only the ANNS cells")
+    ap.add_argument("--no-anns", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--opt", action="store_true",
+                    help="enable perf optimizations; writes *_opt.json")
+    ap.add_argument("--remat-policy", dest="remat_policy", default=None,
+                    choices=["full", "dots"])
+    args = ap.parse_args()
+    if args.opt:
+        OPT_FLAGS["kv_range_chunking"] = True
+        OPT_FLAGS["shard_heads"] = True
+        # NOTE: remat_policy="dots" was evaluated and REFUTED (see
+        # EXPERIMENTS.md §Perf iteration log): −18% collective but 3.5×
+        # resident memory — stays off.
+    if args.remat_policy:
+        OPT_FLAGS["remat_policy"] = args.remat_policy
+    if args.out is None:
+        args.out = str(DEFAULT_OUT.with_name(
+            "dryrun_results_opt.json" if args.opt else "dryrun_results.json"))
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("pod16x16", make_production_mesh(multi_pod=False), False))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("2pod_2x16x16", make_production_mesh(multi_pod=True), True))
+
+    out_path = Path(args.out)
+    existing = {}
+    if out_path.exists():
+        for r in json.loads(out_path.read_text()):
+            existing[(r["arch"], r["shape"], r["mesh"])] = r
+
+    def save():
+        out_path.parent.mkdir(parents=True, exist_ok=True)
+        out_path.write_text(json.dumps(list(existing.values()), indent=1))
+
+    if not args.anns:
+        arch_list = args.arch or cfgs.arch_names()
+        for arch in arch_list:
+            cfg = cfgs.get_config(arch)
+            shapes = applicable_shapes(cfg)
+            if args.shape:
+                shapes = [s for s in shapes if s.name in args.shape]
+            for shape in shapes:
+                for mesh_name, mesh, _ in meshes:
+                    key = (arch, shape.name, mesh_name)
+                    if key in existing and existing[key].get("ok"):
+                        print(f"[skip cached] {key}")
+                        continue
+                    print(f"[cell] {arch} × {shape.name} × {mesh_name}", flush=True)
+                    try:
+                        existing[key] = run_cell(cfg, shape, mesh, mesh_name)
+                    except Exception as e:
+                        traceback.print_exc()
+                        existing[key] = {
+                            "arch": arch, "shape": shape.name, "mesh": mesh_name,
+                            "ok": False, "error": f"{type(e).__name__}: {e}",
+                        }
+                    save()
+
+    if not args.no_anns:
+        for mesh_name, mesh, multi in meshes:
+            key = ("harmony-anns", "spacev1b_like", mesh_name)
+            if key in existing and existing[key].get("ok"):
+                print(f"[skip cached] {key}")
+                continue
+            print(f"[cell] harmony-anns × spacev1b_like × {mesh_name}", flush=True)
+            try:
+                existing[key] = run_anns_cell(mesh, mesh_name, multi)
+            except Exception as e:
+                traceback.print_exc()
+                existing[key] = {"arch": "harmony-anns", "shape": "spacev1b_like",
+                                 "mesh": mesh_name, "ok": False,
+                                 "error": f"{type(e).__name__}: {e}"}
+            save()
+
+    n_ok = sum(1 for r in existing.values() if r.get("ok"))
+    print(f"\ndone: {n_ok}/{len(existing)} cells ok → {out_path}")
+    return 0 if n_ok == len(existing) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

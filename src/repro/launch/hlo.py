@@ -1,0 +1,82 @@
+"""HLO-text analysis: collective-bytes accounting for the roofline.
+
+``collective_bytes(hlo_text)`` sums the result-shape bytes of every
+collective op (all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute), bucketed by op kind. Notes:
+
+* while-loop bodies appear once in the text (same convention as
+  ``cost_analysis``'s flops) — the roofline harness recovers per-layer
+  totals by the two-compile differencing described in DESIGN.md;
+* result-shape bytes are the wire proxy: exact for ppermute/all-to-all,
+  the gathered size for all-gather (ring transfer ≈ (n−1)/n of it), and
+  the reduced size for all-reduce (ring ≈ 2(n−1)/n ·bytes); the roofline
+  applies those ring factors.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result bytes per collective kind (…-done ops are skipped so
+    async pairs are not double-counted)."""
+    out: Dict[str, int] = defaultdict(int)
+    for m in _COLL_RE.finditer(hlo_text):
+        # skip the -done halves of async pairs
+        window = hlo_text[m.start(): m.end()]
+        if "-done(" in window:
+            continue
+        out[m.group(2)] += _shape_bytes(m.group(1))
+    return dict(out)
+
+
+def wire_bytes(coll: Dict[str, int], n_shards: int) -> float:
+    """Ring-algorithm wire-byte estimate per device from result bytes."""
+    f = (n_shards - 1) / max(n_shards, 1)
+    total = 0.0
+    for kind, b in coll.items():
+        if kind == "all-reduce":
+            total += 2 * f * b
+        elif kind in ("all-gather", "reduce-scatter"):
+            total += f * b
+        elif kind == "all-to-all":
+            total += f * b
+        elif kind == "collective-permute":
+            total += b
+    return total
+
+
+def count_collectives(hlo_text: str) -> Dict[str, int]:
+    out: Dict[str, int] = defaultdict(int)
+    for m in _COLL_RE.finditer(hlo_text):
+        out[m.group(2)] += 1
+    return dict(out)

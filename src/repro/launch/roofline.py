@@ -1,0 +1,242 @@
+"""Roofline analysis from the dry-run cache (no recompilation).
+
+Per (arch × shape × mesh) this derives the three roofline terms on TPU v5e
+constants and identifies the dominant bottleneck:
+
+    compute    = HLO_FLOPs_dev / peak_FLOPs          (197 TFLOP/s bf16)
+    memory     = HLO_bytes_dev / HBM_bw              (819 GB/s)
+    collective = wire_bytes_dev / ICI_bw             (50 GB/s/link)
+
+HLO numbers are reconstructed from the two-compile differencing
+(total = zero + n_units × unit; gemma's tail layers are apportioned by
+layer count). Collective wire bytes apply ring factors to HLO result
+bytes (see launch/hlo.py). Cells whose per-unit body still contains an
+inner scan that cannot be unrolled (xLSTM's per-timestep sLSTM) get an
+analytic flop correction, recorded in the row.
+
+MODEL_FLOPS follows the brief: 6·N·D (train) / 2·N·D (prefill/decode
+tokens), N = params excluding the embedding table (MoE: active experts
+only). The ratio MODEL_FLOPS / HLO_FLOPs measures how much compiled
+compute is "useful" (remat, attention, and routing overheads push it
+below 1).
+
+Usage: python -m repro.launch.roofline [--json benchmarks/dryrun_results.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s/link
+HBM_BYTES = 16 * 2**30     # v5e
+_RING_F = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+           "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _n_shards(mesh_name: str) -> int:
+    return 512 if mesh_name.startswith("2pod") else 256
+
+
+def _wire(coll: dict, groups: int = 16) -> float:
+    f = (groups - 1) / groups
+    total = 0.0
+    for kind, b in coll.items():
+        scale = _RING_F.get(kind, 1.0)
+        total += (scale * f if kind != "collective-permute" else 1.0) * b
+    return total
+
+
+def _combine(cell: dict, key_path) -> float:
+    """total = zero + n_units·unit (+ tail share)."""
+    full = cell["variants"]["full"]
+    zero = cell["variants"].get("zero")
+    get = lambda v: key_path(v) if v else 0.0
+    if zero is None:
+        return get(full)
+    n = cell.get("n_units", 1)
+    ul = cell.get("unit_layers", 1)
+    tl = cell.get("tail_locals", 0)
+    delta = get(full) - get(zero)
+    if tl:
+        unit = delta * ul / (ul + tl)
+        tail = delta - unit
+        return get(zero) + n * unit + tail
+    return get(zero) + n * delta
+
+
+def _combine_coll(cell: dict) -> dict:
+    full = cell["variants"]["full"].get("collective_result_bytes", {})
+    zero = (cell["variants"].get("zero") or {}).get("collective_result_bytes", {})
+    n = cell.get("n_units", 1)
+    ul, tl = cell.get("unit_layers", 1), cell.get("tail_locals", 0)
+    out = {}
+    for k in set(full) | set(zero):
+        delta = full.get(k, 0) - zero.get(k, 0)
+        if tl:
+            unit = delta * ul / (ul + tl)
+            out[k] = zero.get(k, 0) + n * unit + (delta - unit)
+        else:
+            out[k] = zero.get(k, 0) + n * delta
+    return out
+
+
+def _model_flops(arch: str, shape_name: str, kind: str, n_devices: int):
+    """Analytic 6·N·D / 2·N·D per the brief (global, then per device)."""
+    from repro import configs as cfgs
+    from repro.config import shape_by_name
+
+    import jax
+
+    cfg = cfgs.get_config(arch)
+    shape = shape_by_name(shape_name)
+    from repro.models import init_params
+
+    p = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    total = active = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(p)[0]:
+        names = [str(getattr(x, "key", getattr(x, "idx", x))) for x in path]
+        n = int(np.prod(leaf.shape))
+        if names[-1] == "embed":
+            continue                      # lookup is not a matmul
+        total += n
+        if "moe" in names and names[-1] in ("w1", "w2", "w3"):
+            active += n * cfg.moe.experts_per_token / cfg.moe.num_experts
+        else:
+            active += n
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        g = 6.0 * active * tokens
+    elif kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        g = 2.0 * active * tokens
+    else:  # decode: one token per sequence
+        g = 2.0 * active * shape.global_batch
+    return g, g / n_devices
+
+
+def _slstm_correction(arch: str, shape_name: str, kind: str, n_devices: int) -> float:
+    """Per-device analytic flops for sLSTM per-timestep recurrences that
+    stay inside an un-unrollable scan (HLO counts the body once)."""
+    from repro import configs as cfgs
+    from repro.config import shape_by_name
+
+    cfg = cfgs.get_config(arch)
+    if cfg.family != "ssm" or not cfg.xlstm_slstm_every or kind == "decode":
+        return 0.0
+    shape = shape_by_name(shape_name)
+    n_slstm = cfg.num_layers // cfg.xlstm_slstm_every
+    H = cfg.num_heads
+    hd = cfg.d_model // H
+    per_step = 2.0 * H * hd * 4 * hd          # recurrent einsum per token
+    g = n_slstm * shape.global_batch * shape.seq_len * per_step
+    if kind == "train":
+        g *= 3
+    return g / n_devices
+
+
+def analyze(cells, mesh_filter=None):
+    rows = []
+    for cell in cells:
+        if not cell.get("ok") or "full" not in cell.get("variants", {}):
+            continue
+        if mesh_filter and cell["mesh"] != mesh_filter:
+            continue
+        ndev = _n_shards(cell["mesh"])
+        arch, shape, kind = cell["arch"], cell["shape"], cell.get("kind", "serve")
+
+        if arch == "harmony-anns":
+            # inner (chunk × ring) scans are counted once → multiply back
+            v = cell["variants"]["full"]
+            trips = v["inner_trips"]["chunks"] * v["inner_trips"]["ring"]
+            flops = v["flops"] * trips
+            bytes_ = v["bytes_accessed"] * trips
+            coll = {k: b * trips for k, b in v["collective_result_bytes"].items()}
+            # model flops: every (query-group pair × dim) scored once per
+            # device across the ring: 2 · QG · cap · D
+            sc = cell.get("scfg", {})
+            qg = sc.get("qb", 1024) // sc.get("d_blocks", 16)
+            model_dev = 2.0 * qg * sc.get("cap", 0) * sc.get("dim", 128)
+            model_g = model_dev * ndev
+            correction = 0.0
+        else:
+            flops = _combine(cell, lambda v: v["flops"])
+            bytes_ = _combine(cell, lambda v: v["bytes_accessed"])
+            coll = _combine_coll(cell)
+            correction = _slstm_correction(arch, shape, kind, ndev)
+            flops += correction
+            model_g, model_dev = _model_flops(arch, shape, kind, ndev)
+
+        compute_s = flops / PEAK_FLOPS
+        memory_s = bytes_ / HBM_BW
+        wire = _wire(coll)
+        collective_s = wire / ICI_BW
+        terms = {"compute": compute_s, "memory": memory_s,
+                 "collective": collective_s}
+        dominant = max(terms, key=terms.get)
+        mem = cell["variants"]["full"].get("memory", {})
+        resident = mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)
+        # lower bound on HBM traffic: compulsory argument+output bytes
+        # (the HLO 'bytes accessed' above is the CPU backend's UNFUSED
+        # upper bound — TPU fusion lands in between; see EXPERIMENTS.md)
+        memory_lower_s = (mem.get("argument_bytes", 0)
+                          + mem.get("output_bytes", 0)) / HBM_BW
+        rows.append({
+            "arch": arch, "shape": shape, "mesh": cell["mesh"], "kind": kind,
+            "compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": collective_s, "dominant": dominant,
+            "hlo_flops_dev": flops, "hlo_bytes_dev": bytes_,
+            "wire_bytes_dev": wire,
+            "memory_lower_s": memory_lower_s,
+            "model_flops_global": model_g,
+            "model_flops_ratio": (model_dev / flops) if flops and model_dev == model_dev else 0.0,
+            "slstm_correction_dev": correction,
+            "resident_bytes_dev": resident,
+            "fits_hbm": bool(resident <= HBM_BYTES),
+            "roofline_fraction": (model_dev / PEAK_FLOPS) / max(terms[dominant], 1e-30),
+        })
+    return rows
+
+
+RECOMMEND = {
+    "compute": "compute-bound: raise MXU utilization (larger per-chip tiles, "
+               "fewer remat recomputes) or accept — this is the good roof",
+    "memory": "HBM-bound: cut bytes/step — fuse elementwise chains, shrink "
+              "activation dtypes, avoid materialized logits/one-hots",
+    "collective": "ICI-bound: reshard to cut cross-chip traffic (fewer "
+                  "dimension blocks / more vector shards, overlap ppermute "
+                  "with compute, or move the axis onto faster links)",
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=str(Path(__file__).resolve().parents[3]
+                                          / "benchmarks" / "dryrun_results.json"))
+    ap.add_argument("--out", default=str(Path(__file__).resolve().parents[3]
+                                         / "benchmarks" / "roofline.json"))
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    cells = json.loads(Path(args.json).read_text())
+    rows = analyze(cells, args.mesh)
+    Path(args.out).write_text(json.dumps(rows, indent=1))
+
+    hdr = (f"{'arch':<18} {'shape':<12} {'mesh':<12} {'comp_s':>9} {'mem_s':>9} "
+           f"{'coll_s':>9} {'bound':<10} {'MF/HLO':>6} {'fit':>4}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in sorted(rows, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        print(f"{r['arch']:<18} {r['shape']:<12} {r['mesh']:<12} "
+              f"{r['compute_s']:>9.3g} {r['memory_s']:>9.3g} "
+              f"{r['collective_s']:>9.3g} {r['dominant']:<10} "
+              f"{r['model_flops_ratio']:>6.2f} {'ok' if r['fits_hbm'] else 'OOM':>4}")
+    print(f"\n{len(rows)} rows → {args.out}")
+
+
+if __name__ == "__main__":
+    main()

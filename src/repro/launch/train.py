@@ -1,0 +1,64 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-4b --smoke \
+        --steps 20 [--ckpt-dir /tmp/ckpt]
+
+``--smoke`` selects the reduced config (CPU-runnable); without it the full
+assigned config is used (TPU pods — pair with the dry-run-validated mesh).
+Resumes automatically from the latest checkpoint in --ckpt-dir.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro import configs as cfgs
+from repro.checkpoint import Checkpointer
+from repro.data import TokenPipeline
+from repro.models import RunCtx, init_params
+from repro.train import OptConfig, init_opt_state, train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=cfgs.arch_names())
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = cfgs.get_smoke_config(args.arch) if args.smoke else cfgs.get_config(args.arch)
+    if cfg.frontend != "none":
+        raise SystemExit(f"{args.arch} is encoder-only/frontend-stubbed; use "
+                         "its masked-prediction path via tests/models instead")
+    pipe = TokenPipeline(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                         global_batch=args.batch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    ck = Checkpointer(args.ckpt_dir, keep=3, async_write=True) if args.ckpt_dir else None
+    start = 0
+    if ck is not None and ck.latest_step() is not None:
+        ocfg = OptConfig(name=cfg.optimizer, lr=args.lr)
+        target = {"params": params, "opt": init_opt_state(params, ocfg)}
+        restored = ck.restore(target)
+        params = restored["params"]
+        start = ck.latest_step()
+        print(f"resumed from step {start}")
+    params, _, hist = train_loop(
+        cfg, params, pipe, steps=args.steps,
+        ocfg=OptConfig(name=cfg.optimizer, lr=args.lr),
+        ctx=RunCtx(rec_chunk=16, q_chunk=64),
+        checkpointer=ck, ckpt_every=args.ckpt_every, start_step=start,
+    )
+    if ck:
+        ck.wait()
+    print(f"final loss {hist[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""LM substrate: layers, per-family blocks, assembly for the arch pool."""
+
+from repro.models.lm import (
+    RunCtx,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill,
+    unit_layout,
+)
+
+__all__ = [
+    "RunCtx", "decode_step", "forward", "init_cache", "init_params",
+    "loss_fn", "prefill", "unit_layout",
+]

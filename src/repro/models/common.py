@@ -1,0 +1,331 @@
+"""Shared model building blocks: norms, RoPE (incl. M-RoPE), GQA attention
+(causal / bidirectional / sliding-window / softcap, prefill + decode),
+SwiGLU/GeLU FFN, init helpers.
+
+All blocks are pure functions over param pytrees (no framework dependency).
+Compute dtype = cfg.dtype (bf16 by default), norms/softmax statistics in
+f32. Chunked (flash-style) attention streams query chunks with an online
+softmax; ``unroll_chunks=True`` replaces the chunk scan with a Python loop
+so the dry-run's per-layer cost analysis is exact (see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.bfloat16):
+    fan_in = shape[in_axis]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.bfloat16):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x [..., S, H, hd]; pos broadcastable to [..., S]."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                   # [half]
+    ang = pos.astype(jnp.float32)[..., None] * freqs         # [..., S, half]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def apply_mrope(
+    x: jnp.ndarray, pos3: jnp.ndarray, theta: float, sections=(16, 24, 24)
+) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE: the half-dim frequency bands are split into
+    (temporal, height, width) sections, each rotated by its own position.
+
+    x [B, S, H, hd]; pos3 [3, B, S]. For text tokens pos3[i] are all equal,
+    which reduces exactly to standard RoPE.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)                   # [half]
+    # section id per frequency index
+    sec = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=half
+    )                                                        # [half]
+    pos_per_freq = jnp.take(pos3, sec, axis=0)               # [half, B, S] -> gather over axis 0
+    pos_per_freq = jnp.moveaxis(pos_per_freq, 0, -1)         # [B, S, half]
+    ang = pos_per_freq.astype(jnp.float32) * freqs           # [B, S, half]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def init_attention(cfg: ModelConfig, key) -> Dict[str, Any]:
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    dt = dtype_of(cfg)
+    p = {
+        "wq": dense_init(ks[0], (d, H * hd), 0, dt),
+        "wk": dense_init(ks[1], (d, KV * hd), 0, dt),
+        "wv": dense_init(ks[2], (d, KV * hd), 0, dt),
+        "wo": dense_init(ks[3], (H * hd, d), 0, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dt)
+        p["bk"] = jnp.zeros((KV * hd,), dt)
+        p["bv"] = jnp.zeros((KV * hd,), dt)
+    return p
+
+
+def _qkv(p, cfg: ModelConfig, x):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (
+        q.reshape(B, S, H, hd),
+        k.reshape(B, S, KV, hd),
+        v.reshape(B, S, KV, hd),
+    )
+
+
+def _softcap(logits: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap and cap > 0:
+        return cap * jnp.tanh(logits / cap)
+    return logits
+
+
+def _attend_dense(q, k, v, mask, softcap: float) -> jnp.ndarray:
+    """q [B,Sq,H,hd], k/v [B,Sk,KV,hd] (KV repeated to H outside), mask
+    [B?,Sq,Sk] bool (True = attend). f32 softmax."""
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    logits = _softcap(logits * scale, softcap)
+    logits = jnp.where(mask[:, None, :, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v)
+    return out
+
+
+def _repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    if n_rep == 1:
+        return k
+    B, S, KV, hd = k.shape
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def attention(
+    p,
+    cfg: ModelConfig,
+    x: jnp.ndarray,                      # [B, S, D]
+    pos: jnp.ndarray,                    # [B, S] or [3, B, S] for mrope
+    *,
+    causal: bool = True,
+    sliding_window: int = 0,
+    q_chunk: int = 1024,
+    unroll_chunks: bool = False,
+    kv_range_chunking: bool = False,
+    head_sharding=None,
+) -> jnp.ndarray:
+    """Full-sequence attention (train / prefill), flash-style over q chunks.
+
+    ``kv_range_chunking`` (perf opt, EXPERIMENTS.md §Perf): each unrolled
+    q chunk only reads the KV positions it can attend — ``[0, chunk_end)``
+    for causal, ``[chunk_start − window + 1, chunk_end)`` for sliding
+    windows — instead of masking the full sequence. Halves causal
+    attention flops/bytes on average and cuts sliding-window layers to
+    O(S·(C+W)); token order must be the natural arange (it is for all
+    train/prefill paths here).
+    """
+    B, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q, k, v = _qkv(p, cfg, x)
+    if cfg.rope_style == "mrope":
+        q = apply_mrope(q, pos, cfg.rope_theta)
+        k = apply_mrope(k, pos, cfg.rope_theta)
+        pos_row = pos[0]
+    elif cfg.rope_style == "rope":
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        pos_row = pos
+    else:
+        pos_row = pos if pos.ndim == 2 else pos[0]
+    k = _repeat_kv(k, H // KV)
+    v = _repeat_kv(v, H // KV)
+    if head_sharding is not None:
+        # pin head-parallel attention (perf opt): without this, GSPMD may
+        # shard head_dim instead when H doesn't divide the model axis, and
+        # then every QKᵀ contraction all-reduces full [B,H,C,S] logits.
+        q = jax.lax.with_sharding_constraint(q, head_sharding)
+        k = jax.lax.with_sharding_constraint(k, head_sharding)
+        v = jax.lax.with_sharding_constraint(v, head_sharding)
+
+    kpos = pos_row                                            # [B, S]
+
+    def chunk_out(qc, qpos, kc, vc, kposc):
+        # qc [B, C, H, hd]; kc/vc [B, L, H, hd]
+        m = jnp.ones((B, qc.shape[1], kc.shape[1]), bool)
+        if causal:
+            m &= qpos[:, :, None] >= kposc[:, None, :]
+        if sliding_window and sliding_window > 0:
+            m &= qpos[:, :, None] - kposc[:, None, :] < sliding_window
+        return _attend_dense(qc, kc, vc, m, cfg.attn_logit_softcap)
+
+    if S <= q_chunk:
+        out = chunk_out(q, pos_row, k, v, kpos)
+    else:
+        nchunks = -(-S // q_chunk)
+        Sp = nchunks * q_chunk
+        qpad = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+        ppad = jnp.pad(pos_row, ((0, 0), (0, Sp - S)))
+        qs = qpad.reshape(B, nchunks, q_chunk, H, hd)
+        ps = ppad.reshape(B, nchunks, q_chunk)
+        if unroll_chunks:
+            outs = []
+            for i in range(nchunks):
+                if kv_range_chunking:
+                    end = min(S, (i + 1) * q_chunk)
+                    start = 0
+                    if causal and sliding_window and sliding_window > 0:
+                        start = max(0, i * q_chunk - sliding_window + 1)
+                    kc, vc, kpc = k[:, start:end], v[:, start:end], kpos[:, start:end]
+                else:
+                    kc, vc, kpc = k, v, kpos
+                outs.append(chunk_out(qs[:, i], ps[:, i], kc, vc, kpc))
+            out = jnp.concatenate(outs, axis=1)[:, :S]
+        else:
+            def body(_, xs):
+                qc, pc = xs
+                return (), chunk_out(qc, pc, k, v, kpos)
+            _, outs = jax.lax.scan(
+                body, (), (jnp.moveaxis(qs, 1, 0), jnp.moveaxis(ps, 1, 0))
+            )
+            out = jnp.moveaxis(outs, 0, 1).reshape(B, Sp, H, hd)[:, :S]
+
+    return out.reshape(B, S, H * hd) @ p["wo"]
+
+
+def attention_decode(
+    p,
+    cfg: ModelConfig,
+    x: jnp.ndarray,                      # [B, 1, D]
+    pos: jnp.ndarray,                    # [B] current position (or [3,B])
+    k_cache: jnp.ndarray,                # [B, Smax, KV, hd]
+    v_cache: jnp.ndarray,
+    *,
+    sliding_window: int = 0,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode against a KV cache. Returns (out [B,1,D], k', v').
+
+    The KV cache may be sequence-sharded on the mesh's model axis; the
+    softmax reductions over Smax then lower to cross-shard collectives
+    (GSPMD flash-decode).
+    """
+    B = x.shape[0]
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    Smax = k_cache.shape[1]
+    q, k, v = _qkv(p, cfg, x)                                # [B,1,·,hd]
+    if cfg.rope_style == "mrope":
+        pos3 = pos if pos.ndim == 2 else jnp.broadcast_to(pos[None], (3, B))
+        q = apply_mrope(q, pos3[:, :, None], cfg.rope_theta)
+        k = apply_mrope(k, pos3[:, :, None], cfg.rope_theta)
+        pos_row = pos3[0]
+    elif cfg.rope_style == "rope":
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None], cfg.rope_theta)
+        pos_row = pos
+    else:
+        pos_row = pos
+
+    # functional cache update at position pos (per batch row)
+    oh = jax.nn.one_hot(pos_row, Smax, dtype=k.dtype)        # [B, Smax]
+    k_new = k_cache * (1 - oh[:, :, None, None]) + oh[:, :, None, None] * k
+    v_new = v_cache * (1 - oh[:, :, None, None]) + oh[:, :, None, None] * v
+
+    kk = _repeat_kv(k_new, H // KV)
+    vv = _repeat_kv(v_new, H // KV)
+    idx = jnp.arange(Smax)[None, :]                          # [1, Smax]
+    m = idx <= pos_row[:, None]
+    if sliding_window and sliding_window > 0:
+        m &= pos_row[:, None] - idx < sliding_window
+    out = _attend_dense(q, kk, vv, m[:, None, :].transpose(0, 1, 2), cfg.attn_logit_softcap) \
+        if False else _attend_dense(q, kk, vv, m[:, None, :], cfg.attn_logit_softcap)
+    out = out.reshape(B, 1, H * hd) @ p["wo"]
+    return out, k_new, v_new
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+
+def init_ffn(cfg: ModelConfig, key, d_ff: Optional[int] = None) -> Dict[str, Any]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    if cfg.mlp == "swiglu":
+        return {
+            "w1": dense_init(ks[0], (d, f), 0, dt),     # gate
+            "w3": dense_init(ks[1], (d, f), 0, dt),     # up
+            "w2": dense_init(ks[2], (f, d), 0, dt),     # down
+        }
+    return {
+        "w1": dense_init(ks[0], (d, f), 0, dt),
+        "w2": dense_init(ks[2], (f, d), 0, dt),
+    }
+
+
+def ffn(p, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.mlp == "swiglu":
+        return (jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])) @ p["w2"]
+    return jax.nn.gelu(x @ p["w1"], approximate=True) @ p["w2"]

@@ -1,0 +1,632 @@
+"""Model assembly for the assigned architecture pool.
+
+One generic stack covers all ten architectures via ``ModelConfig``:
+
+* families ``dense`` / ``moe`` / ``vlm`` / ``audio`` → transformer units
+  (attention + FFN/MoE), with per-family attention flavors (GQA, RoPE /
+  M-RoPE, sliding-window local:global patterns, QKV bias, softcap,
+  bidirectional for encoders);
+* family ``ssm`` → xLSTM units (mLSTM blocks with periodic sLSTM);
+* family ``hybrid`` → Zamba2 units (Mamba2 blocks + a *shared* attention
+  block applied every ``hybrid_attn_every`` layers).
+
+Layers are grouped into **units** (one unit = the config's repeating layer
+pattern) and scanned with ``lax.scan`` so the lowered HLO contains one unit
+body regardless of depth — essential for 512-device dry-run compile times.
+``n_units=0`` lowers the surrounding embed/head only (used by the roofline
+harness's two-compile differencing; see DESIGN.md).
+
+Public entry points:
+  init_params(cfg, key)                        → param pytree
+  loss_fn(params, cfg, batch, ...)             → (loss, metrics)
+  prefill(params, cfg, batch, ...)             → (logits_last, cache)
+  decode_step(params, cfg, token, pos, cache)  → (logits, cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.config import ModelConfig
+from repro.models import common as cm
+from repro.models import moe as moe_mod
+from repro.models import recurrent as rec
+
+
+# ---------------------------------------------------------------------------
+# unit structure
+# ---------------------------------------------------------------------------
+
+
+def unit_layout(cfg: ModelConfig) -> Dict[str, Any]:
+    """How many layers form one scanned unit, and of which kinds."""
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        if cfg.local_global_ratio > 0:
+            unit = cfg.local_global_ratio + 1
+            return {"kind": "transformer", "unit_layers": unit,
+                    "n_units": cfg.num_layers // unit,
+                    "locals": cfg.local_global_ratio,
+                    "tail_locals": cfg.num_layers % unit}
+        return {"kind": "transformer", "unit_layers": 1,
+                "n_units": cfg.num_layers, "locals": 0, "tail_locals": 0}
+    if cfg.family == "ssm":
+        every = cfg.xlstm_slstm_every or cfg.num_layers + 1
+        if cfg.xlstm_slstm_every:
+            assert cfg.num_layers % every == 0
+            return {"kind": "xlstm", "unit_layers": every,
+                    "n_units": cfg.num_layers // every,
+                    "mlstm_per_unit": every - 1}
+        return {"kind": "xlstm", "unit_layers": 1, "n_units": cfg.num_layers,
+                "mlstm_per_unit": 1}
+    if cfg.family == "hybrid":
+        every = cfg.hybrid_attn_every
+        assert every > 0 and cfg.num_layers % every == 0
+        return {"kind": "zamba", "unit_layers": every,
+                "n_units": cfg.num_layers // every, "mamba_per_unit": every}
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_transformer_unit(cfg: ModelConfig, key, layout) -> Dict[str, Any]:
+    n_local = layout["locals"]
+    ks = iter(jax.random.split(key, 4 * (n_local + 1) + 4))
+
+    def one_block(k, use_moe: bool):
+        k1, k2, k3, k4 = jax.random.split(k, 4)
+        blk = {
+            "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+            "attn": cm.init_attention(cfg, k1),
+            "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+        if use_moe:
+            blk["moe"] = moe_mod.init_moe(cfg, k2)
+        else:
+            blk["ffn"] = cm.init_ffn(cfg, k2)
+        return blk
+
+    use_moe = cfg.is_moe
+    if n_local:
+        local_keys = jax.random.split(next(ks), n_local)
+        local = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *[one_block(k, use_moe) for k in local_keys]
+        )
+        return {"local": local, "global": one_block(next(ks), use_moe)}
+    return {"block": one_block(next(ks), use_moe)}
+
+
+def _init_xlstm_unit(cfg: ModelConfig, key, layout) -> Dict[str, Any]:
+    m = layout["mlstm_per_unit"]
+    ks = jax.random.split(key, m + 1)
+    out: Dict[str, Any] = {}
+    if m:
+        stacked = [
+            {"ln": jnp.zeros((cfg.d_model,), jnp.float32), "mix": rec.init_mlstm(cfg, k)}
+            for k in ks[:m]
+        ]
+        out["mlstm"] = jax.tree.map(lambda *xs: jnp.stack(xs), *stacked)
+    if layout["unit_layers"] > m:
+        out["slstm"] = {
+            "ln": jnp.zeros((cfg.d_model,), jnp.float32),
+            "mix": rec.init_slstm(cfg, ks[m]),
+        }
+    return out
+
+
+def _init_zamba_unit(cfg: ModelConfig, key, layout) -> Dict[str, Any]:
+    m = layout["mamba_per_unit"]
+    ks = jax.random.split(key, m)
+    stacked = [
+        {"ln": jnp.zeros((cfg.d_model,), jnp.float32), "mix": rec.init_mamba2(cfg, k)}
+        for k in ks
+    ]
+    return {"mamba": jax.tree.map(lambda *xs: jnp.stack(xs), *stacked)}
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    layout = unit_layout(cfg)
+    k_embed, k_units, k_head, k_shared = jax.random.split(key, 4)
+    dt = cm.dtype_of(cfg)
+    params: Dict[str, Any] = {
+        "embed": cm.embed_init(k_embed, (cfg.vocab_size, cfg.d_model), dt),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    unit_keys = jax.random.split(k_units, max(layout["n_units"], 1))
+    init_unit = {
+        "transformer": _init_transformer_unit,
+        "xlstm": _init_xlstm_unit,
+        "zamba": _init_zamba_unit,
+    }[layout["kind"]]
+    units = [init_unit(cfg, k, layout) for k in unit_keys]
+    params["units"] = jax.tree.map(lambda *xs: jnp.stack(xs), *units)
+    if layout.get("tail_locals"):
+        tail_keys = jax.random.split(jax.random.fold_in(k_units, 7), layout["tail_locals"])
+        tail = [_init_transformer_unit(
+            cfg.replace(local_global_ratio=0), k,
+            {"locals": 0})["block"] for k in tail_keys]
+        params["tail_local"] = jax.tree.map(lambda *xs: jnp.stack(xs), *tail)
+    if cfg.family == "hybrid":
+        # Zamba2 shared attention+FFN block (one copy, applied every unit)
+        k1, k2 = jax.random.split(k_shared)
+        params["shared"] = {
+            "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+            "attn": cm.init_attention(cfg, k1),
+            "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+            "ffn": cm.init_ffn(cfg, k2),
+        }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = cm.dense_init(k_head, (cfg.d_model, cfg.vocab_size), 0, dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward pieces
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RunCtx:
+    mesh: Optional[Mesh] = None
+    unroll_chunks: bool = False
+    q_chunk: int = 1024
+    rec_chunk: int = 128
+    n_units_override: Optional[int] = None     # 0 → skip stack (roofline)
+    kv_range_chunking: bool = False            # perf opt (EXPERIMENTS §Perf)
+    shard_heads: bool = False                  # perf opt (EXPERIMENTS §Perf)
+    remat_policy: str = "full"                 # full | dots (save matmul outs)
+
+    def head_sharding(self):
+        if not (self.shard_heads and self.mesh is not None):
+            return None
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        ba = tuple(a for a in ("pod", "data") if a in self.mesh.shape)
+        return NamedSharding(self.mesh, P(ba, None, "model", None))
+
+
+def _attn_block(blk, cfg: ModelConfig, x, pos, ctx: RunCtx, *, sliding: int,
+                causal: bool, use_moe: bool):
+    h = cm.rms_norm(x, blk["ln1"], cfg.norm_eps)
+    h = cm.attention(
+        blk["attn"], cfg, h, pos, causal=causal, sliding_window=sliding,
+        q_chunk=ctx.q_chunk, unroll_chunks=ctx.unroll_chunks,
+        kv_range_chunking=ctx.kv_range_chunking and causal,
+        head_sharding=ctx.head_sharding(),
+    )
+    x = x + h
+    h = cm.rms_norm(x, blk["ln2"], cfg.norm_eps)
+    if use_moe:
+        h, aux = moe_mod.moe_ffn(blk["moe"], cfg, h, ctx.mesh)
+    else:
+        h, aux = cm.ffn(blk["ffn"], cfg, h), jnp.float32(0)
+    return x + h, aux
+
+
+def _transformer_unit_fwd(cfg, unit, x, pos, ctx: RunCtx, layout):
+    aux = jnp.float32(0)
+    causal = not cfg.encoder_only
+    if layout["locals"]:
+        for i in range(layout["locals"]):
+            blk = jax.tree.map(lambda a: a[i], unit["local"])
+            x, a = _attn_block(blk, cfg, x, pos, ctx,
+                               sliding=cfg.sliding_window, causal=causal,
+                               use_moe=cfg.is_moe)
+            aux += a
+        x, a = _attn_block(unit["global"], cfg, x, pos, ctx, sliding=0,
+                           causal=causal, use_moe=cfg.is_moe)
+        aux += a
+    else:
+        x, a = _attn_block(unit["block"], cfg, x, pos, ctx,
+                           sliding=cfg.sliding_window, causal=causal,
+                           use_moe=cfg.is_moe)
+        aux += a
+    return x, aux
+
+
+def _xlstm_unit_fwd(cfg, unit, x, ctx: RunCtx, state=None, collect_state=False):
+    new_state: Dict[str, Any] = {}
+    m_states = []
+    if "mlstm" in unit:
+        n_m = jax.tree.leaves(unit["mlstm"])[0].shape[0]
+        for i in range(n_m):
+            blk = jax.tree.map(lambda a: a[i], unit["mlstm"])
+            st = None if state is None else jax.tree.map(lambda a: a[i], state["mlstm"])
+            h, st2 = rec.mlstm_mix(
+                blk["mix"], cfg, cm.rms_norm(x, blk["ln"], cfg.norm_eps),
+                chunk=ctx.rec_chunk, unroll_chunks=ctx.unroll_chunks, state=st,
+            )
+            x = x + h
+            m_states.append(st2)
+        if collect_state:
+            new_state["mlstm"] = jax.tree.map(lambda *xs: jnp.stack(xs), *m_states)
+    if "slstm" in unit:
+        blk = unit["slstm"]
+        st = None if state is None else state["slstm"]
+        h, st2 = rec.slstm_mix(
+            blk["mix"], cfg, cm.rms_norm(x, blk["ln"], cfg.norm_eps), state=st
+        )
+        x = x + h
+        if collect_state:
+            new_state["slstm"] = st2
+    return x, new_state
+
+
+def _zamba_unit_fwd(cfg, unit, shared, x, pos, ctx: RunCtx, state=None,
+                    collect_state=False):
+    new_state: Dict[str, Any] = {}
+    m_states = []
+    n_m = jax.tree.leaves(unit["mamba"])[0].shape[0]
+    for i in range(n_m):
+        blk = jax.tree.map(lambda a: a[i], unit["mamba"])
+        st = None if state is None else jax.tree.map(lambda a: a[i], state["mamba"])
+        h, st2 = rec.mamba2_mix(
+            blk["mix"], cfg, cm.rms_norm(x, blk["ln"], cfg.norm_eps),
+            chunk=ctx.rec_chunk, unroll_chunks=ctx.unroll_chunks, state=st,
+        )
+        x = x + h
+        m_states.append(st2)
+    if collect_state:
+        new_state["mamba"] = jax.tree.map(lambda *xs: jnp.stack(xs), *m_states)
+    # shared attention block (weights shared across units)
+    h = cm.rms_norm(x, shared["ln1"], cfg.norm_eps)
+    h = cm.attention(shared["attn"], cfg, h, pos, causal=True,
+                     q_chunk=ctx.q_chunk, unroll_chunks=ctx.unroll_chunks,
+                     kv_range_chunking=ctx.kv_range_chunking,
+                     head_sharding=ctx.head_sharding())
+    x = x + h
+    h = cm.rms_norm(x, shared["ln2"], cfg.norm_eps)
+    x = x + cm.ffn(shared["ffn"], cfg, h)
+    return x, new_state
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill-style)
+# ---------------------------------------------------------------------------
+
+
+def _embed_in(params, cfg: ModelConfig, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if cfg.frontend == "audio_frames":
+        x = batch["frames"].astype(cm.dtype_of(cfg))
+        B, S = x.shape[:2]
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        return x, pos
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    if cfg.scale_embed:
+        x = x * jnp.sqrt(jnp.asarray(cfg.d_model, x.dtype))
+    if cfg.rope_style == "mrope":
+        pos = batch.get("positions")
+        if pos is None:
+            pos = jnp.broadcast_to(jnp.arange(S)[None, None], (3, B, S))
+        return x, pos
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    return x, pos
+
+
+def _head(params, cfg: ModelConfig, x) -> jnp.ndarray:
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (x @ w).astype(jnp.float32)
+
+
+def forward(params, cfg: ModelConfig, batch, ctx: RunCtx = RunCtx()) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward. Returns (logits [B,S,V] f32, aux loss)."""
+    layout = unit_layout(cfg)
+    x, pos = _embed_in(params, cfg, batch)
+    n_units = layout["n_units"] if ctx.n_units_override is None else ctx.n_units_override
+
+    def unit_body(carry, unit):
+        x, aux = carry
+        if layout["kind"] == "transformer":
+            x, a = _transformer_unit_fwd(cfg, unit, x, pos, ctx, layout)
+        elif layout["kind"] == "xlstm":
+            x, _ = _xlstm_unit_fwd(cfg, unit, x, ctx)
+            a = jnp.float32(0)
+        else:
+            x, _ = _zamba_unit_fwd(cfg, unit, params["shared"], x, pos, ctx)
+            a = jnp.float32(0)
+        return (x, aux + a), None
+
+    body = unit_body
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if ctx.remat_policy == "dots" else None)
+        body = jax.checkpoint(unit_body, prevent_cse=False, policy=policy)
+
+    if n_units > 0:
+        units = jax.tree.map(lambda a: a[:n_units], params["units"])
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0)), units)
+    else:
+        aux = jnp.float32(0)
+    if layout.get("tail_locals") and (ctx.n_units_override is None
+                                      or ctx.n_units_override > 0):
+        for i in range(layout["tail_locals"]):
+            blk = jax.tree.map(lambda a: a[i], params["tail_local"])
+            x, a = _attn_block(blk, cfg, x, pos, ctx,
+                               sliding=cfg.sliding_window,
+                               causal=not cfg.encoder_only, use_moe=cfg.is_moe)
+            aux += a
+    logits = _head(params, cfg, x)
+    return logits, aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch, ctx: RunCtx = RunCtx()):
+    """Causal-LM (or masked-prediction for encoders) cross-entropy."""
+    logits, aux = forward(params, cfg, batch, ctx)
+    targets = batch["targets"]
+    mask = batch.get("loss_mask")
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # one-hot contraction instead of take_along_axis: partitions cleanly
+    # when the vocab axis is TP-sharded (no logits all-gather).
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    ll = jnp.sum(jnp.where(iota == targets[..., None], logits, 0.0), axis=-1)
+    nll = lse - ll
+    if mask is not None:
+        denom = jnp.maximum(mask.sum(), 1)
+        loss = (nll * mask).sum() / denom
+    else:
+        loss = nll.mean()
+    total = loss + cfg.moe.load_balance_loss * aux
+    return total, {"loss": loss, "aux": aux, "logits_mean_abs": jnp.mean(jnp.abs(logits))}
+
+
+# ---------------------------------------------------------------------------
+# KV-cache serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int) -> Dict[str, Any]:
+    """Decode state for all units (transformer KV / recurrent states)."""
+    layout = unit_layout(cfg)
+    n, dt = layout["n_units"], cm.dtype_of(cfg)
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    B = batch_size
+
+    def kv(S):
+        return {
+            "k": jnp.zeros((n, B, S, KV, hd), dt),
+            "v": jnp.zeros((n, B, S, KV, hd), dt),
+        }
+
+    if layout["kind"] == "transformer":
+        if layout["locals"]:
+            W = max(cfg.sliding_window, 1)
+            out = {
+                "local": {
+                    "k": jnp.zeros((n, layout["locals"], B, W, KV, hd), dt),
+                    "v": jnp.zeros((n, layout["locals"], B, W, KV, hd), dt),
+                    "pos": jnp.full((n, layout["locals"], B, W), -1, jnp.int32),
+                },
+                "global": kv(max_len),
+            }
+            if layout.get("tail_locals"):
+                t = layout["tail_locals"]
+                out["tail_local"] = {
+                    "k": jnp.zeros((t, B, W, KV, hd), dt),
+                    "v": jnp.zeros((t, B, W, KV, hd), dt),
+                    "pos": jnp.full((t, B, W), -1, jnp.int32),
+                }
+            return out
+        return {"block": kv(max_len)}
+    if layout["kind"] == "xlstm":
+        di = (cfg.ssm_expand or 2) * cfg.d_model
+        H = cfg.num_heads
+        hd_i = di // H
+        out: Dict[str, Any] = {}
+        m = layout["mlstm_per_unit"]
+        if m:
+            out["mlstm"] = (
+                jnp.zeros((n, m, B, H, hd_i, hd_i), jnp.float32),
+                jnp.zeros((n, m, B, H, hd_i), jnp.float32),
+            )
+        if layout["unit_layers"] > m:
+            hd_s = cfg.d_model // H
+            out["slstm"] = (
+                jnp.zeros((n, B, H, hd_s), jnp.float32),
+                jnp.ones((n, B, H, hd_s), jnp.float32),
+                jnp.zeros((n, B, H, hd_s), jnp.float32),
+            )
+        return out
+    # zamba hybrid: mamba states + shared-attn KV per unit
+    di = cfg.ssm_expand * cfg.d_model
+    Hm, dh, ds = di // 64, 64, cfg.ssm_state
+    m = layout["mamba_per_unit"]
+    W = cfg.ssm_conv - 1
+    return {
+        "mamba": (
+            jnp.zeros((n, m, B, Hm, dh, ds), jnp.float32),
+            jnp.zeros((n, m, B, W, di + 2 * ds), dt),
+        ),
+        "shared": kv(max_len),
+    }
+
+
+def decode_step(params, cfg: ModelConfig, token, pos, cache,
+                ctx: RunCtx = RunCtx(), embeds: Optional[jnp.ndarray] = None):
+    """One-token decode. token [B] int32 (or embeds [B, D]), pos [B] int32.
+    Returns (logits [B, V] f32, cache')."""
+    layout = unit_layout(cfg)
+    B = token.shape[0] if token is not None else embeds.shape[0]
+    if embeds is None:
+        x = params["embed"][token][:, None, :]             # [B,1,D]
+        if cfg.scale_embed:
+            x = x * jnp.sqrt(jnp.asarray(cfg.d_model, x.dtype))
+    else:
+        x = embeds[:, None, :].astype(cm.dtype_of(cfg))
+
+    def unit_body(x, xs):
+        unit, cache_u = xs
+        if layout["kind"] == "transformer":
+            x, cache_u = _transformer_unit_decode(cfg, unit, x, pos, cache_u, layout, ctx)
+        elif layout["kind"] == "xlstm":
+            x, cache_u = _xlstm_unit_decode(cfg, unit, x, cache_u, ctx)
+        else:
+            x, cache_u = _zamba_unit_decode(cfg, unit, params["shared"], x, pos,
+                                            cache_u, ctx)
+        return x, cache_u
+
+    if ctx.n_units_override == 0:          # roofline zero-stack variant
+        logits = _head(params, cfg, x)[:, 0]
+        return logits, cache
+    tail_cache = cache.get("tail_local")
+    if tail_cache is not None:
+        cache = {kk: vv for kk, vv in cache.items() if kk != "tail_local"}
+    x, new_cache = jax.lax.scan(unit_body, x, (params["units"], cache))
+    if tail_cache is not None:
+        tk, tv, tp = [], [], []
+        for i in range(layout["tail_locals"]):
+            blk = jax.tree.map(lambda a: a[i], params["tail_local"])
+            h = cm.rms_norm(x, blk["ln1"], cfg.norm_eps)
+            out, k2, v2, p2 = _ring_attention_decode(
+                blk["attn"], cfg, h, pos,
+                tail_cache["k"][i], tail_cache["v"][i], tail_cache["pos"][i])
+            x = x + out
+            h = cm.rms_norm(x, blk["ln2"], cfg.norm_eps)
+            x = x + cm.ffn(blk["ffn"], cfg, h)
+            tk.append(k2); tv.append(v2); tp.append(p2)
+        new_cache = dict(new_cache)
+        new_cache["tail_local"] = {"k": jnp.stack(tk), "v": jnp.stack(tv),
+                                   "pos": jnp.stack(tp)}
+    logits = _head(params, cfg, x)[:, 0]
+    return logits, new_cache
+
+
+def _transformer_unit_decode(cfg, unit, x, pos, cache_u, layout, ctx=RunCtx()):
+    new_cache: Dict[str, Any] = {}
+    if layout["locals"]:
+        lk, lv, lpos = [], [], []
+        for i in range(layout["locals"]):
+            blk = jax.tree.map(lambda a: a[i], unit["local"])
+            h = cm.rms_norm(x, blk["ln1"], cfg.norm_eps)
+            out, k2, v2, p2 = _ring_attention_decode(
+                blk["attn"], cfg, h, pos,
+                cache_u["local"]["k"][i], cache_u["local"]["v"][i],
+                cache_u["local"]["pos"][i],
+            )
+            x = x + out
+            h = cm.rms_norm(x, blk["ln2"], cfg.norm_eps)
+            x = x + (cm.ffn(blk["ffn"], cfg, h) if "ffn" in blk
+                     else moe_mod.moe_ffn(blk["moe"], cfg, h, ctx.mesh)[0])
+            lk.append(k2)
+            lv.append(v2)
+            lpos.append(p2)
+        new_cache["local"] = {
+            "k": jnp.stack(lk), "v": jnp.stack(lv), "pos": jnp.stack(lpos)
+        }
+        blk = unit["global"]
+        h = cm.rms_norm(x, blk["ln1"], cfg.norm_eps)
+        out, k2, v2 = cm.attention_decode(
+            blk["attn"], cfg, h, pos, cache_u["global"]["k"], cache_u["global"]["v"]
+        )
+        x = x + out
+        h = cm.rms_norm(x, blk["ln2"], cfg.norm_eps)
+        x = x + (cm.ffn(blk["ffn"], cfg, h) if "ffn" in blk
+                 else moe_mod.moe_ffn(blk["moe"], cfg, h, ctx.mesh)[0])
+        new_cache["global"] = {"k": k2, "v": v2}
+        return x, new_cache
+    blk = unit["block"]
+    h = cm.rms_norm(x, blk["ln1"], cfg.norm_eps)
+    out, k2, v2 = cm.attention_decode(
+        blk["attn"], cfg, h, pos, cache_u["block"]["k"], cache_u["block"]["v"],
+        sliding_window=cfg.sliding_window,
+    )
+    x = x + out
+    h = cm.rms_norm(x, blk["ln2"], cfg.norm_eps)
+    x = x + (cm.ffn(blk["ffn"], cfg, h) if "ffn" in blk
+             else moe_mod.moe_ffn(blk["moe"], cfg, h, ctx.mesh)[0])
+    return x, {"block": {"k": k2, "v": v2}}
+
+
+def _ring_attention_decode(p, cfg, x, pos, k_cache, v_cache, pos_cache):
+    """Sliding-window decode with a ring-buffer cache [B, W, KV, hd]."""
+    B = x.shape[0]
+    W = k_cache.shape[1]
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q, k, v = cm._qkv(p, cfg, x)
+    if cfg.rope_style == "rope":
+        q = cm.apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = cm.apply_rope(k, pos[:, None], cfg.rope_theta)
+    slot = pos % W
+    oh = jax.nn.one_hot(slot, W, dtype=k.dtype)               # [B, W]
+    k2 = k_cache * (1 - oh[:, :, None, None]) + oh[:, :, None, None] * k
+    v2 = v_cache * (1 - oh[:, :, None, None]) + oh[:, :, None, None] * v
+    p2 = pos_cache * (1 - oh.astype(jnp.int32)) + oh.astype(jnp.int32) * pos[:, None]
+    kk = cm._repeat_kv(k2, H // KV)
+    vv = cm._repeat_kv(v2, H // KV)
+    m = (p2 >= 0) & (p2 <= pos[:, None]) & (pos[:, None] - p2 < cfg.sliding_window)
+    out = cm._attend_dense(q, kk, vv, m[:, None, :], cfg.attn_logit_softcap)
+    out = out.reshape(B, 1, H * hd) @ p["wo"]
+    return out, k2, v2, p2
+
+
+def _xlstm_unit_decode(cfg, unit, x, cache_u, ctx):
+    st = dict(cache_u)
+    # reuse the sequence mixers with S=1
+    new_state = {}
+    if "mlstm" in unit:
+        n_m = jax.tree.leaves(unit["mlstm"])[0].shape[0]
+        Cs, ns = [], []
+        for i in range(n_m):
+            blk = jax.tree.map(lambda a: a[i], unit["mlstm"])
+            sti = jax.tree.map(lambda a: a[i], st["mlstm"])
+            h, (C2, n2) = rec.mlstm_mix(
+                blk["mix"], cfg, cm.rms_norm(x, blk["ln"], cfg.norm_eps),
+                chunk=1, state=sti,
+            )
+            x = x + h
+            Cs.append(C2)
+            ns.append(n2)
+        new_state["mlstm"] = (jnp.stack(Cs), jnp.stack(ns))
+    if "slstm" in unit:
+        blk = unit["slstm"]
+        h, st2 = rec.slstm_mix(
+            blk["mix"], cfg, cm.rms_norm(x, blk["ln"], cfg.norm_eps),
+            state=st["slstm"],
+        )
+        x = x + h
+        new_state["slstm"] = st2
+    return x, new_state
+
+
+def _zamba_unit_decode(cfg, unit, shared, x, pos, cache_u, ctx):
+    new_state: Dict[str, Any] = {}
+    n_m = jax.tree.leaves(unit["mamba"])[0].shape[0]
+    ssms, convs = [], []
+    for i in range(n_m):
+        blk = jax.tree.map(lambda a: a[i], unit["mamba"])
+        sti = (cache_u["mamba"][0][i], cache_u["mamba"][1][i])
+        h, (ssm2, conv2) = rec.mamba2_mix(
+            blk["mix"], cfg, cm.rms_norm(x, blk["ln"], cfg.norm_eps),
+            chunk=1, state=sti,
+        )
+        x = x + h
+        ssms.append(ssm2)
+        convs.append(conv2)
+    new_state["mamba"] = (jnp.stack(ssms), jnp.stack(convs))
+    h = cm.rms_norm(x, shared["ln1"], cfg.norm_eps)
+    out, k2, v2 = cm.attention_decode(
+        shared["attn"], cfg, h, pos, cache_u["shared"]["k"], cache_u["shared"]["v"]
+    )
+    x = x + out
+    h = cm.rms_norm(x, shared["ln2"], cfg.norm_eps)
+    x = x + cm.ffn(shared["ffn"], cfg, h)
+    new_state["shared"] = {"k": k2, "v": v2}
+    return x, new_state
+
+
+def prefill(params, cfg: ModelConfig, batch, ctx: RunCtx = RunCtx()):
+    """Prefill = full forward; for serving-shape dry-runs the logits of the
+    last position are returned (cache construction is exercised by decode
+    smoke tests at small scale — see DESIGN.md)."""
+    logits, _ = forward(params, cfg, batch, ctx)
+    return logits[:, -1]

@@ -1,0 +1,324 @@
+"""Recurrent sequence mixers: mLSTM / sLSTM (xLSTM) and Mamba2 (Zamba2).
+
+Training/prefill uses a *chunkwise-parallel* formulation (linear-attention
+algebra): within a chunk the quadratic masked form runs on the MXU; across
+chunks a compact state is carried by a scan (or an unrolled Python loop
+when ``unroll_chunks`` — used by the dry-run so per-layer cost analysis is
+exact, see DESIGN.md). Decode carries the same state one token at a time.
+
+Simplifications vs the source papers (recorded in DESIGN.md §Arch-
+applicability): mLSTM uses sigmoid forget / exp input gating with a
+per-chunk max stabilizer (same compute/memory pattern, not bit-identical
+to xLSTM's m-state); Zamba2's shared attention block omits the
+concat-with-embedding LoRA path.
+
+State conventions (per layer):
+  mLSTM:  C [B, H, hd, hd], n [B, H, hd]
+  sLSTM:  c [B, H, hd], n [B, H, hd], h [B, H, hd]
+  mamba2: ssm [B, Hm, dh, ds], conv [B, W-1, d_conv_in]
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.common import dense_init, dtype_of, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix-memory LSTM) — linear-attention chunkwise form
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(cfg: ModelConfig, key) -> Dict[str, Any]:
+    d = cfg.d_model
+    H = cfg.num_heads
+    di = cfg.ssm_expand * d if cfg.ssm_expand else 2 * d
+    hd = di // H
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * di), 0, dt),       # (x, gate)
+        "wq": dense_init(ks[1], (di, di), 0, dt),
+        "wk": dense_init(ks[2], (di, di), 0, dt),
+        "wv": dense_init(ks[3], (di, di), 0, dt),
+        "w_if": dense_init(ks[4], (di, 2 * H), 0, jnp.float32),  # input/forget gates
+        "w_down": dense_init(ks[5], (di, d), 0, dt),
+        "norm": jnp.zeros((di,), jnp.float32),
+    }
+
+
+def _mlstm_chunk(q, k, v, ig, fg, C, n):
+    """One chunk of the mLSTM recurrence in parallel form.
+
+    q/k/v [B, c, H, hd]; ig/fg [B, c, H] (input gate ≥0, forget ∈(0,1)).
+    State (C [B,H,hd,hd], n [B,H,hd]). Returns (h [B,c,H,hd], C', n').
+    """
+    Bsz, c, H, hd = q.shape
+    logf = jnp.log(fg + 1e-9)                                # [B,c,H]
+    cum = jnp.cumsum(logf, axis=1)                           # Π f up to t (inclusive)
+    tot = cum[:, -1:]                                        # [B,1,H]
+    # decay from state entry to position t: Π_{s≤t} f_s
+    dec_in = jnp.exp(cum)                                    # [B,c,H]
+    # pairwise decay t←s (s<t): exp(cum_t − cum_s) · i_s ; causal mask
+    a = cum[:, :, None, :] - cum[:, None, :, :]              # [B,t,s,H]
+    causal = jnp.tril(jnp.ones((c, c), bool))
+    w = jnp.where(causal[None, :, :, None], jnp.exp(a), 0.0) * ig[:, None, :, :]
+    # intra-chunk: h_intra[t] = Σ_s w[t,s] (q_t·k_s) v_s ; n_intra = Σ_s w k_s
+    qf, kf, vf = (a.astype(jnp.float32) for a in (q, k, v))
+    qk = jnp.einsum("bthd,bshd->btsh", qf, kf)
+    h_intra = jnp.einsum("btsh,btsh,bshd->bthd", qk, w, vf)
+    n_intra = jnp.einsum("btsh,bshd->bthd", w, kf)
+    # inter-chunk: state contribution
+    h_inter = jnp.einsum("bthd,bhde->bthe", qf, C) * dec_in[..., None]
+    n_inter = n[:, None] * dec_in[..., None]                 # [B,c,H,hd]
+    num = h_intra + h_inter
+    den = jnp.einsum("bthd,bthd->bth", qf, n_intra + n_inter)
+    h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    # state update: C' = (Π f) C + Σ_s (Π_{r>s} f_r) i_s k_s v_sᵀ
+    decay_out = jnp.exp(tot[:, 0, :, None, None])            # [B,H,1,1]
+    wk_s = jnp.exp(tot - cum) * ig                           # [B,c,H]
+    C_new = C * decay_out + jnp.einsum("bsh,bshd,bshe->bhde", wk_s, kf, vf)
+    n_new = n * decay_out[..., 0] + jnp.einsum("bsh,bshd->bhd", wk_s, kf)
+    return h.astype(q.dtype), C_new, n_new
+
+
+def mlstm_mix(
+    p, cfg: ModelConfig, x: jnp.ndarray, *, chunk: int = 128,
+    unroll_chunks: bool = False,
+    state: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """x [B, S, D] → (y [B, S, D], state'). Works for train (state=None) and
+    stateful prefill/decode-chunk."""
+    B, S, D = x.shape
+    H = cfg.num_heads
+    up = x @ p["w_up"]
+    di = up.shape[-1] // 2
+    inner, gate = up[..., :di], up[..., di:]
+    hd = di // H
+    q = (inner @ p["wq"]).reshape(B, S, H, hd)
+    k = (inner @ p["wk"]).reshape(B, S, H, hd) / jnp.sqrt(jnp.asarray(hd, x.dtype))
+    v = (inner @ p["wv"]).reshape(B, S, H, hd)
+    gif = inner.astype(jnp.float32) @ p["w_if"]
+    ig = jnp.exp(jnp.minimum(gif[..., :H], 8.0))             # [B,S,H]
+    fg = jax.nn.sigmoid(gif[..., H:])
+
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+    else:
+        C0, n0 = state
+
+    c = min(chunk, S)
+    nchunks = -(-S // c)
+    Sp = nchunks * c
+    pad = Sp - S
+
+    def pad_t(a):
+        return jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+
+    qs, ks_, vs, igs, fgs = map(pad_t, (q, k, v, ig, fg))
+    # padded steps: fg=1, ig=0 → no-op on state
+    if pad:
+        igs = igs.at[:, S:].set(0.0)
+        fgs = fgs.at[:, S:].set(1.0)
+
+    def chunk_step(carry, idx):
+        C, n = carry
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, idx * c, c, 1)
+        h, C, n = _mlstm_chunk(sl(qs), sl(ks_), sl(vs), sl(igs), sl(fgs), C, n)
+        return (C, n), h
+
+    if unroll_chunks:
+        hs = []
+        carry = (C0, n0)
+        for i in range(nchunks):
+            carry, h = chunk_step(carry, i)
+            hs.append(h)
+        h = jnp.concatenate(hs, axis=1)
+        C0, n0 = carry
+    else:
+        (C0, n0), hs = jax.lax.scan(chunk_step, (C0, n0), jnp.arange(nchunks))
+        h = jnp.moveaxis(hs, 0, 1).reshape(B, Sp, H, hd)
+    h = h[:, :S].reshape(B, S, di)
+    h = rms_norm(h, p["norm"], cfg.norm_eps)
+    y = (h * jax.nn.silu(gate)) @ p["w_down"]
+    return y, (C0, n0)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar-memory LSTM with recurrent weights) — sequential
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(cfg: ModelConfig, key) -> Dict[str, Any]:
+    d = cfg.d_model
+    H = cfg.num_heads
+    hd = d // H
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": dense_init(ks[0], (d, 4 * d), 0, dt),        # z,i,f,o pre-acts
+        "r": dense_init(ks[1], (H, hd, 4 * hd), 1, jnp.float32),
+        "w_down": dense_init(ks[2], (d, d), 0, dt),
+        "norm": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def slstm_mix(
+    p, cfg: ModelConfig, x: jnp.ndarray,
+    state: Optional[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]] = None,
+    **_,
+) -> Tuple[jnp.ndarray, Tuple]:
+    B, S, D = x.shape
+    H = cfg.num_heads
+    hd = D // H
+    pre = (x @ p["w_in"]).reshape(B, S, H, 4 * hd).astype(jnp.float32)
+    if state is None:
+        cc = jnp.zeros((B, H, hd), jnp.float32)
+        nn_ = jnp.ones((B, H, hd), jnp.float32)
+        hh = jnp.zeros((B, H, hd), jnp.float32)
+    else:
+        cc, nn_, hh = state
+
+    def step(carry, pre_t):
+        c, n, h = carry                                       # [B,H,hd]
+        rec = jnp.einsum("bhd,hde->bhe", h, p["r"])           # [B,H,4hd]
+        z, i, f, o = jnp.split(pre_t + rec, 4, axis=-1)
+        z = jnp.tanh(z)
+        i = jnp.exp(jnp.minimum(i, 8.0))
+        f = jax.nn.sigmoid(f)
+        o = jax.nn.sigmoid(o)
+        c = f * c + i * z
+        n = f * n + i
+        h = o * c / jnp.maximum(jnp.abs(n), 1.0)
+        return (c, n, h), h
+
+    (cc, nn_, hh), hs = jax.lax.scan(step, (cc, nn_, hh), jnp.moveaxis(pre, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, S, D).astype(x.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    return y @ p["w_down"], (cc, nn_, hh)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) — chunkwise linear-attention form
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2(cfg: ModelConfig, key) -> Dict[str, Any]:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    ds = cfg.ssm_state
+    dh = 64                                                   # head dim
+    Hm = di // dh
+    dt_ = dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    conv_in = di + 2 * ds
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * di + 2 * ds + Hm), 0, dt_),  # z, xBC, dt
+        "conv": dense_init(ks[1], (cfg.ssm_conv, conv_in), 0, jnp.float32) * 0.5,
+        "A_log": jnp.zeros((Hm,), jnp.float32) + jnp.log(jnp.arange(1, Hm + 1, dtype=jnp.float32)),
+        "D": jnp.ones((Hm,), jnp.float32),
+        "dt_bias": jnp.zeros((Hm,), jnp.float32),
+        "norm": jnp.zeros((di,), jnp.float32),
+        "w_down": dense_init(ks[2], (di, d), 0, dt_),
+    }
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, conv_state: Optional[jnp.ndarray]):
+    """Depthwise causal conv. xbc [B, S, C], w [W, C]. Returns (y, new_state
+    [B, W-1, C])."""
+    B, S, C = xbc.shape
+    W = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((B, W - 1, C), xbc.dtype)
+    ext = jnp.concatenate([conv_state, xbc], axis=1)          # [B, S+W-1, C]
+    y = sum(ext[:, i : i + S] * w[i] for i in range(W))
+    return jax.nn.silu(y), ext[:, -(W - 1) :] if W > 1 else jnp.zeros((B, 0, C), xbc.dtype)
+
+
+def _ssd_chunk(xh, dt, A, Bm, Cm, ssm):
+    """One SSD chunk. xh [B,c,Hm,dh]; dt [B,c,Hm]; A [Hm] (<0); Bm/Cm
+    [B,c,ds]; ssm [B,Hm,dh,ds]. Returns (y, ssm')."""
+    Bsz, c, Hm, dh = xh.shape
+    logf = dt * A[None, None, :]                              # [B,c,Hm] ≤ 0
+    cum = jnp.cumsum(logf, axis=1)
+    tot = cum[:, -1]
+    dec_in = jnp.exp(cum)                                     # decay state→t
+    a = cum[:, :, None, :] - cum[:, None, :, :]
+    causal = jnp.tril(jnp.ones((c, c), bool))
+    w = jnp.where(causal[None, :, :, None], jnp.exp(a), 0.0)  # [B,t,s,Hm]
+    cb = jnp.einsum("bts,btsh->btsh", jnp.einsum("btn,bsn->bts", Cm, Bm), w)
+    y_intra = jnp.einsum("btsh,bsh,bshd->bthd", cb, dt, xh.astype(jnp.float32))
+    y_inter = jnp.einsum("btn,bhdn->bthd", Cm, ssm) * dec_in[..., None]
+    y = y_intra + y_inter
+    decay_out = jnp.exp(tot)[:, :, None, None]                # [B,Hm,1,1]
+    wk = jnp.exp(tot[:, None, :] - cum) * dt                  # [B,c,Hm]
+    ssm_new = ssm * decay_out + jnp.einsum(
+        "bsh,bshd,bsn->bhdn", wk, xh.astype(jnp.float32), Bm
+    )
+    return y, ssm_new
+
+
+def mamba2_mix(
+    p, cfg: ModelConfig, x: jnp.ndarray, *, chunk: int = 128,
+    unroll_chunks: bool = False,
+    state: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """x [B,S,D] → (y, (ssm_state, conv_state))."""
+    B, S, D = x.shape
+    di = cfg.ssm_expand * D
+    ds = cfg.ssm_state
+    dh = 64
+    Hm = di // dh
+    proj = x @ p["w_in"]
+    z = proj[..., :di]
+    xbc = proj[..., di : 2 * di + 2 * ds]
+    dt_pre = proj[..., 2 * di + 2 * ds :].astype(jnp.float32)  # [B,S,Hm]
+    ssm0, conv0 = (None, None) if state is None else state
+    xbc_c, conv_new = _causal_conv(xbc, p["conv"], conv0)
+    xh = xbc_c[..., :di].reshape(B, S, Hm, dh)
+    Bm = xbc_c[..., di : di + ds].astype(jnp.float32)
+    Cm = xbc_c[..., di + ds :].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_pre + p["dt_bias"])               # [B,S,Hm]
+    A = -jnp.exp(p["A_log"])                                  # [Hm] < 0
+
+    if ssm0 is None:
+        ssm0 = jnp.zeros((B, Hm, dh, ds), jnp.float32)
+
+    c = min(chunk, S)
+    nchunks = -(-S // c)
+    Sp = nchunks * c
+    pad = Sp - S
+    pad_t = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+    xh_p, dt_p, Bm_p, Cm_p = map(pad_t, (xh, dt, Bm, Cm))
+    if pad:
+        dt_p = dt_p.at[:, S:].set(0.0)                        # no-op steps
+
+    def chunk_step(carry, idx):
+        ssm = carry
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, idx * c, c, 1)
+        y, ssm = _ssd_chunk(sl(xh_p), sl(dt_p), A, sl(Bm_p), sl(Cm_p), ssm)
+        return ssm, y
+
+    if unroll_chunks:
+        ys = []
+        ssm = ssm0
+        for i in range(nchunks):
+            ssm, y = chunk_step(ssm, i)
+            ys.append(y)
+        y = jnp.concatenate(ys, axis=1)
+        ssm0 = ssm
+    else:
+        ssm0, ys = jax.lax.scan(chunk_step, ssm0, jnp.arange(nchunks))
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, Sp, Hm, dh)
+    y = y[:, :S]
+    y = y + xh * p["D"][None, None, :, None]                  # skip
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    return y @ p["w_down"], (ssm0, conv_new)

@@ -1,0 +1,4 @@
+from repro.runtime.elastic import ClusterState, replan_on_failure
+from repro.runtime.straggler import HedgingExecutor, HedgeStats
+
+__all__ = ["ClusterState", "replan_on_failure", "HedgingExecutor", "HedgeStats"]

@@ -1,0 +1,60 @@
+"""Straggler mitigation: hedged dispatch with deadline + replica re-issue.
+
+The serving engine dispatches per-shard work through this executor. If a
+shard's result misses its deadline, the work is re-issued to the replica
+holder (in HARMONY's layout, the dimension-block peers of a vector shard
+hold disjoint *columns* of the same rows, so the hedge target is the
+next live shard that can recompute the visit after a cheap re-route).
+
+In this single-process container the "nodes" are callables and latency is
+simulated; the scheduling logic (deadline, hedge, first-result-wins) is
+exactly what a multi-host deployment would run.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+
+@dataclass
+class HedgeStats:
+    dispatched: int = 0
+    hedged: int = 0
+    wasted: int = 0                    # hedges whose primary also finished
+
+
+class HedgingExecutor:
+    """Deadline-hedged execution over a set of worker callables.
+
+    Workers are ``fn(task) -> result``; ``latency_fn(worker, task)``
+    simulates per-worker service time (tests inject stragglers there).
+    """
+
+    def __init__(
+        self,
+        workers: List[Callable[[Any], Any]],
+        deadline_s: float,
+        latency_fn: Optional[Callable[[int, Any], float]] = None,
+    ):
+        self.workers = workers
+        self.deadline_s = deadline_s
+        self.latency_fn = latency_fn or (lambda w, t: 0.0)
+        self.stats = HedgeStats()
+
+    def run(self, task: Any, primary: int, replica: Optional[int] = None) -> Tuple[Any, int]:
+        """Returns (result, worker_that_served). Simulated time: if the
+        primary's latency exceeds the deadline, the hedge fires and the
+        faster of the two serves the request."""
+        self.stats.dispatched += 1
+        lat_p = self.latency_fn(primary, task)
+        if lat_p <= self.deadline_s or replica is None:
+            return self.workers[primary](task), primary
+        # hedge fires at the deadline
+        self.stats.hedged += 1
+        lat_r = self.deadline_s + self.latency_fn(replica, task)
+        if lat_p <= lat_r:
+            self.stats.wasted += 1
+            return self.workers[primary](task), primary
+        return self.workers[replica](task), replica

@@ -1,0 +1,3 @@
+from repro.serve.engine import HarmonyServer, ServeStats
+
+__all__ = ["HarmonyServer", "ServeStats"]

@@ -1,0 +1,129 @@
+"""Batched ANNS serving engine — the paper-kind production serving loop.
+
+Requests (query vectors) arrive on a queue; the engine forms batches
+(window = ``query_block``, the vector-level pipeline granularity of
+Alg. 1), routes them through the planner's current plan, executes the
+HARMONY staged engine, and returns per-request top-K. Integration points:
+
+* **load-aware re-planning**: a sliding workload sample (recent probes)
+  periodically refreshes the plan via the §4.2 cost model;
+* **elastic**: node failures trigger ``replan_on_failure`` — results are
+  unchanged, capacity shrinks;
+* **straggler hedging**: per-visit deadlines re-issue work to peers
+  (``HedgingExecutor``);
+* results cache the paper's stats (pruning ratios, per-shard load) for
+  the benchmark harnesses.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.config import HarmonyConfig
+from repro.core import (
+    IVFIndex,
+    ShardedCorpus,
+    assign_queries,
+    harmony_search,
+    plan_search,
+    preassign,
+)
+from repro.runtime import ClusterState, replan_on_failure
+
+
+@dataclass
+class ServeStats:
+    batches: int = 0
+    queries: int = 0
+    wall_s: float = 0.0
+    replans: int = 0
+    latencies_ms: List[float] = field(default_factory=list)
+
+    @property
+    def qps(self) -> float:
+        return self.queries / self.wall_s if self.wall_s else 0.0
+
+    def latency_pct(self, p: float) -> float:
+        return float(np.percentile(self.latencies_ms, p)) if self.latencies_ms else 0.0
+
+
+class HarmonyServer:
+    """Single-process serving engine over the HARMONY core."""
+
+    def __init__(
+        self,
+        index: IVFIndex,
+        n_nodes: int,
+        cfg: Optional[HarmonyConfig] = None,
+        replan_every: int = 0,          # batches between plan refreshes (0=off)
+        workload_window: int = 2048,
+    ):
+        self.index = index
+        self.cfg = cfg or index.cfg
+        self.cluster = ClusterState.fresh(n_nodes)
+        self.replan_every = replan_every
+        self._recent_probes: Deque[np.ndarray] = deque(maxlen=workload_window)
+        self.stats = ServeStats()
+        self._plan_decision, self.corpus = self._plan(None)
+
+    # ------------------------------------------------------------- planning
+    def _plan(self, probes_sample):
+        decision = plan_search(
+            self.index, self.cluster.n_live, self.cfg, probes_sample=probes_sample
+        )
+        return decision, preassign(self.index, decision.plan)
+
+    def refresh_plan(self):
+        sample = (
+            np.concatenate(list(self._recent_probes), axis=0)
+            if self._recent_probes
+            else None
+        )
+        self._plan_decision, self.corpus = self._plan(sample)
+        self.stats.replans += 1
+
+    @property
+    def plan(self):
+        return self._plan_decision.plan
+
+    # -------------------------------------------------------------- elastic
+    def fail_node(self, node: int):
+        self.cluster.fail(node)
+        sample = (
+            np.concatenate(list(self._recent_probes), axis=0)
+            if self._recent_probes
+            else None
+        )
+        self._plan_decision, self.corpus = replan_on_failure(
+            self.index, self.cluster, self.cfg, sample
+        )
+        self.stats.replans += 1
+
+    def join_node(self):
+        self.cluster.join()
+        self.refresh_plan()
+
+    # -------------------------------------------------------------- serving
+    def search_batch(self, queries: np.ndarray, k: Optional[int] = None):
+        """One batch through the engine; records workload + stats."""
+        t0 = time.perf_counter()
+        probes = assign_queries(self.index, queries)
+        self._recent_probes.append(probes)
+        res = harmony_search(self.index, self.corpus, queries, k=k)
+        dt = time.perf_counter() - t0
+        self.stats.batches += 1
+        self.stats.queries += queries.shape[0]
+        self.stats.wall_s += dt
+        self.stats.latencies_ms.append(dt * 1e3)
+        if self.replan_every and self.stats.batches % self.replan_every == 0:
+            self.refresh_plan()
+        return res
+
+    def serve(self, request_stream, k: Optional[int] = None):
+        """Drain an iterable of query batches; returns list of results."""
+        return [self.search_batch(q, k) for q in request_stream]

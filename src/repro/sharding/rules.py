@@ -1,0 +1,212 @@
+"""Sharding rules: logical-parameter-name → mesh PartitionSpec.
+
+TP over ``model``; DP (+FSDP where ``cfg.fsdp_params``) over ``data`` and
+``pod``; MoE experts over ``data`` (EP). Decode caches shard batch over
+(pod, data) and KV-heads over ``model`` when divisible, else the sequence
+axis (GSPMD then lowers the softmax statistics to cross-shard reduces —
+flash-decode); batch-1 long-context cells shard the sequence axis over
+every available mesh axis.
+
+All rules operate on *trailing* dims — leading unit/local stacking axes
+are padded with None automatically.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ShapeSpec
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _pad(spec: Sequence, ndim: int) -> P:
+    spec = list(spec)
+    assert len(spec) <= ndim, (spec, ndim)
+    return P(*([None] * (ndim - len(spec)) + spec))
+
+
+def _sanitize(spec: P, shape: Sequence[int], mesh: Mesh) -> P:
+    """Drop mesh axes from dims they don't divide (jit in_shardings
+    requires divisible argument dims — e.g. hubert's vocab of 504)."""
+    out = []
+    for dim, s in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if s is None:
+            out.append(None)
+            continue
+        axes = (s,) if isinstance(s, str) else tuple(s)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        out.append(s if dim % size == 0 else None)
+    return P(*out)
+
+
+def _ns(mesh: Mesh, spec: P, shape: Sequence[int]) -> NamedSharding:
+    return NamedSharding(mesh, _sanitize(spec, shape, mesh))
+
+
+def _base_param_spec(name: str, parent: str, ndim: int, cfg: ModelConfig):
+    """Trailing-dims spec for one parameter leaf."""
+    fsdp = "data" if cfg.fsdp_params else None
+    if parent == "moe":
+        if name in ("w1", "w3"):
+            return ("data", None, "model")
+        if name == "w2":
+            return ("data", "model", None)
+        if name == "router":
+            return (None, None)
+    if name == "embed":
+        # tied embeddings double as the LM head → vocab must be sharded so
+        # logits come out vocab-sharded; untied tables shard d_model.
+        return ("model", None) if cfg.tie_embeddings else (None, "model")
+    if name == "lm_head":
+        return (fsdp, "model")
+    if name in ("wq", "wk", "wv", "w1", "w3", "w_up", "w_in"):
+        return (fsdp, "model")
+    if name in ("wo", "w2", "w_down"):
+        return ("model", fsdp)
+    if name in ("bq", "bk", "bv"):
+        return ("model",)
+    if name == "conv":
+        return (None, "model")
+    if name == "r":                      # sLSTM recurrent kernel [H, hd, 4hd]
+        return (None, None, "model")
+    # norms, gates, scalars (ln*, norm, A_log, D, dt_bias, final_norm, w_if)
+    return ()
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    return tuple(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def param_shardings(params_shape, cfg: ModelConfig, mesh: Mesh):
+    """Pytree (matching params) of NamedSharding. ``params_shape`` may be
+    the real params or a jax.eval_shape result."""
+
+    def leaf_spec(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        parent = names[-2] if len(names) > 1 else ""
+        # adafactor factored stats mirror their parameter's spec minus a dim
+        if name in ("vr", "vc"):
+            pname = names[-2]
+            pparent = names[-3] if len(names) > 2 else ""
+            base = list(_base_param_spec(pname, pparent, leaf.ndim + 1, cfg))
+            full = [None] * (leaf.ndim + 1 - len(base)) + base
+            spec = full[:-1] if name == "vr" else full[:-2] + full[-1:]
+            return _ns(mesh, P(*spec), leaf.shape)
+        if name == "v" and parent not in ("", "moe"):
+            # unfactored adafactor slot: mirror the param itself
+            pname, pparent = names[-2], names[-3] if len(names) > 2 else ""
+            base = _base_param_spec(pname, pparent, leaf.ndim, cfg)
+            return _ns(mesh, _pad(base, leaf.ndim), leaf.shape)
+        base = _base_param_spec(name, parent, leaf.ndim, cfg)
+        return _ns(mesh, _pad(base, leaf.ndim), leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_shape)
+
+
+def opt_shardings(opt_shape, params_shape, cfg: ModelConfig, mesh: Mesh):
+    """AdamW mu/nu mirror params; adafactor handled by name rules above."""
+    rep = NamedSharding(mesh, P())
+
+    def leaf_spec(path, leaf):
+        names = _path_names(path)
+        if names[-1] in ("step", "gnorm"):
+            return rep
+        # strip the leading "mu"/"nu"/"v" container and apply param rules
+        name = names[-1]
+        parent = names[-2] if len(names) > 1 else ""
+        if name in ("vr", "vc"):
+            pname = names[-2]
+            pparent = names[-3] if len(names) > 2 else ""
+            base = list(_base_param_spec(pname, pparent, leaf.ndim + 1, cfg))
+            full = [None] * (leaf.ndim + 1 - len(base)) + base
+            spec = full[:-1] if name == "vr" else full[:-2] + full[-1:]
+            return _ns(mesh, P(*spec), leaf.shape)
+        if name == "v":
+            pname = names[-2]
+            pparent = names[-3] if len(names) > 2 else ""
+            base = _base_param_spec(pname, pparent, leaf.ndim, cfg)
+            return _ns(mesh, _pad(base, leaf.ndim), leaf.shape)
+        base = _base_param_spec(name, parent, leaf.ndim, cfg)
+        return _ns(mesh, _pad(base, leaf.ndim), leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, opt_shape)
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh):
+    """Shardings for the train/prefill input batch dict."""
+    ba = batch_axes(mesh)
+    bsz = int(np.prod([mesh.shape[a] for a in ba]))
+    bspec = ba if shape.global_batch % bsz == 0 and shape.global_batch >= bsz else None
+
+    def ns(*spec):
+        return NamedSharding(mesh, P(*spec))
+
+    out = {"tokens": ns(bspec, None), "targets": ns(bspec, None)}
+    if cfg.frontend == "audio_frames":
+        out = {"frames": ns(bspec, None, None), "targets": ns(bspec, None),
+               "loss_mask": ns(bspec, None)}
+    if cfg.rope_style == "mrope":
+        out["positions"] = ns(None, bspec, None)
+    return out
+
+
+def cache_shardings(cfg: ModelConfig, cache_shape, shape: ShapeSpec, mesh: Mesh):
+    """Shardings for the decode cache pytree (from jax.eval_shape)."""
+    ba = batch_axes(mesh)
+    bsz = int(np.prod([mesh.shape[a] for a in ba]))
+    B = shape.global_batch
+    b_ok = B % bsz == 0 and B >= bsz
+    model_size = mesh.shape["model"]
+    all_axes = ba + ("model",)
+
+    def leaf_spec(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        nd = leaf.ndim
+        if name in ("k", "v") and nd >= 4:
+            # [..., B, S, KV, hd]
+            lead = nd - 4
+            KV = leaf.shape[-2]
+            S = leaf.shape[-3]
+            if b_ok:
+                bs = ba
+                kv_spec = "model" if KV % model_size == 0 else None
+                s_spec = None if kv_spec else ("model" if S % model_size == 0 else None)
+            else:
+                bs = None
+                # batch-1 long context: shard the sequence over everything
+                s_spec = all_axes if S % (bsz * model_size) == 0 else "model"
+                kv_spec = None
+            spec = [None] * lead + [bs, s_spec, kv_spec, None]
+            return NamedSharding(mesh, P(*spec))
+        if name == "pos" and nd >= 2:
+            lead = nd - 2
+            return NamedSharding(mesh, P(*([None] * lead + [ba if b_ok else None, None])))
+        # recurrent states: find the batch dim == B, shard trailing big dims
+        if nd >= 3:
+            # heuristics per state kind
+            shape_l = leaf.shape
+            spec = [None] * nd
+            try:
+                bdim = next(i for i, s in enumerate(shape_l) if s == B and i >= 1)
+            except StopIteration:
+                bdim = None
+            if b_ok and bdim is not None:
+                spec[bdim] = ba
+            # shard the largest trailing dim over model if divisible
+            for i in range(nd - 1, max(nd - 3, 0), -1):
+                if i != bdim and shape_l[i] % model_size == 0 and shape_l[i] >= model_size:
+                    spec[i] = "model"
+                    break
+            return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_shape)

@@ -1,0 +1,7 @@
+from repro.train.optimizer import OptConfig, init_opt_state, opt_update, global_norm
+from repro.train.train_loop import make_train_step, train_loop
+
+__all__ = [
+    "OptConfig", "init_opt_state", "opt_update", "global_norm",
+    "make_train_step", "train_loop",
+]

@@ -1,0 +1,133 @@
+"""Optimizers as pure pytree transforms: AdamW (f32 state) and Adafactor
+(factored second moment — the only state that fits for the 1T-param arch;
+see kimi_k2 config notes).
+
+No optax dependency; state layouts are plain dicts so the checkpointer
+and the dry-run's sharding rules treat them like params.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"            # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # adafactor
+    min_dim_factored: int = 128    # factor 2nd moment only for big matrices
+    eps_af: float = 1e-30
+
+
+def _factored(p, ocfg: OptConfig) -> bool:
+    return p.ndim >= 2 and min(p.shape[-2:]) >= ocfg.min_dim_factored
+
+
+def init_opt_state(params, ocfg: OptConfig) -> Dict[str, Any]:
+    if ocfg.name == "adamw":
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "gnorm": jnp.zeros((), jnp.float32),
+        }
+    if ocfg.name == "adafactor":
+        def factored_state(p):
+            if _factored(p, ocfg):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),                 # row stats
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),  # col stats
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "v": jax.tree.map(factored_state, params),
+            "gnorm": jnp.zeros((), jnp.float32),
+        }
+    raise ValueError(ocfg.name)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def opt_update(params, grads, state, ocfg: OptConfig) -> Tuple[Any, Dict[str, Any]]:
+    """One optimizer step. Returns (new_params, new_state)."""
+    grads, gnorm = clip_by_global_norm(grads, ocfg.grad_clip)
+    step = state["step"] + 1
+    leaves_p, treedef = jax.tree.flatten(params)
+    leaves_g = treedef.flatten_up_to(grads)
+
+    if ocfg.name == "adamw":
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - ocfg.b1 ** t
+        bc2 = 1.0 - ocfg.b2 ** t
+        leaves_mu = treedef.flatten_up_to(state["mu"])
+        leaves_nu = treedef.flatten_up_to(state["nu"])
+        new_p, new_mu, new_nu = [], [], []
+        for p, g, mu, nu in zip(leaves_p, leaves_g, leaves_mu, leaves_nu):
+            gf = g.astype(jnp.float32)
+            mu2 = ocfg.b1 * mu + (1 - ocfg.b1) * gf
+            nu2 = ocfg.b2 * nu + (1 - ocfg.b2) * gf * gf
+            update = (mu2 / bc1) / (jnp.sqrt(nu2 / bc2) + ocfg.eps)
+            if p.ndim >= 2:
+                update = update + ocfg.weight_decay * p.astype(jnp.float32)
+            new_p.append((p.astype(jnp.float32) - ocfg.lr * update).astype(p.dtype))
+            new_mu.append(mu2)
+            new_nu.append(nu2)
+        return treedef.unflatten(new_p), {
+            "step": step,
+            "mu": treedef.unflatten(new_mu),
+            "nu": treedef.unflatten(new_nu),
+            "gnorm": gnorm,
+        }
+
+    # adafactor
+    leaves_v = treedef.flatten_up_to(state["v"])
+    new_p, new_v = [], []
+    for p, g, v in zip(leaves_p, leaves_g, leaves_v):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + ocfg.eps_af
+        if _factored(p, ocfg):
+            vr = 0.999 * v["vr"] + 0.001 * jnp.mean(g2, axis=-1)
+            vc = 0.999 * v["vc"] + 0.001 * jnp.mean(g2, axis=-2)
+            r = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), ocfg.eps_af)
+            precond = jax.lax.rsqrt(jnp.maximum(r, ocfg.eps_af))[..., None] * \
+                jax.lax.rsqrt(jnp.maximum(vc, ocfg.eps_af))[..., None, :]
+            update = gf * precond
+            v2 = {"vr": vr, "vc": vc}
+        else:
+            vv = 0.999 * v["v"] + 0.001 * g2
+            update = gf * jax.lax.rsqrt(jnp.maximum(vv, ocfg.eps_af))
+            v2 = {"v": vv}
+        # RMS-clip the update (standard adafactor, d=1.0)
+        rms = jnp.sqrt(jnp.mean(update * update) + 1e-30)
+        update = update / jnp.maximum(1.0, rms)
+        p2 = p.astype(jnp.float32) - ocfg.lr * update
+        if p.ndim >= 2:
+            p2 = p2 - ocfg.lr * ocfg.weight_decay * p.astype(jnp.float32)
+        new_p.append(p2.astype(p.dtype))
+        new_v.append(v2)
+    return treedef.unflatten(new_p), {
+        "step": step,
+        "v": treedef.unflatten(new_v),
+        "gnorm": gnorm,
+    }

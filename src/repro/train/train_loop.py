@@ -1,0 +1,103 @@
+"""Training step/loop: microbatch gradient accumulation, grad clip,
+optimizer update, metrics. The returned step is a single jit-able function
+so the dry-run can ``.lower().compile()`` it at production scale.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import RunCtx, loss_fn
+from repro.train.optimizer import OptConfig, init_opt_state, opt_update
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    ocfg: OptConfig,
+    ctx: RunCtx = RunCtx(),
+    microbatches: int = 1,
+):
+    """Returns train_step(params, opt_state, batch) → (params', opt', metrics).
+
+    Microbatch accumulation: the global batch is split along axis 0 and
+    grads are accumulated with a scan (accum dtype = f32 for AdamW models,
+    param dtype for Adafactor giants — see kimi_k2 notes).
+    """
+    accum_f32 = ocfg.name == "adamw"
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, cfg, batch, ctx
+        )
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape((microbatches, b // microbatches) + x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+            gdtype = jnp.float32 if accum_f32 else None
+
+            def acc_body(carry, mb_i):
+                gsum, lsum = carry
+                loss, _, grads = grads_of(params, mb_i)
+                gsum = jax.tree.map(
+                    lambda a, g: a + (g.astype(a.dtype)), gsum, grads
+                )
+                return (gsum, lsum + loss), None
+
+            gzero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, gdtype or p.dtype), params
+            )
+            (gsum, lsum), _ = jax.lax.scan(acc_body, (gzero, jnp.float32(0)), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            metrics = {"loss": loss, "aux": jnp.float32(0),
+                       "logits_mean_abs": jnp.float32(0)}
+
+        new_params, new_opt = opt_update(params, grads, opt_state, ocfg)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = new_opt["gnorm"]
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def train_loop(
+    cfg: ModelConfig,
+    params,
+    pipeline,
+    steps: int,
+    ocfg: Optional[OptConfig] = None,
+    ctx: RunCtx = RunCtx(),
+    checkpointer=None,
+    ckpt_every: int = 0,
+    start_step: int = 0,
+    log_every: int = 10,
+):
+    """Host-side loop: deterministic data pipeline + jit'd step + optional
+    checkpointing. Returns (params, opt_state, loss history)."""
+    ocfg = ocfg or OptConfig(name=cfg.optimizer)
+    opt_state = init_opt_state(params, ocfg)
+    step_fn = jax.jit(make_train_step(cfg, ocfg, ctx))
+    history = []
+    for step in range(start_step, start_step + steps):
+        batch = {k: jnp.asarray(v) for k, v in pipeline.batch_for_step(step).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        history.append(loss)
+        if log_every and step % log_every == 0:
+            print(f"step {step:5d}  loss {loss:.4f}  gnorm {float(metrics['grad_norm']):.3f}")
+        if checkpointer is not None and ckpt_every and (step + 1) % ckpt_every == 0:
+            checkpointer.save(step + 1, {"params": params, "opt": opt_state})
+    return params, opt_state, history

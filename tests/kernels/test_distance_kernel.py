@@ -1,0 +1,113 @@
+"""Shape/dtype sweep of the Pallas partial-distance kernel vs the pure-jnp
+oracle, plus semantic checks (pruning exactness, inf propagation, skip map).
+Kernels run in interpret mode on CPU."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.distance import partial_distance_update
+from repro.kernels.ref import partial_distance_update_ref
+
+
+def _mk(m, n, d, dtype, seed=0, frac_pruned=0.3):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(dtype)
+    q = rng.normal(size=(m, d)).astype(dtype)
+    xn2 = (x.astype(np.float32) ** 2).sum(1)
+    qn2 = (q.astype(np.float32) ** 2).sum(1)
+    acc = rng.uniform(0, 5, size=(m, n)).astype(np.float32)
+    acc[rng.random((m, n)) < frac_pruned] = np.inf
+    tau = rng.uniform(d * 0.5, d * 3.0, size=(m,)).astype(np.float32)
+    return map(jnp.asarray, (x, xn2, q, qn2, acc, tau))
+
+
+SHAPES = [
+    (8, 16, 32),      # all smaller than tiles → single padded tile
+    (128, 128, 128),  # exact tile multiples
+    (130, 257, 96),   # ragged everything
+    (1, 300, 64),     # single query
+    (64, 1, 128),     # single candidate
+]
+
+
+@pytest.mark.parametrize("m,n,d", SHAPES)
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_kernel_matches_ref(m, n, d, dtype, metric):
+    x, xn2, q, qn2, acc, tau = _mk(m, n, d, dtype, seed=m * 31 + n)
+    got, skip = partial_distance_update(
+        x, xn2, q, qn2, acc, tau, metric=metric, interpret=True,
+        tile_m=64, tile_n=64, tile_k=64,
+    )
+    want = partial_distance_update_ref(x, xn2, q, qn2, acc, tau, metric=metric)
+    # compare finite entries with tolerance; inf pattern must match exactly
+    # except at the pruning boundary (|value − τ| within fp noise).
+    gf, wf = np.asarray(got), np.asarray(want)
+    tau_np = np.asarray(tau)[:, None]
+    tol = 1e-2 if dtype == jnp.bfloat16 else 1e-4
+    boundary = np.abs(np.where(np.isfinite(wf), wf, tau_np) - tau_np) <= tol * (
+        1 + np.abs(tau_np)
+    )
+    mismatch_inf = np.isfinite(gf) != np.isfinite(wf)
+    assert not (mismatch_inf & ~boundary).any(), "inf pattern diverges beyond fp ties"
+    both = np.isfinite(gf) & np.isfinite(wf)
+    np.testing.assert_allclose(gf[both], wf[both], rtol=tol, atol=tol)
+
+
+def test_prune_false_keeps_everything_finite():
+    x, xn2, q, qn2, acc, tau = _mk(32, 48, 64, np.float32, frac_pruned=0.0)
+    got, _ = partial_distance_update(
+        x, xn2, q, qn2, acc, tau * 0, prune=False, interpret=True,
+        tile_m=32, tile_n=32, tile_k=32,
+    )
+    assert np.isfinite(np.asarray(got)).all()
+
+
+def test_inf_never_resurrects():
+    x, xn2, q, qn2, acc, tau = _mk(32, 48, 64, np.float32, frac_pruned=0.5)
+    got, _ = partial_distance_update(
+        x, xn2, q, qn2, acc, tau + 1e9, interpret=True,
+        tile_m=32, tile_n=32, tile_k=32,
+    )
+    was_inf = ~np.isfinite(np.asarray(acc))
+    assert (~np.isfinite(np.asarray(got)))[was_inf].all()
+
+
+def test_skip_map_marks_dead_tiles():
+    m, n, d, t = 64, 128, 32, 32
+    x, xn2, q, qn2, acc, tau = _mk(m, n, d, np.float32, frac_pruned=0.0)
+    acc = np.array(acc)            # writable copy
+    acc[:, :t] = np.inf            # first candidate-tile column fully dead
+    got, skip = partial_distance_update(
+        jnp.asarray(x), xn2, q, qn2, jnp.asarray(acc), tau + 1e9,
+        interpret=True, tile_m=t, tile_n=t, tile_k=t,
+    )
+    skip = np.asarray(skip)
+    assert skip.shape == (m // t, n // t)
+    assert (skip[:, 0] == 1).all()
+    assert (skip[:, 1:] == 0).all()
+    # skipped tiles must still carry +inf in the output
+    assert (~np.isfinite(np.asarray(got)[:, :t])).all()
+
+
+def test_accumulation_reconstructs_exact_distance():
+    """Summing the kernel over disjoint dim blocks == exact squared L2."""
+    rng = np.random.default_rng(0)
+    m, n, d, B = 16, 40, 96, 4
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    q = rng.normal(size=(m, d)).astype(np.float32)
+    acc = jnp.zeros((m, n), jnp.float32)
+    tau = jnp.full((m,), jnp.inf, jnp.float32)
+    per = d // B
+    for b in range(B):
+        sl = slice(b * per, (b + 1) * per)
+        xb, qb = x[:, sl], q[:, sl]
+        acc, _ = partial_distance_update(
+            jnp.asarray(xb), jnp.asarray((xb ** 2).sum(1)),
+            jnp.asarray(qb), jnp.asarray((qb ** 2).sum(1)),
+            acc, tau, interpret=True, tile_m=32, tile_n=32, tile_k=32,
+        )
+    want = ((q[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+    np.testing.assert_allclose(np.asarray(acc), want, rtol=2e-4, atol=2e-4)

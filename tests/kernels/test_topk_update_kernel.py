@@ -1,0 +1,53 @@
+"""Running-top-K Pallas kernel vs the sort-based oracle: shape sweep +
+duplicate/invalid handling. Interpret mode on CPU."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.ref import running_topk_ref
+from repro.kernels.topk_update import running_topk_update
+
+
+def _mk(m, c, k, seed=0, frac_invalid=0.2, run_filled=True):
+    rng = np.random.default_rng(seed)
+    scores = rng.uniform(0, 100, size=(m, c)).astype(np.float32)
+    scores[rng.random((m, c)) < frac_invalid] = np.inf
+    ids = rng.integers(0, 10_000, size=(m, c)).astype(np.int32)
+    if run_filled:
+        run_s = np.sort(rng.uniform(0, 100, size=(m, k)).astype(np.float32), axis=1)
+        run_i = rng.integers(10_000, 20_000, size=(m, k)).astype(np.int32)
+    else:
+        run_s = np.full((m, k), np.inf, np.float32)
+        run_i = np.full((m, k), -1, np.int32)
+    return map(jnp.asarray, (scores, ids, run_s, run_i))
+
+
+@pytest.mark.parametrize("m,c,k", [(1, 8, 4), (8, 64, 10), (13, 100, 5), (4, 16, 16)])
+@pytest.mark.parametrize("run_filled", [True, False])
+def test_matches_oracle(m, c, k, run_filled):
+    scores, ids, run_s, run_i = _mk(m, c, k, seed=m * c + k,
+                                    run_filled=run_filled)
+    got_s, got_i = running_topk_update(scores, ids, run_s, run_i, k=k,
+                                       tile_m=4, interpret=True)
+    want_s, want_i = running_topk_ref(scores, ids, run_s, run_i, k)
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s), rtol=1e-6)
+    # ids must match except across exact score ties
+    gs, ws = np.asarray(got_s), np.asarray(want_s)
+    gi, wi = np.asarray(got_i), np.asarray(want_i)
+    diff = gi != wi
+    if diff.any():
+        r, c_ = np.nonzero(diff)
+        assert np.allclose(gs[r, c_], ws[r, c_]), "id mismatch beyond ties"
+
+
+def test_all_invalid_chunk_keeps_running():
+    scores = jnp.full((3, 10), jnp.inf, jnp.float32)
+    ids = jnp.full((3, 10), -1, jnp.int32)
+    run_s = jnp.asarray(np.sort(np.random.default_rng(0).uniform(0, 1, (3, 5)), axis=1),
+                        jnp.float32)
+    run_i = jnp.arange(15, dtype=jnp.int32).reshape(3, 5)
+    got_s, got_i = running_topk_update(scores, ids, run_s, run_i, k=5,
+                                       tile_m=4, interpret=True)
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(run_s))
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(run_i))

@@ -1,0 +1,194 @@
+"""Property-based tests (hypothesis) for the system's invariants.
+
+The invariants that make HARMONY's pruning *exact* rather than heuristic:
+
+  P1  partial L2 sums over disjoint dimension blocks are non-decreasing;
+  P2  any τ ≥ final kth-best distance never prunes a true top-K member —
+      the full engine equals the oracle for arbitrary corpora/plans;
+  P3  the distributed heap-merge of per-shard top-Ks equals global top-K;
+  P4  the kernel's block accumulation reconstructs exact distances for
+      any dimension split;
+  P5  cost-model sanity: loads are non-negative, uniform workloads have
+      zero imbalance, adding dimension blocks never increases the
+      (pruning-discounted) per-node compute;
+  P6  int8 error-feedback compression drift stays bounded by one
+      quantization step.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import HarmonyConfig
+from repro.core import (
+    TopKHeap,
+    build_ivf,
+    harmony_search,
+    plan_search,
+    preassign,
+    search_oracle,
+)
+from repro.core.cost_model import HardwareModel, WorkloadStats, per_node_loads, plan_cost
+from repro.core.index import dim_block_bounds
+from repro.core.types import PartitionPlan
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+@given(
+    d=st.integers(4, 96),
+    blocks=st.integers(1, 8),
+    seed=st.integers(0, 10_000),
+)
+@settings(**SETTINGS)
+def test_p1_partial_sums_monotone(d, blocks, seed):
+    rng = np.random.default_rng(seed)
+    p = rng.normal(size=(d,)).astype(np.float32)
+    q = rng.normal(size=(d,)).astype(np.float32)
+    bounds = dim_block_bounds(d, blocks)
+    running = 0.0
+    prev = 0.0
+    for lo, hi in bounds:
+        running += float(np.sum((p[lo:hi] - q[lo:hi]) ** 2))
+        assert running >= prev - 1e-6
+        prev = running
+    assert np.isclose(running, float(np.sum((p - q) ** 2)), rtol=1e-4, atol=1e-4)
+
+
+@given(
+    nb=st.integers(300, 1200),
+    dim=st.sampled_from([16, 32, 48]),
+    nodes=st.sampled_from([2, 4, 6]),
+    mode=st.sampled_from(["harmony", "vector", "dimension"]),
+    seed=st.integers(0, 1000),
+)
+@settings(max_examples=8, deadline=None)
+def test_p2_engine_equals_oracle_any_plan(nb, dim, nodes, mode, seed):
+    from repro.data import make_dataset, make_queries
+
+    ds = make_dataset(nb=nb, dim=dim, n_components=6, spread=0.7, seed=seed)
+    cfg = HarmonyConfig(dim=dim, nlist=8, nprobe=3, topk=5, kmeans_iters=3)
+    index = build_ivf(ds.x, cfg)
+    q = make_queries(ds, nq=12, skew=0.5, noise=0.4, seed=seed + 1)
+    decision = plan_search(index, nodes, cfg.replace(mode=mode))
+    corpus = preassign(index, decision.plan)
+    got = harmony_search(index, corpus, q)
+    want = search_oracle(index, q)
+    finite = np.isfinite(want.scores)
+    np.testing.assert_allclose(got.scores[finite], want.scores[finite],
+                               rtol=1e-3, atol=1e-3)
+
+
+@given(
+    n_shards=st.integers(1, 6),
+    per_shard=st.integers(1, 30),
+    k=st.integers(1, 8),
+    seed=st.integers(0, 10_000),
+)
+@settings(**SETTINGS)
+def test_p3_shard_merge_equals_global_topk(n_shards, per_shard, k, seed):
+    rng = np.random.default_rng(seed)
+    nq = 5
+    all_scores, all_ids = [], []
+    heap = TopKHeap.empty(nq, k)
+    next_id = 0
+    for _ in range(n_shards):
+        sc = rng.uniform(0, 100, size=(nq, per_shard)).astype(np.float32)
+        ids = np.arange(next_id, next_id + per_shard, dtype=np.int64)
+        next_id += per_shard
+        all_scores.append(sc)
+        all_ids.append(np.broadcast_to(ids, sc.shape))
+        heap.merge_rows(np.arange(nq), sc, np.broadcast_to(ids, sc.shape))
+    cat_s = np.concatenate(all_scores, axis=1)
+    cat_i = np.concatenate(all_ids, axis=1)
+    order = np.argsort(cat_s, axis=1, kind="stable")[:, :k]
+    want_s = np.take_along_axis(cat_s, order, axis=1)
+    kk = min(k, cat_s.shape[1])
+    np.testing.assert_allclose(heap.scores[:, :kk], want_s[:, :kk], rtol=1e-6)
+
+
+@given(
+    m=st.integers(1, 20),
+    n=st.integers(1, 40),
+    d=st.sampled_from([8, 24, 64]),
+    blocks=st.integers(1, 4),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=10, deadline=None)
+def test_p4_kernel_block_accumulation_exact(m, n, d, blocks, seed):
+    import jax.numpy as jnp
+
+    from repro.kernels.ref import partial_distance_update_ref
+
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    q = rng.normal(size=(m, d)).astype(np.float32)
+    acc = jnp.zeros((m, n), jnp.float32)
+    tau = jnp.full((m,), jnp.inf, jnp.float32)
+    for lo, hi in dim_block_bounds(d, blocks):
+        xb, qb = x[:, lo:hi], q[:, lo:hi]
+        acc = partial_distance_update_ref(
+            jnp.asarray(xb), jnp.asarray((xb ** 2).sum(1)),
+            jnp.asarray(qb), jnp.asarray((qb ** 2).sum(1)), acc, tau,
+        )
+    want = ((q[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+    np.testing.assert_allclose(np.asarray(acc), want, rtol=5e-4, atol=5e-4)
+
+
+@given(
+    nlist=st.integers(2, 32),
+    v=st.integers(1, 8),
+    b=st.integers(1, 8),
+    seed=st.integers(0, 1000),
+)
+@settings(**SETTINGS)
+def test_p5_cost_model_sanity(nlist, v, b, seed):
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(1, 100, size=nlist).astype(np.float64)
+    w = WorkloadStats(
+        cluster_sizes=sizes,
+        cluster_hits=np.ones(nlist),
+        dim=64, nq=16, topk=5,
+    )
+    plan = PartitionPlan(
+        v_shards=v, d_blocks=b,
+        cluster_to_shard=(np.arange(nlist) % v).astype(np.int32),
+    )
+    loads = per_node_loads(plan, w)
+    assert (loads >= 0).all()
+    assert len(loads) == v * b
+    c = plan_cost(plan, w, HardwareModel())
+    assert c["cost"] > 0 and c["comp_s"] >= 0 and c["comm_s"] >= 0
+    # uniform load across a single shard ⇒ zero imbalance
+    if v == 1:
+        assert np.isclose(c["imbalance_s"], 0.0)
+    # pruning never increases compute
+    c_noprune = plan_cost(plan, w, HardwareModel(), enable_pruning=False)
+    assert c["comp_s"] <= c_noprune["comp_s"] + 1e-12
+
+
+@given(
+    n=st.integers(8, 256),
+    steps=st.integers(1, 40),
+    scale=st.floats(0.01, 10.0),
+    seed=st.integers(0, 10_000),
+)
+@settings(**SETTINGS)
+def test_p6_error_feedback_bounded_drift(n, steps, scale, seed):
+    import jax.numpy as jnp
+
+    from repro.train.compression import compress_with_feedback, dequantize_int8
+
+    rng = np.random.default_rng(seed)
+    err = jnp.zeros((n,), jnp.float32)
+    sent = np.zeros(n, np.float32)
+    true = np.zeros(n, np.float32)
+    max_scale = 0.0
+    for _ in range(steps):
+        g = jnp.asarray((scale * rng.normal(size=(n,))).astype(np.float32))
+        qv, s, err = compress_with_feedback(g, err)
+        sent += np.asarray(dequantize_int8(qv, s))
+        true += np.asarray(g)
+        max_scale = max(max_scale, float(s))
+    # drift = current residual, bounded by one quantization step
+    assert np.abs(sent - true).max() <= max_scale * 0.5 + 1e-5

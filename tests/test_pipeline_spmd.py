@@ -1,0 +1,71 @@
+"""SPMD ring-pipeline engine: multi-device runs go through a subprocess so
+the main pytest process keeps a single CPU device (per the dry-run rules);
+a 1×1-mesh in-process test covers the degenerate geometry."""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import jax
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+@pytest.mark.parametrize("extra", [[], ["--pallas"]])
+def test_multi_device_spmd_matches_oracle(extra):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "examples" / "distributed_search.py"), *extra],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=540,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "EXACTNESS_OK" in proc.stdout, proc.stdout + proc.stderr
+
+
+def test_single_device_mesh_in_process():
+    from repro.config import HarmonyConfig
+    from repro.core import assign_queries, build_ivf, preassign, prewarm_tau, search_oracle
+    from repro.core.pipeline import (
+        SpmdConfig,
+        build_spmd_inputs,
+        make_spmd_search,
+    )
+    from repro.core.types import PartitionPlan
+    from repro.data import make_dataset, make_queries
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    ds = make_dataset(nb=1000, dim=32, n_components=8, spread=0.6, seed=0)
+    cfg = HarmonyConfig(dim=32, nlist=16, nprobe=4, topk=5, kmeans_iters=4)
+    index = build_ivf(ds.x, cfg)
+    q = make_queries(ds, nq=16, seed=1)
+    plan = PartitionPlan(
+        v_shards=1, d_blocks=1, cluster_to_shard=np.zeros(16, np.int32)
+    )
+    corpus = preassign(index, plan)
+    chunk = 128
+    cap = -(-corpus.cap // chunk) * chunk
+    scfg = SpmdConfig(
+        v_shards=1, d_blocks=1, qb=16, cap=cap, dim=32, nprobe=4, k=5,
+        chunk=chunk, use_pallas=False,
+    )
+    probes = assign_queries(index, q)
+    tau0 = prewarm_tau(index, q, probes, 5)
+    arrays = build_spmd_inputs(index, corpus, q, scfg, probes, tau0)
+    step = make_spmd_search(scfg, mesh)
+    scores, ids, stats = step(
+        arrays["x_blocks"], arrays["xn2_blocks"], arrays["cluster_ids"],
+        arrays["row_ids"], arrays["queries"], arrays["probes"], arrays["tau0"],
+    )
+    oracle = search_oracle(index, q)
+    finite = np.isfinite(oracle.scores)
+    np.testing.assert_allclose(
+        np.asarray(scores)[finite], oracle.scores[finite], rtol=1e-3, atol=1e-3
+    )

@@ -1,0 +1,222 @@
+"""Substrate tests: optimizer, train step, checkpoint (incl. resharding
+restore semantics), gradient compression, data pipelines, elastic replan,
+straggler hedging, serving engine."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs as cfgs
+from repro.checkpoint import Checkpointer
+from repro.config import HarmonyConfig
+from repro.core import build_ivf, harmony_search, plan_search, preassign, search_oracle
+from repro.data import TokenPipeline, make_dataset, make_queries
+from repro.models import RunCtx, init_params
+from repro.runtime import ClusterState, HedgingExecutor, replan_on_failure
+from repro.serve import HarmonyServer
+from repro.train import OptConfig, init_opt_state, make_train_step, opt_update
+from repro.train.compression import (
+    compress_with_feedback,
+    dequantize_int8,
+    init_error_state,
+    quantize_int8,
+)
+
+
+# ---------------------------------------------------------------- optimizer
+
+
+@pytest.mark.parametrize("name", ["adamw", "adafactor"])
+def test_optimizer_reduces_quadratic(name):
+    ocfg = OptConfig(name=name, lr=0.05, weight_decay=0.0)
+    params = {"w": jnp.ones((256, 256), jnp.float32) * 2.0}
+    state = init_opt_state(params, ocfg)
+
+    def loss(p):
+        return jnp.mean(p["w"] ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(20):
+        grads = jax.grad(loss)(params)
+        params, state = opt_update(params, grads, state, ocfg)
+    assert float(loss(params)) < l0 * 0.7
+    assert int(state["step"]) == 20
+
+
+def test_train_step_microbatch_equivalence():
+    """1 microbatch vs 4 must give (nearly) the same update."""
+    cfg = cfgs.get_smoke_config("qwen1.5-4b").replace(remat=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    ocfg = OptConfig(lr=1e-3)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, size=(8, 17)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(toks[:, :-1]), "targets": jnp.asarray(toks[:, 1:])}
+
+    s1 = make_train_step(cfg, ocfg, RunCtx(), microbatches=1)
+    s4 = make_train_step(cfg, ocfg, RunCtx(), microbatches=4)
+    p1, o1, m1 = s1(params, init_opt_state(params, ocfg), batch)
+    p4, o4, m4 = s4(params, init_opt_state(params, ocfg), batch)
+    d = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))),
+        p1, p4,
+    )
+    assert max(jax.tree.leaves(d)) < 5e-2  # bf16 params, microbatch fp noise
+
+
+def test_training_reduces_loss():
+    cfg = cfgs.get_smoke_config("qwen1.5-4b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    pipe = TokenPipeline(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8)
+    from repro.train import train_loop
+
+    params, _, history = train_loop(cfg, params, pipe, steps=30,
+                                    ocfg=OptConfig(lr=3e-3), log_every=0)
+    assert np.mean(history[-5:]) < np.mean(history[:5]) - 0.2, history[:3] + history[-3:]
+
+
+# --------------------------------------------------------------- checkpoint
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = cfgs.get_smoke_config("olmoe-1b-7b")
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    opt = init_opt_state(params, OptConfig())
+    ck = Checkpointer(tmp_path, keep=2)
+    ck.save(5, {"params": params, "opt": opt})
+    ck.save(9, {"params": params, "opt": opt})
+    assert ck.latest_step() == 9
+    restored = ck.restore({"params": params, "opt": opt}, step=9)
+    for a, b in zip(jax.tree.leaves(restored["params"]), jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_retention_and_async(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2, async_write=True)
+    tree = {"w": jnp.arange(8.0)}
+    for s in [1, 2, 3, 4]:
+        ck.save(s, tree)
+    ck.wait()
+    assert ck.all_steps() == [3, 4]
+
+
+def test_checkpoint_restore_resumes_training(tmp_path):
+    """Failure-recovery path: restore mid-run, continue, identical stream."""
+    cfg = cfgs.get_smoke_config("xlstm-1.3b")
+    pipe = TokenPipeline(vocab_size=cfg.vocab_size, seq_len=16, global_batch=4)
+    ocfg = OptConfig(lr=1e-3)
+    step_fn = jax.jit(make_train_step(cfg, ocfg, RunCtx(rec_chunk=8)))
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params, ocfg)
+    ck = Checkpointer(tmp_path)
+    for step in range(4):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_for_step(step).items()}
+        params, opt, _ = step_fn(params, opt, batch)
+        if step == 1:
+            ck.save(2, {"params": params, "opt": opt})
+
+    # crash + restore at step 2, replay steps 2..3
+    restored = ck.restore({"params": params, "opt": opt}, step=2)
+    p2, o2 = restored["params"], restored["opt"]
+    for step in range(2, 4):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_for_step(step).items()}
+        p2, o2, _ = step_fn(p2, o2, batch)
+    for a, b in zip(jax.tree.leaves(p2), jax.tree.leaves(params)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), atol=1e-6
+        )
+
+
+# -------------------------------------------------------------- compression
+
+
+def test_quantize_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1000,)).astype(np.float32))
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s)) - np.asarray(x))
+    assert err.max() <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_is_unbiased_over_time():
+    """Σ_t deq(q_t) must track Σ_t g_t (error feedback re-injects residual)."""
+    rng = np.random.default_rng(1)
+    err = jnp.zeros((64,), jnp.float32)
+    total_sent = np.zeros(64, np.float32)
+    total_true = np.zeros(64, np.float32)
+    for t in range(50):
+        g = jnp.asarray(rng.normal(size=(64,)).astype(np.float32))
+        q, s, err = compress_with_feedback(g, err)
+        total_sent += np.asarray(dequantize_int8(q, s))
+        total_true += np.asarray(g)
+    # residual bounded by one quantization step → averages converge
+    assert np.abs(total_sent - total_true).max() < 0.2
+
+
+# ------------------------------------------------------- data / determinism
+
+
+def test_token_pipeline_elastic_determinism():
+    pipe = TokenPipeline(vocab_size=1000, seq_len=16, global_batch=8)
+    g = pipe.global_batch_at(3)
+    # resharding: 2 ranks vs 4 ranks slice the same global stream
+    two = np.concatenate([pipe.shard_at(3, r, 2) for r in range(2)])
+    four = np.concatenate([pipe.shard_at(3, r, 4) for r in range(4)])
+    np.testing.assert_array_equal(two, g)
+    np.testing.assert_array_equal(four, g)
+
+
+# ------------------------------------------------------- elastic / hedging
+
+
+@pytest.fixture(scope="module")
+def anns():
+    ds = make_dataset(nb=6000, dim=64, n_components=16, spread=0.6, seed=2)
+    cfg = HarmonyConfig(dim=64, nlist=32, nprobe=6, topk=5, kmeans_iters=6)
+    index = build_ivf(ds.x, cfg)
+    q = make_queries(ds, nq=48, skew=0.4, noise=0.2, seed=3)
+    return ds, cfg, index, q
+
+
+def test_elastic_replan_preserves_results(anns):
+    ds, cfg, index, q = anns
+    state = ClusterState.fresh(8)
+    oracle = search_oracle(index, q)
+    for dead in [3, 5, 0]:
+        state.fail(dead)
+        decision, corpus = replan_on_failure(index, state, cfg)
+        assert decision.plan.n_nodes <= state.n_live
+        res = harmony_search(index, corpus, q)
+        np.testing.assert_allclose(res.scores, oracle.scores, rtol=1e-3, atol=1e-3)
+
+
+def test_hedging_beats_straggler():
+    results = lambda t: t * 2
+    workers = [results, results]
+    # worker 0 straggles on every task
+    lat = lambda w, t: 5.0 if w == 0 else 0.001
+    ex = HedgingExecutor(workers, deadline_s=0.1, latency_fn=lat)
+    out, served_by = ex.run(21, primary=0, replica=1)
+    assert out == 42 and served_by == 1
+    assert ex.stats.hedged == 1
+
+
+# ------------------------------------------------------------------ serving
+
+
+def test_server_end_to_end(anns):
+    ds, cfg, index, q = anns
+    srv = HarmonyServer(index, n_nodes=8, replan_every=2)
+    oracle = search_oracle(index, q)
+    for lo in range(0, 48, 16):
+        res = srv.search_batch(q[lo : lo + 16])
+        np.testing.assert_allclose(
+            res.scores, oracle.scores[lo : lo + 16], rtol=1e-3, atol=1e-3
+        )
+    assert srv.stats.queries == 48
+    assert srv.stats.qps > 0
+    # kill a node mid-serve; results must not change
+    srv.fail_node(2)
+    res = srv.search_batch(q[:16])
+    np.testing.assert_allclose(res.scores, oracle.scores[:16], rtol=1e-3, atol=1e-3)

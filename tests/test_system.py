@@ -1,0 +1,74 @@
+"""End-to-end behaviour tests for the HARMONY system.
+
+The quickstart path: generate corpus → plan → build distributed index →
+search → verify recall and the paper's headline behaviours at micro scale.
+"""
+
+import numpy as np
+import pytest
+
+from repro.config import HarmonyConfig
+from repro.core import build_ivf, harmony_search, plan_search, preassign, search_oracle
+from repro.data import brute_force_topk, make_dataset, make_queries, recall_at_k
+
+
+@pytest.fixture(scope="module")
+def system():
+    ds = make_dataset(nb=12000, dim=128, n_components=32, spread=0.6, seed=11)
+    cfg = HarmonyConfig(dim=128, nlist=64, nprobe=12, topk=10, kmeans_iters=8)
+    index = build_ivf(ds.x, cfg)
+    q_uniform = make_queries(ds, nq=96, skew=0.0, noise=0.2, seed=5)
+    q_skewed = make_queries(ds, nq=96, skew=0.9, noise=0.2, seed=6)
+    return ds, cfg, index, q_uniform, q_skewed
+
+
+def test_end_to_end_recall(system):
+    ds, cfg, index, q, _ = system
+    decision = plan_search(index, 8, cfg)
+    corpus = preassign(index, decision.plan)
+    res = harmony_search(index, corpus, q)
+    true_idx, _ = brute_force_topk(ds.x, q, cfg.topk)
+    assert recall_at_k(res.ids, true_idx) > 0.85
+
+
+def test_skew_shifts_plan_toward_dimension_blocks(system):
+    """Under heavy skew the cost model should not pick pure-vector plans
+    (the paper's core claim: hybrid/dimension wins under imbalance)."""
+    ds, cfg, index, q_uniform, q_skewed = system
+    from repro.core import assign_queries
+
+    cfg_skewful = cfg.replace(alpha=50.0)
+    probes_u = assign_queries(index, q_uniform)
+    probes_s = assign_queries(index, q_skewed)
+    d_uniform = plan_search(index, 8, cfg_skewful, probes_sample=probes_u)
+    d_skewed = plan_search(index, 8, cfg_skewful, probes_sample=probes_s)
+    assert d_skewed.plan.d_blocks >= d_uniform.plan.d_blocks
+
+
+def test_modes_agree_on_results(system):
+    ds, cfg, index, q, _ = system
+    results = {}
+    for mode, nodes in [("harmony", 8), ("vector", 8), ("dimension", 4)]:
+        d = plan_search(index, nodes, cfg.replace(mode=mode))
+        corpus = preassign(index, d.plan)
+        results[mode] = harmony_search(index, corpus, q)
+    base = results["harmony"].scores
+    for mode, res in results.items():
+        np.testing.assert_allclose(res.scores, base, rtol=1e-3, atol=1e-3)
+
+
+def test_load_balance_improves_under_skew(system):
+    """Load-aware assignment must reduce per-shard load spread vs round
+    robin on skewed workloads (paper Fig. 7/9)."""
+    ds, cfg, index, _, q_skewed = system
+    from repro.core import assign_queries
+
+    probes = assign_queries(index, q_skewed)
+    d_bal = plan_search(index, 8, cfg.replace(mode="vector"), probes_sample=probes, balanced=True)
+    d_rr = plan_search(index, 8, cfg.replace(mode="vector"), probes_sample=probes, balanced=False)
+    c_bal = preassign(index, d_bal.plan)
+    c_rr = preassign(index, d_rr.plan)
+    r_bal = harmony_search(index, c_bal, q_skewed)
+    r_rr = harmony_search(index, c_rr, q_skewed)
+    imb = lambda r: np.std(r.stats["shard_pair_flops"]) / max(np.mean(r.stats["shard_pair_flops"]), 1)
+    assert imb(r_bal) <= imb(r_rr) + 1e-9
