@@ -19,6 +19,7 @@ def main() -> None:
         bench_pruning_ratio,
         bench_qps_recall,
         bench_scaling,
+        bench_serving,
         bench_skew,
     )
 
@@ -26,6 +27,7 @@ def main() -> None:
     for mod in (
         bench_qps_recall,
         bench_skew,
+        bench_serving,
         bench_breakdown,
         bench_ablation,
         bench_pruning_ratio,

@@ -1,6 +1,7 @@
-"""End-to-end serving driver (the paper's kind): batched ANNS requests
-through the HARMONY serving engine, with load-aware re-planning, a node
-failure mid-run (elastic re-plan), and straggler-hedged dispatch stats.
+"""End-to-end serving driver (the paper's kind): a skew-drifting Poisson
+request trace through the admission-controlled serving scheduler, with
+skew-triggered re-planning, a node failure mid-stream (elastic re-plan),
+straggler-hedged batch dispatch, and full queue/latency accounting.
 
     PYTHONPATH=src python examples/serve_anns.py
 """
@@ -10,52 +11,72 @@ import numpy as np
 from repro.config import HarmonyConfig
 from repro.core import build_ivf, search_oracle
 from repro.data import make_dataset, make_queries
-from repro.runtime import HedgingExecutor
-from repro.serve import HarmonyServer
+from repro.serve import HarmonyServer, SchedulerConfig, ServingScheduler
 
 
-def request_stream(ds, n_batches=24, batch=64, seed=0):
-    """Workload that drifts from uniform to skewed mid-stream (forces the
-    load-aware planner to adapt)."""
-    for i in range(n_batches):
-        skew = 0.0 if i < n_batches // 2 else 0.85
-        yield make_queries(ds, nq=batch, skew=skew, noise=0.2, seed=seed + i)
+def request_trace(ds, n_req=1024, rate_qps=4000.0, seed=0):
+    """Poisson arrivals whose workload drifts from uniform to skewed
+    mid-stream (forces the scheduler's hot-mass drift trigger)."""
+    rng = np.random.default_rng(seed)
+    t = np.cumsum(rng.exponential(1.0 / rate_qps, size=n_req))
+    half = n_req // 2
+    qu = make_queries(ds, nq=half, skew=0.0, noise=0.2, seed=seed + 1)
+    qh = make_queries(ds, nq=n_req - half, skew=0.85, hot_fraction=0.04,
+                      noise=0.2, seed=seed + 2)
+    q = np.concatenate([qu, qh])
+    return [(float(t[i]), q[i]) for i in range(n_req)], q
 
 
 def main():
     ds = make_dataset(nb=20_000, dim=128, n_components=48, spread=0.6, seed=0)
     cfg = HarmonyConfig(dim=128, nlist=128, nprobe=16, topk=10)
     index = build_ivf(ds.x, cfg)
-    srv = HarmonyServer(index, n_nodes=8, replan_every=6)
-
+    srv = HarmonyServer(index, n_nodes=8)
     print(f"serving with plan V×B = {srv.plan.v_shards}×{srv.plan.d_blocks}")
-    for i, q in enumerate(request_stream(ds)):
-        res = srv.search_batch(q)
-        if i == 15:
+
+    trace, q = request_trace(ds)
+
+    def mid_stream(batch_idx, sched):
+        if batch_idx == 12:
             print("!! killing node 3 mid-serve")
-            srv.fail_node(3)
+            sched.server.fail_node(3)
             print(f"   re-planned: V×B = {srv.plan.v_shards}×{srv.plan.d_blocks} "
                   f"on {srv.cluster.n_live} live nodes")
-        # spot-check exactness on a sample batch
-        if i in (0, 20):
-            oracle = search_oracle(index, q)
-            assert np.allclose(res.scores, oracle.scores, rtol=1e-3, atol=1e-3)
-            print(f"   batch {i}: results verified against oracle")
+
+    # node 2 straggles; the 10ms hedge deadline re-issues its batches
+    straggle = lambda w, t: 1.0 if w == 2 else 1e-4
+    sched = ServingScheduler(
+        srv,
+        SchedulerConfig(
+            max_batch=cfg.query_block,
+            max_wait_s=2e-3,
+            queue_capacity=16 * cfg.query_block,
+            replan_drift=0.2,
+            min_batches_between_replans=2,
+            hedge_deadline_s=0.01,
+        ),
+        latency_fn=straggle,
+        on_batch=mid_stream,
+    )
+    results = sched.run_trace(trace)
+
+    # spot-check exactness on the served requests
+    served = [r.req_id for r in results]
+    oracle = search_oracle(index, q[served])
+    scores = np.stack([r.scores for r in results])
+    assert np.allclose(scores, oracle.scores, rtol=1e-3, atol=1e-3)
+    print(f"   {len(results)} results verified against oracle")
 
     s = srv.stats
-    print(f"served {s.queries} queries in {s.batches} batches | "
-          f"QPS(serial-measured)={s.qps:.0f} | p50={s.latency_pct(50):.1f}ms "
-          f"p95={s.latency_pct(95):.1f}ms | replans={s.replans}")
-
-    # straggler hedging demo: node 2 becomes slow; deadline re-issues work
-    lat = lambda w, t: 1.0 if w == 2 else 1e-4
-    ex = HedgingExecutor([lambda t: t] * srv.cluster.n_live, deadline_s=0.01,
-                         latency_fn=lat)
-    for t in range(20):
-        ex.run(t, primary=t % srv.cluster.n_live,
-               replica=(t + 1) % srv.cluster.n_live)
-    print(f"hedging: dispatched={ex.stats.dispatched} hedged={ex.stats.hedged} "
-          f"wasted={ex.stats.wasted}")
+    print(f"served {s.queries} queries in {s.batches} batches "
+          f"(full={s.full_batches} deadline={s.deadline_batches}) | "
+          f"QPS(replay)={sched.served_qps:.0f} | "
+          f"queue-wait p50={s.queue_wait_pct(50):.1f}ms "
+          f"p99={s.queue_wait_pct(99):.1f}ms | shed={s.shed} | "
+          f"replans={s.replans} (skew-triggered={s.skew_replans})")
+    print(f"hedging: dispatched={sched._hedge.stats.dispatched} "
+          f"hedged={sched._hedge.stats.hedged} "
+          f"wasted={sched._hedge.stats.wasted}")
     print("OK")
 
 

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map_compat
 from repro.core.index import IVFIndex, ShardedCorpus, dim_block_bounds
 from repro.kernels import ops as kops
 
@@ -348,7 +349,7 @@ def make_spmd_search(scfg: SpmdConfig, mesh: Mesh):
         )
     out_specs = (P(), P(), P())
 
-    fn = jax.shard_map(
-        dev, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+    fn = shard_map_compat(
+        dev, mesh=mesh, in_specs=in_specs, out_specs=out_specs
     )
     return jax.jit(fn)

@@ -24,6 +24,7 @@ from repro.core.router import (
     load_aware_assignment,
     ring_offsets,
     round_robin_assignment,
+    workload_concentration,
 )
 from repro.core.types import PartitionPlan
 
@@ -42,6 +43,12 @@ class PlanDecision:
     plan: PartitionPlan
     cost: dict
     candidates: List[Tuple[Tuple[int, int], float]]  # ((V,B), cost) ranking
+    # diagnostic: hot-cluster concentration (at the router's
+    # DEFAULT_HOT_FRACTION) of the workload sample this plan was built
+    # for; uniform ⇒ ≈ DEFAULT_HOT_FRACTION. The serving scheduler keeps
+    # its own drift baseline (its hot_fraction may differ) — this field is
+    # for logging/benchmark introspection.
+    hot_mass: float = 0.0
 
 
 def make_workload_stats(
@@ -113,4 +120,9 @@ def plan_search(
             best = (plan, c)
 
     assert best is not None
-    return PlanDecision(plan=best[0], cost=best[1], candidates=scored)
+    return PlanDecision(
+        plan=best[0],
+        cost=best[1],
+        candidates=scored,
+        hot_mass=workload_concentration(w.cluster_hits),
+    )

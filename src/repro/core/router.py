@@ -53,4 +53,25 @@ def ring_offsets(v_shards: int, d_blocks: int, stagger: bool = True) -> np.ndarr
 
 def estimate_cluster_hits(probes: np.ndarray, nlist: int) -> np.ndarray:
     """Per-cluster query hit counts from a probe sample [NQ, P]."""
-    return np.bincount(probes.reshape(-1), minlength=nlist).astype(np.float64)
+    probes = probes.reshape(-1)
+    return np.bincount(probes[probes >= 0], minlength=nlist).astype(np.float64)
+
+
+DEFAULT_HOT_FRACTION = 0.1
+
+
+def workload_concentration(
+    hits: np.ndarray, hot_fraction: float = DEFAULT_HOT_FRACTION
+) -> float:
+    """Hot-cluster concentration of a workload: the share of probe mass on
+    the hottest ``ceil(hot_fraction · nlist)`` clusters. 1.0 = all traffic
+    on the hot set; ``hot_fraction`` = perfectly uniform. The serving
+    scheduler compares this on its live arrival window against the value
+    the current plan was built for, and re-plans when the drift exceeds a
+    threshold (the Fig. 7 skew-adaptation trigger)."""
+    hits = np.asarray(hits, np.float64)
+    total = float(hits.sum())
+    if total <= 0 or hits.size == 0:
+        return 0.0
+    n_hot = max(1, int(np.ceil(hot_fraction * hits.size)))
+    return float(np.sort(hits)[::-1][:n_hot].sum() / total)

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map_compat
 from repro.config import ModelConfig
 from repro.models.common import dense_init, dtype_of
 
@@ -161,7 +162,7 @@ def moe_ffn_ep(
         aux = jax.lax.pmean(aux, batch_axes)
         return y.reshape(Bl, S, D), aux
 
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         device_fn,
         mesh=mesh,
         in_specs=(
@@ -172,7 +173,6 @@ def moe_ffn_ep(
             P(data_axis, model_axis, None),
         ),
         out_specs=(P(batch_axes, None, None), P()),
-        check_vma=False,
     )
     return fn(x, p["router"], p["w1"], p["w3"], p["w2"])
 

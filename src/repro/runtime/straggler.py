@@ -47,14 +47,25 @@ class HedgingExecutor:
         """Returns (result, worker_that_served). Simulated time: if the
         primary's latency exceeds the deadline, the hedge fires and the
         faster of the two serves the request."""
+        result, served_by, _ = self.run_timed(task, primary, replica)
+        return result, served_by
+
+    def run_timed(
+        self, task: Any, primary: int, replica: Optional[int] = None
+    ) -> Tuple[Any, int, float]:
+        """Hedged dispatch that also reports the effective (simulated)
+        latency the request experienced: the primary's latency when it
+        beats the deadline, otherwise the faster of primary-finish vs
+        deadline + replica-finish. The serving scheduler charges this
+        latency to its virtual clock when dispatching batches."""
         self.stats.dispatched += 1
         lat_p = self.latency_fn(primary, task)
         if lat_p <= self.deadline_s or replica is None:
-            return self.workers[primary](task), primary
+            return self.workers[primary](task), primary, lat_p
         # hedge fires at the deadline
         self.stats.hedged += 1
         lat_r = self.deadline_s + self.latency_fn(replica, task)
         if lat_p <= lat_r:
             self.stats.wasted += 1
-            return self.workers[primary](task), primary
-        return self.workers[replica](task), replica
+            return self.workers[primary](task), primary, lat_p
+        return self.workers[replica](task), replica, lat_r

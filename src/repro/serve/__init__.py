@@ -1,3 +1,16 @@
 from repro.serve.engine import HarmonyServer, ServeStats
+from repro.serve.scheduler import (
+    Request,
+    RequestResult,
+    SchedulerConfig,
+    ServingScheduler,
+)
 
-__all__ = ["HarmonyServer", "ServeStats"]
+__all__ = [
+    "HarmonyServer",
+    "ServeStats",
+    "Request",
+    "RequestResult",
+    "SchedulerConfig",
+    "ServingScheduler",
+]

@@ -44,12 +44,54 @@ class ServeStats:
     replans: int = 0
     latencies_ms: List[float] = field(default_factory=list)
 
+    # --- admission-controlled scheduler accounting (repro.serve.scheduler)
+    offered: int = 0                 # requests submitted to admission control
+    admitted: int = 0                # requests accepted into the queue
+    shed: int = 0                    # requests rejected by backpressure
+    full_batches: int = 0            # batches fired by the size trigger
+    deadline_batches: int = 0        # batches fired by the max-wait deadline
+    capacity_batches: int = 0        # fired early because the queue hit its bound
+    skew_replans: int = 0            # re-plans triggered by hot-mass drift
+    hedged_batches: int = 0          # batch dispatches whose hedge fired
+    queue_wait_ms: List[float] = field(default_factory=list)     # per request
+    request_latency_ms: List[float] = field(default_factory=list)  # arrival→done
+
     @property
     def qps(self) -> float:
         return self.queries / self.wall_s if self.wall_s else 0.0
 
     def latency_pct(self, p: float) -> float:
         return float(np.percentile(self.latencies_ms, p)) if self.latencies_ms else 0.0
+
+    def queue_wait_pct(self, p: float) -> float:
+        return float(np.percentile(self.queue_wait_ms, p)) if self.queue_wait_ms else 0.0
+
+    def request_latency_pct(self, p: float) -> float:
+        return (
+            float(np.percentile(self.request_latency_ms, p))
+            if self.request_latency_ms
+            else 0.0
+        )
+
+    def summary(self) -> dict:
+        """JSON-friendly digest for the serving benchmarks."""
+        return {
+            "batches": self.batches,
+            "queries": self.queries,
+            "replans": self.replans,
+            "offered": self.offered,
+            "admitted": self.admitted,
+            "shed": self.shed,
+            "full_batches": self.full_batches,
+            "deadline_batches": self.deadline_batches,
+            "capacity_batches": self.capacity_batches,
+            "skew_replans": self.skew_replans,
+            "hedged_batches": self.hedged_batches,
+            "p50_queue_wait_ms": self.queue_wait_pct(50),
+            "p99_queue_wait_ms": self.queue_wait_pct(99),
+            "p50_request_latency_ms": self.request_latency_pct(50),
+            "p99_request_latency_ms": self.request_latency_pct(99),
+        }
 
 
 class HarmonyServer:
@@ -124,6 +166,50 @@ class HarmonyServer:
             self.refresh_plan()
         return res
 
-    def serve(self, request_stream, k: Optional[int] = None):
-        """Drain an iterable of query batches; returns list of results."""
-        return [self.search_batch(q, k) for q in request_stream]
+    def serve(self, request_stream, k: Optional[int] = None, sched=None):
+        """Admission-controlled scheduled serving of an iterable of query
+        batches. Incoming batches are flattened into per-query requests and
+        pushed through :class:`repro.serve.scheduler.ServingScheduler`,
+        which re-forms batches adaptively (size/deadline triggers) and
+        keeps :meth:`search_batch` as the inner execution primitive.
+        Returns one ``SearchResult`` per input batch, aligned with the
+        stream (the synchronous drain-loop contract)."""
+        from repro.core.types import SearchResult
+        from repro.serve.scheduler import SchedulerConfig, ServingScheduler
+
+        sched_cfg = sched or SchedulerConfig()   # unbounded queue by default
+        k = k or self.cfg.topk
+        scheduler = ServingScheduler(self, sched_cfg, k=k)
+        owners: Dict[int, tuple] = {}            # req_id → (batch_idx, row)
+        shapes: List[int] = []
+        for bi, qb in enumerate(request_stream):
+            qb = np.asarray(qb)
+            shapes.append(qb.shape[0])
+            for r in range(qb.shape[0]):
+                rid = scheduler.submit(qb[r], arrival_s=0.0)
+                if rid >= 0:
+                    owners[rid] = (bi, r)
+                # shed requests (bounded sched config) keep their -1/inf
+                # placeholder rows in the output
+        done = scheduler.flush()
+
+        out = [
+            SearchResult(
+                ids=np.full((n, k), -1, np.int64),
+                scores=np.full((n, k), np.inf, np.float32),
+                stats={"scheduled": True, "wall_s": 0.0, "queue_wait_ms": []},
+            )
+            for n in shapes
+        ]
+        for rr in done:
+            bi, r = owners.get(rr.req_id, (None, None))
+            if bi is None:
+                continue
+            out[bi].ids[r] = rr.ids
+            out[bi].scores[r] = rr.scores
+            st = out[bi].stats
+            # per-input-batch wall = first arrival → last completion of its
+            # requests on the scheduler's virtual clock
+            st["wall_s"] = max(st["wall_s"], rr.done_s - rr.arrival_s)
+            st["queue_wait_ms"].append(rr.queue_wait_s * 1e3)
+        return out

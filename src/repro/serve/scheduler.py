@@ -1,0 +1,317 @@
+"""Asynchronous admission-controlled serving scheduler (the BatANN-style
+dispatch layer on top of the HARMONY core).
+
+The paper's throughput claims are won in this layer: requests arrive as
+single queries with timestamps; the scheduler
+
+* **admits** them into a bounded queue (backpressure: arrivals beyond the
+  bound are shed and counted, never silently dropped);
+* **forms batches adaptively** — a batch fires when either the size
+  threshold (``max_batch``, default the engine's ``query_block``) is
+  reached or the oldest queued request has waited ``max_wait_s`` (the
+  deadline trigger that caps tail latency under slow arrivals);
+* **routes skew-aware** — the hot-cluster concentration of the live
+  arrival window (:func:`repro.core.router.workload_concentration` over
+  :func:`estimate_cluster_hits`) is compared against the concentration the
+  current plan was built for; drift past ``replan_drift`` triggers a
+  cost-model re-plan (Fig. 7's skew adaptation, now online);
+* **hedges stragglers** — batch dispatch optionally goes through
+  :class:`repro.runtime.straggler.HedgingExecutor`, whose simulated
+  effective latency is charged to the scheduler's virtual clock.
+
+Time model: the scheduler runs on a *virtual clock* driven by request
+arrival timestamps — the standard single-process simulation methodology
+used by the benchmarks (see ``benchmarks/common.py``). Batch service time
+is the measured ``search_batch`` wall by default, or an injected
+``service_time_fn`` (tests use this to force deterministic backlog). The
+queue/deadline/shed logic is exactly what a multi-host front-end would
+run on real clocks.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Callable, Deque, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.router import (
+    DEFAULT_HOT_FRACTION,
+    estimate_cluster_hits,
+    workload_concentration,
+)
+from repro.runtime.straggler import HedgingExecutor
+
+
+@dataclass(frozen=True)
+class SchedulerConfig:
+    """Knobs of the admission-controlled batch former."""
+
+    max_batch: int = 0              # size trigger; 0 → server cfg.query_block
+    max_wait_s: float = 2e-3        # deadline trigger for the oldest request
+    queue_capacity: int = 0         # backpressure bound; 0 → unbounded
+    replan_drift: float = 0.0       # hot-mass drift threshold; 0 → off
+    hot_fraction: float = DEFAULT_HOT_FRACTION
+    skew_window: int = 1024         # probe rows of the live arrival window
+    min_batches_between_replans: int = 4
+    hedge_deadline_s: float = 0.0   # straggler hedging; 0 → off
+
+
+@dataclass
+class Request:
+    req_id: int
+    query: np.ndarray               # [D]
+    arrival_s: float
+
+
+@dataclass
+class RequestResult:
+    req_id: int
+    ids: np.ndarray                 # [K]
+    scores: np.ndarray              # [K]
+    arrival_s: float
+    dispatch_s: float
+    done_s: float
+    batch_id: int
+
+    @property
+    def queue_wait_s(self) -> float:
+        return self.dispatch_s - self.arrival_s
+
+    @property
+    def latency_s(self) -> float:
+        return self.done_s - self.arrival_s
+
+
+class ServingScheduler:
+    """Admission-controlled adaptive batcher over a ``HarmonyServer``.
+
+    Usage: either drive it incrementally (``submit`` per arrival, then
+    ``flush``) or replay a whole trace with :meth:`run_trace`. Arrival
+    timestamps must be non-decreasing. ``on_batch(batch_idx, scheduler)``
+    is invoked after every dispatched batch — tests use it to kill nodes
+    mid-stream (the elastic invariant extends to scheduled serving).
+    """
+
+    def __init__(
+        self,
+        server,
+        cfg: Optional[SchedulerConfig] = None,
+        k: Optional[int] = None,
+        service_time_fn: Optional[Callable[[int], float]] = None,
+        latency_fn: Optional[Callable[[int, object], float]] = None,
+        on_batch: Optional[Callable[[int, "ServingScheduler"], None]] = None,
+    ):
+        self.server = server
+        self.cfg = cfg or SchedulerConfig()
+        self.k = k or server.cfg.topk
+        self.max_batch = self.cfg.max_batch or server.cfg.query_block
+        assert self.max_batch >= 1
+        self.service_time_fn = service_time_fn
+        self.on_batch = on_batch
+        self.queue: Deque[Request] = deque()
+        self.done: List[RequestResult] = []
+        self.busy_until = 0.0
+        self.first_arrival_s: Optional[float] = None
+        self._next_id = 0
+        self._batch_id = 0
+        self._batches_since_replan = 0
+        # skew baseline: hot-mass of the workload the current plan was
+        # built for (set lazily; re-synced after ANY re-plan, including
+        # fail_node / replan_every ones done behind the scheduler's back)
+        self._plan_hot: Optional[float] = None
+        self._seen_replans = server.stats.replans
+        self._hedge: Optional[HedgingExecutor] = None
+        if self.cfg.hedge_deadline_s > 0:
+            # one worker slot per cluster node; every worker executes the
+            # same search primitive, so the hedge target's answer is the
+            # primary's answer (HARMONY's replica layout recomputes visits)
+            self._hedge = HedgingExecutor(
+                workers=[self._exec_task] * server.cluster.n_nodes,
+                deadline_s=self.cfg.hedge_deadline_s,
+                latency_fn=latency_fn or (lambda w, t: 0.0),
+            )
+
+    # ---------------------------------------------------------------- admit
+    def submit(self, query: np.ndarray, arrival_s: float) -> int:
+        """Offer one request. Returns its req_id, or -1 if shed by
+        backpressure. Fires any batches due before ``arrival_s`` first.
+
+        req_ids are consumed by shed requests too, so a served request's
+        req_id is always its submission (trace) position — results map
+        back to the trace even after shedding."""
+        self.advance(arrival_s)
+        stats = self.server.stats
+        stats.offered += 1
+        rid = self._next_id
+        self._next_id += 1
+        if self.first_arrival_s is None:
+            self.first_arrival_s = arrival_s
+        if self.cfg.queue_capacity and len(self.queue) >= self.cfg.queue_capacity:
+            stats.shed += 1
+            return -1
+        self.queue.append(Request(rid, np.asarray(query), arrival_s))
+        stats.admitted += 1
+        return rid
+
+    # ------------------------------------------------------------ batch form
+    def _next_fire(self) -> Tuple[float, str]:
+        """(virtual time at which the next batch can dispatch, trigger)."""
+        if len(self.queue) >= self.max_batch:
+            ready = self.queue[self.max_batch - 1].arrival_s
+            trigger = "full"
+        else:
+            ready = self.queue[0].arrival_s + self.cfg.max_wait_s
+            trigger = "deadline"
+            if (self.cfg.queue_capacity
+                    and len(self.queue) >= self.cfg.queue_capacity
+                    and self.queue[-1].arrival_s < ready):
+                # queue at its bound with the size trigger unreachable:
+                # fire as soon as the server frees up instead of shedding
+                # behind an idle server until the deadline
+                ready = self.queue[-1].arrival_s
+                trigger = "capacity"
+        return max(ready, self.busy_until), trigger
+
+    def advance(self, now: float):
+        """Fire every batch whose dispatch time is ≤ ``now``."""
+        while self.queue:
+            dispatch_s, trigger = self._next_fire()
+            if dispatch_s > now:
+                break
+            self._dispatch(dispatch_s, trigger)
+
+    def flush(self) -> List[RequestResult]:
+        """Drain the queue (deadlines fire naturally on the virtual clock)
+        and return all results in request order."""
+        self.advance(math.inf)
+        return sorted(self.done, key=lambda r: r.req_id)
+
+    # -------------------------------------------------------------- dispatch
+    def _exec_task(self, task):
+        queries, k = task
+        return self.server.search_batch(queries, k)
+
+    def _dispatch(self, dispatch_s: float, trigger: str):
+        batch = [self.queue.popleft()
+                 for _ in range(min(len(self.queue), self.max_batch))]
+        queries = np.stack([r.query for r in batch])
+        stats = self.server.stats
+
+        t0 = time.perf_counter()
+        sim_lat = 0.0
+        if self._hedge is not None:
+            # elastic scale-up (join_node) grows the cluster after init;
+            # keep one worker slot per node so live indices stay valid
+            while len(self._hedge.workers) < self.server.cluster.n_nodes:
+                self._hedge.workers.append(self._exec_task)
+            live = np.nonzero(self.server.cluster.live)[0]
+            primary = int(live[self._batch_id % len(live)])
+            replica = int(live[(self._batch_id + 1) % len(live)]) if len(live) > 1 else None
+            hedged_before = self._hedge.stats.hedged
+            res, _, sim_lat = self._hedge.run_timed((queries, self.k), primary, replica)
+            if self._hedge.stats.hedged > hedged_before:
+                stats.hedged_batches += 1
+        else:
+            res = self.server.search_batch(queries, self.k)
+        wall = time.perf_counter() - t0
+        service_s = (
+            self.service_time_fn(len(batch)) if self.service_time_fn else wall
+        ) + sim_lat
+        done_s = dispatch_s + service_s
+        self.busy_until = done_s
+
+        if trigger == "full":
+            stats.full_batches += 1
+        elif trigger == "capacity":
+            stats.capacity_batches += 1
+        else:
+            stats.deadline_batches += 1
+        for row, req in enumerate(batch):
+            stats.queue_wait_ms.append((dispatch_s - req.arrival_s) * 1e3)
+            stats.request_latency_ms.append((done_s - req.arrival_s) * 1e3)
+            self.done.append(
+                RequestResult(
+                    req_id=req.req_id,
+                    ids=res.ids[row],
+                    scores=res.scores[row],
+                    arrival_s=req.arrival_s,
+                    dispatch_s=dispatch_s,
+                    done_s=done_s,
+                    batch_id=self._batch_id,
+                )
+            )
+        self._batch_id += 1
+        self._batches_since_replan += 1
+        self._maybe_replan_on_skew()
+        if self.on_batch is not None:
+            self.on_batch(self._batch_id - 1, self)
+
+    # ------------------------------------------------------- skew adaptation
+    def _window_hot_mass(self) -> Optional[float]:
+        # walk the probe history from the newest batch back, taking only
+        # enough arrays to cover the window (not the whole history)
+        take, rows = [], 0
+        for p in reversed(self.server._recent_probes):
+            take.append(p)
+            rows += p.shape[0]
+            if rows >= self.cfg.skew_window:
+                break
+        if not take:
+            return None
+        window = np.concatenate(take[::-1], axis=0)[-self.cfg.skew_window:]
+        hits = estimate_cluster_hits(window, self.server.index.nlist)
+        return workload_concentration(hits, self.cfg.hot_fraction)
+
+    def _maybe_replan_on_skew(self):
+        if self.cfg.replan_drift <= 0:
+            return
+        if self.server.stats.replans != self._seen_replans:
+            # the plan was rebuilt elsewhere (fail_node, replan_every):
+            # re-baseline on the window that plan saw
+            self._seen_replans = self.server.stats.replans
+            self._plan_hot = self._window_hot_mass()
+            self._batches_since_replan = 0
+            return
+        if self._plan_hot is None:
+            # the initial plan was built from a uniform workload prior
+            self._plan_hot = workload_concentration(
+                np.ones(self.server.index.nlist), self.cfg.hot_fraction
+            )
+        if self._batches_since_replan < self.cfg.min_batches_between_replans:
+            return
+        hot = self._window_hot_mass()
+        if hot is None:
+            return
+        if abs(hot - self._plan_hot) > self.cfg.replan_drift:
+            self.server.refresh_plan()
+            self.server.stats.skew_replans += 1
+            self._plan_hot = hot
+            self._seen_replans = self.server.stats.replans
+            self._batches_since_replan = 0
+
+    # ---------------------------------------------------------------- replay
+    def run_trace(
+        self, trace: Sequence[Tuple[float, np.ndarray]]
+    ) -> List[RequestResult]:
+        """Replay a whole (arrival_s, query)-trace and drain. Returns served
+        results ordered by req_id; shed requests have no result (compare
+        ``server.stats.shed``)."""
+        for arrival_s, q in trace:
+            self.submit(q, arrival_s)
+        return self.flush()
+
+    # ------------------------------------------------------------- reporting
+    @property
+    def makespan_s(self) -> float:
+        """First arrival → last completion on the virtual clock."""
+        if self.first_arrival_s is None:
+            return 0.0
+        return max(self.busy_until - self.first_arrival_s, 0.0)
+
+    @property
+    def served_qps(self) -> float:
+        return len(self.done) / self.makespan_s if self.makespan_s > 0 else 0.0

@@ -13,6 +13,17 @@ from repro.models import RunCtx, decode_step, init_cache, init_params, loss_fn, 
 
 ARCHS = cfgs.arch_names()
 
+# the heaviest smoke configs on CPU (20s+ per case); excluded from the
+# default tier-1 run via the registered `slow` marker
+SLOW_ARCHS = {"gemma3-27b", "zamba2-2.7b"}
+
+
+def _params(archs):
+    return [
+        pytest.param(a, marks=pytest.mark.slow) if a in SLOW_ARCHS else a
+        for a in archs
+    ]
+
 
 def _batch(cfg, B=2, S=32, seed=0):
     rng = np.random.default_rng(seed)
@@ -32,7 +43,7 @@ def _batch(cfg, B=2, S=32, seed=0):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", _params(ARCHS))
 def test_forward_backward_smoke(arch):
     cfg = cfgs.get_smoke_config(arch)
     params = init_params(cfg, jax.random.PRNGKey(0))
@@ -50,8 +61,8 @@ def test_forward_backward_smoke(arch):
     assert float(jnp.abs(probe.astype(jnp.float32)).sum()) > 0
 
 
-@pytest.mark.parametrize("arch", [a for a in ARCHS
-                                  if cfgs.get_config(a).supports_decode])
+@pytest.mark.parametrize("arch", _params(
+    [a for a in ARCHS if cfgs.get_config(a).supports_decode]))
 def test_decode_smoke(arch):
     cfg = cfgs.get_smoke_config(arch)
     params = init_params(cfg, jax.random.PRNGKey(0))
@@ -67,7 +78,7 @@ def test_decode_smoke(arch):
     assert np.isfinite(np.asarray(logits)).all(), arch
 
 
-@pytest.mark.parametrize("arch", ["xlstm-1.3b", "zamba2-2.7b"])
+@pytest.mark.parametrize("arch", _params(["xlstm-1.3b", "zamba2-2.7b"]))
 def test_recurrent_decode_matches_forward(arch):
     """Teacher-forced decode logits must match the parallel forward —
     validates the chunkwise/recurrent state equivalence."""

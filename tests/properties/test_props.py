@@ -17,6 +17,8 @@ The invariants that make HARMONY's pruning *exact* rather than heuristic:
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the hypothesis extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.config import HarmonyConfig

@@ -1,0 +1,251 @@
+"""Serving-scheduler tests: admission control, adaptive batch forming,
+backpressure, skew-triggered re-planning, hedged dispatch, and the elastic
+invariant under scheduled serving.
+
+The scheduler runs on a virtual clock driven by arrival timestamps, so
+every assertion here is deterministic: batch composition, trigger type,
+and shed counts depend only on the trace (service time is injected where
+the test needs backlog)."""
+
+import numpy as np
+import pytest
+
+from repro.config import HarmonyConfig
+from repro.core import build_ivf, search_oracle
+from repro.data import make_dataset, make_queries
+from repro.serve import HarmonyServer, SchedulerConfig, ServingScheduler
+
+
+@pytest.fixture(scope="module")
+def anns():
+    ds = make_dataset(nb=4000, dim=32, n_components=8, spread=0.6, seed=0)
+    cfg = HarmonyConfig(dim=32, nlist=32, nprobe=6, topk=5, kmeans_iters=4)
+    index = build_ivf(ds.x, cfg)
+    q = make_queries(ds, nq=64, skew=0.3, noise=0.2, seed=1)
+    return ds, cfg, index, q
+
+
+def _server(index, n_nodes=4):
+    return HarmonyServer(index, n_nodes=n_nodes)
+
+
+# ------------------------------------------------------------- (a) exactness
+
+
+def test_scheduled_results_bitwise_equal_synchronous(anns):
+    """Scheduled serving with the same batch composition must be BITWISE
+    identical to the synchronous search_batch drain loop."""
+    ds, cfg, index, q = anns
+    srv_sched = _server(index)
+    srv_sync = _server(index)
+    B = 16
+    sched = ServingScheduler(srv_sched, SchedulerConfig(max_batch=B), k=5)
+    results = sched.run_trace([(0.0, q[i]) for i in range(len(q))])
+    assert len(results) == len(q)
+    assert [r.req_id for r in results] == list(range(len(q)))
+    got_scores = np.stack([r.scores for r in results])
+    got_ids = np.stack([r.ids for r in results])
+
+    want_scores, want_ids = [], []
+    for lo in range(0, len(q), B):
+        res = srv_sync.search_batch(q[lo : lo + B], 5)
+        want_scores.append(res.scores)
+        want_ids.append(res.ids)
+    assert np.array_equal(got_scores, np.concatenate(want_scores))
+    assert np.array_equal(got_ids, np.concatenate(want_ids))
+    assert srv_sched.stats.full_batches == len(q) // B
+    assert srv_sched.stats.deadline_batches == 0
+    assert srv_sched.stats.shed == 0
+
+
+def test_serve_stream_is_scheduled_and_aligned(anns):
+    """HarmonyServer.serve (now scheduler-backed) returns one result per
+    input batch, aligned with the stream, matching the oracle."""
+    ds, cfg, index, q = anns
+    srv = _server(index)
+    outs = srv.serve([q[0:16], q[16:48], q[48:64]], k=5)
+    assert [o.ids.shape[0] for o in outs] == [16, 32, 16]
+    oracle = search_oracle(index, q, k=5)
+    np.testing.assert_allclose(
+        np.concatenate([o.scores for o in outs]), oracle.scores,
+        rtol=1e-3, atol=1e-3,
+    )
+    assert srv.stats.admitted == 64 and srv.stats.shed == 0
+
+
+# -------------------------------------------------------- (b) deadline fires
+
+
+def test_deadline_triggers_batches_under_slow_arrivals(anns):
+    """Arrivals slower than max_wait_s must fire (small) deadline batches;
+    queue waits are bounded by the deadline on the virtual clock."""
+    ds, cfg, index, q = anns
+    srv = _server(index)
+    sched = ServingScheduler(
+        srv, SchedulerConfig(max_batch=32, max_wait_s=0.002), k=5,
+        service_time_fn=lambda n: 0.0,   # keep the virtual clock deterministic
+    )
+    n = 8
+    results = sched.run_trace([(0.010 * i, q[i]) for i in range(n)])
+    assert len(results) == n
+    assert srv.stats.deadline_batches == n      # every batch fired by deadline
+    assert srv.stats.full_batches == 0
+    for w in srv.stats.queue_wait_ms:
+        assert 0.0 <= w <= 2.0 + 1e-6
+    oracle = search_oracle(index, q[:n], k=5)
+    np.testing.assert_allclose(
+        np.stack([r.scores for r in results]), oracle.scores,
+        rtol=1e-3, atol=1e-3,
+    )
+
+
+# ------------------------------------------------------- (c) backpressure
+
+
+def test_backpressure_sheds_and_counts(anns):
+    """Once the bounded queue fills behind a slow server, arrivals are shed
+    and accounted; admitted requests are all served."""
+    ds, cfg, index, q = anns
+    srv = _server(index)
+    sched = ServingScheduler(
+        srv,
+        SchedulerConfig(max_batch=4, queue_capacity=8, max_wait_s=0.001),
+        k=5,
+        service_time_fn=lambda n: 1.0,        # 1s virtual service → backlog
+    )
+    n = 64
+    results = sched.run_trace([(i * 1e-6, q[i % len(q)]) for i in range(n)])
+    st = srv.stats
+    # batch 1 (4 reqs) fires during the burst; the queue then fills to its
+    # bound (8); everything else is shed.
+    assert st.offered == n
+    assert st.admitted == 12
+    assert st.shed == n - 12
+    assert st.offered == st.admitted + st.shed
+    assert len(results) == st.admitted
+    served_ids = {r.req_id for r in results}
+    assert len(served_ids) == st.admitted     # shed requests have no result
+
+
+def test_capacity_fire_drains_bounded_queue_early(anns):
+    """When queue_capacity < max_batch the size trigger is unreachable; the
+    queue hitting its bound must fire the batch (counted separately) rather
+    than shedding behind an idle server until the deadline."""
+    ds, cfg, index, q = anns
+    srv = _server(index)
+    sched = ServingScheduler(
+        srv,
+        SchedulerConfig(max_batch=8, queue_capacity=2, max_wait_s=1.0),
+        k=5,
+        service_time_fn=lambda n: 0.0,
+    )
+    results = sched.run_trace([(i * 1e-4, q[i]) for i in range(8)])
+    st = srv.stats
+    assert len(results) == 8 and st.shed == 0     # nothing shed: drained early
+    assert st.capacity_batches == 4               # 4 pairs, all capacity-fired
+    assert st.full_batches == 0 and st.deadline_batches == 0
+    oracle = search_oracle(index, q[:8], k=5)
+    np.testing.assert_allclose(
+        np.stack([r.scores for r in results]), oracle.scores,
+        rtol=1e-3, atol=1e-3,
+    )
+
+
+# ------------------------------------------- (d) elastic invariant mid-stream
+
+
+def test_fail_node_mid_stream_preserves_results(anns):
+    """Killing a node between scheduled batches re-plans but must not change
+    any result (extends the runtime/elastic invariant to the scheduler)."""
+    ds, cfg, index, q = anns
+    srv = _server(index)
+    oracle = search_oracle(index, q, k=5)
+
+    def killer(batch_idx, sched):
+        if batch_idx == 1:
+            sched.server.fail_node(1)
+
+    sched = ServingScheduler(
+        srv, SchedulerConfig(max_batch=16), k=5, on_batch=killer
+    )
+    results = sched.run_trace([(0.0, q[i]) for i in range(len(q))])
+    assert srv.cluster.n_live == 3
+    assert srv.stats.replans >= 1
+    np.testing.assert_allclose(
+        np.stack([r.scores for r in results]), oracle.scores,
+        rtol=1e-3, atol=1e-3,
+    )
+
+
+# ----------------------------------------------------- skew-aware re-planning
+
+
+def test_skew_drift_triggers_replan(anns):
+    """A workload that drifts from uniform to hot must push the live-window
+    hot-mass past the drift threshold and trigger a cost-model re-plan."""
+    ds, cfg, index, q = anns
+    srv = _server(index)
+    sched = ServingScheduler(
+        srv,
+        SchedulerConfig(
+            max_batch=8, replan_drift=0.15, min_batches_between_replans=2
+        ),
+        k=5,
+    )
+    qu = make_queries(ds, nq=32, skew=0.0, noise=0.2, seed=2)
+    qh = make_queries(ds, nq=64, skew=0.95, hot_fraction=0.04, noise=0.1, seed=3)
+    trace = [(i * 1e-4, qu[i]) for i in range(32)]
+    trace += [(0.01 + i * 1e-4, qh[i]) for i in range(64)]
+    results = sched.run_trace(trace)
+    assert len(results) == 96
+    assert srv.stats.skew_replans >= 1
+    # results stay exact across the re-plan
+    oracle = search_oracle(index, np.concatenate([qu, qh]), k=5)
+    np.testing.assert_allclose(
+        np.stack([r.scores for r in results]), oracle.scores,
+        rtol=1e-3, atol=1e-3,
+    )
+
+
+# ----------------------------------------------------------- hedged dispatch
+
+
+def test_hedged_dispatch_fires_and_preserves_results(anns):
+    """A straggling primary makes the hedge fire; results are unchanged and
+    the effective latency is charged to the virtual clock."""
+    ds, cfg, index, q = anns
+    srv = _server(index)
+    lat = lambda w, t: 0.5 if w == 0 else 1e-5      # node 0 straggles
+    sched = ServingScheduler(
+        srv,
+        SchedulerConfig(max_batch=8, hedge_deadline_s=0.01),
+        k=5,
+        latency_fn=lat,
+    )
+    results = sched.run_trace([(0.0, q[i]) for i in range(32)])
+    assert srv.stats.hedged_batches >= 1
+    assert sched._hedge.stats.hedged >= 1
+    oracle = search_oracle(index, q[:32], k=5)
+    np.testing.assert_allclose(
+        np.stack([r.scores for r in results]), oracle.scores,
+        rtol=1e-3, atol=1e-3,
+    )
+
+
+# ------------------------------------------------------------------ plumbing
+
+
+def test_stats_summary_and_percentiles(anns):
+    ds, cfg, index, q = anns
+    srv = _server(index)
+    sched = ServingScheduler(srv, SchedulerConfig(max_batch=16), k=5)
+    sched.run_trace([(0.0, q[i]) for i in range(32)])
+    s = srv.stats.summary()
+    for key in (
+        "p50_queue_wait_ms", "p99_queue_wait_ms", "shed", "admitted",
+        "full_batches", "deadline_batches", "skew_replans",
+    ):
+        assert key in s
+    assert s["admitted"] == 32
+    assert srv.stats.queue_wait_pct(50) <= srv.stats.queue_wait_pct(99) + 1e-9
+    assert sched.served_qps > 0
