@@ -1,0 +1,129 @@
+"""Host engine vs device-resident executor: batched serving throughput.
+
+Measures the same batches through both ``HarmonyServer.search_batch``
+backends — the staged numpy engine ("host") and the jit'd SPMD pipeline
+with static-shape bucketing ("spmd") — across batch sizes and workload
+skew, with executor compiles excluded via a per-bucket warmup pass. The
+realized tile-level pruning saving comes from the kernel's skip map.
+
+Emits the usual CSV rows and folds a JSON summary into
+``benchmarks/serving_results.json`` (written earlier in the run by
+``bench_serving``) so the perf trajectory is tracked across PRs:
+
+    "executor": {
+      "config":    {"chunk": int, "qb_buckets": [int, ...],
+                    "use_pallas": bool},
+      "sweep": [   one entry per (batch size, workload) cell
+        {"qb": int, "workload": "uniform" | "skewed", "n_queries": int,
+         "host_qps": float, "exec_qps": float, "speedup": float,
+         "tile_skip_frac": float}
+      ],
+      "executor_stats": SpmdExecutor.stats_summary()   # buckets compiled,
+                        # dispatch/compile counts, cumulative tile skips
+      "claim_exec_ge_host_qb64_skewed": bool           # acceptance claim
+    }
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.bench_skew import make_hot_queries
+from benchmarks.common import TINY, corpus, emit
+from repro.data import make_queries
+from repro.serve import ExecutorConfig, HarmonyServer
+
+QBS = (16, 64) if TINY else (16, 64, 128)
+BATCHES_PER_CELL = 3
+N_NODES = 4
+
+
+def _time_backend(srv, batches, backend, reps=2):
+    """Best-of-``reps`` wall (both backends are warmed by the caller, so
+    this measures steady-state serving, not compiles or cold caches)."""
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for b in batches:
+            srv.search_batch(b, backend=backend)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main():
+    ds, cfg, index = corpus()
+    ex_cfg = ExecutorConfig(chunk=512, qb_buckets=QBS)
+    srv = HarmonyServer(index, n_nodes=N_NODES, executor_cfg=ex_cfg)
+    ex = srv.executor
+
+    nq = max(QBS) * BATCHES_PER_CELL
+    workloads = {
+        "uniform": make_queries(ds, nq=nq, skew=0.0, noise=0.2, seed=31),
+        "skewed": make_hot_queries(ds, skew=0.9, nq=nq),
+    }
+
+    print(f"# executor: host vs device-resident spmd backend, "
+          f"{BATCHES_PER_CELL} batches/cell, buckets={list(ex.qb_buckets)}")
+    sweep = []
+    for qb in QBS:
+        for name, q in workloads.items():
+            batches = [q[i * qb : (i + 1) * qb] for i in range(BATCHES_PER_CELL)]
+            srv.search_batch(batches[0], backend="spmd")   # warm the bucket
+            srv.search_batch(batches[0], backend="host")   # warm host caches
+            skipped0, total0 = ex.tile_skipped, ex.tile_total
+            exec_s = _time_backend(srv, batches, "spmd")
+            host_s = _time_backend(srv, batches, "host")
+            host_qps = len(batches) * qb / max(host_s, 1e-9)
+            exec_qps = len(batches) * qb / max(exec_s, 1e-9)
+            skip_frac = (ex.tile_skipped - skipped0) / max(
+                ex.tile_total - total0, 1
+            )
+            cell = {
+                "qb": qb,
+                "workload": name,
+                "n_queries": len(batches) * qb,
+                "host_qps": host_qps,
+                "exec_qps": exec_qps,
+                "speedup": exec_qps / max(host_qps, 1e-9),
+                "tile_skip_frac": skip_frac,
+            }
+            sweep.append(cell)
+            emit(
+                f"executor.{name}.qb{qb}",
+                1e6 / max(exec_qps, 1e-9),
+                f"exec_qps={exec_qps:.0f};host_qps={host_qps:.0f};"
+                f"speedup={cell['speedup']:.2f};tile_skip={skip_frac:.2f}",
+            )
+
+    ok = all(
+        c["exec_qps"] >= c["host_qps"]
+        for c in sweep
+        if c["workload"] == "skewed" and c["qb"] >= 64
+    )
+    emit("executor.claim.exec_ge_host_qb64_skewed", 0.0, f"ok={ok}")
+
+    report = {
+        "config": {
+            "chunk": ex_cfg.chunk,
+            "qb_buckets": list(ex.qb_buckets),
+            "use_pallas": ex_cfg.use_pallas,
+        },
+        "sweep": sweep,
+        "executor_stats": ex.stats_summary(),
+        "claim_exec_ge_host_qb64_skewed": bool(ok),
+    }
+    # fold into the serving results blob (bench_serving writes it earlier in
+    # the run; create it if this bench runs standalone)
+    out = Path(__file__).resolve().parent / "serving_results.json"
+    blob = json.loads(out.read_text()) if out.exists() else {}
+    blob["executor"] = report
+    out.write_text(json.dumps(blob, indent=2, sort_keys=True))
+    print(json.dumps({"executor": report}, indent=2, sort_keys=True))
+
+
+if __name__ == "__main__":
+    main()

@@ -23,11 +23,11 @@ from pathlib import Path
 import numpy as np
 
 from benchmarks.bench_skew import make_hot_queries
-from benchmarks.common import corpus, emit
+from benchmarks.common import TINY, corpus, emit
 from repro.data import make_queries
 from repro.serve import HarmonyServer, SchedulerConfig, ServingScheduler
 
-N_REQ = 384
+N_REQ = 96 if TINY else 384
 N_NODES = 4
 
 

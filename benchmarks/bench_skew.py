@@ -14,6 +14,10 @@ from repro.data import make_queries
 def make_hot_queries(ds, skew, nq=256):
     """Skewed workloads concentrate on very few components (paper Fig. 7
     manipulates query sets until single nodes saturate)."""
+    from benchmarks.common import TINY
+
+    if TINY:
+        nq = min(nq, 64)
     return make_queries(ds, nq=nq, skew=skew, hot_fraction=0.04, noise=0.2, seed=11)
 
 

@@ -15,6 +15,7 @@ walls are reported alongside.
 from __future__ import annotations
 
 import functools
+import os
 import time
 from typing import Dict, Optional, Tuple
 
@@ -27,6 +28,11 @@ from repro.data import brute_force_topk, make_dataset, make_queries, recall_at_k
 
 ROWS = []
 
+# CI smoke switch: HARMONY_BENCH_TINY=1 clamps every corpus/query-set size
+# so the whole bench suite runs in minutes (numbers are meaningless at this
+# scale — the job only guards the scripts against rot).
+TINY = os.environ.get("HARMONY_BENCH_TINY", "") not in ("", "0")
+
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     row = f"{name},{us_per_call:.1f},{derived}"
@@ -37,8 +43,12 @@ def emit(name: str, us_per_call: float, derived: str = ""):
 @functools.lru_cache(maxsize=8)
 def corpus(nb: int = 40_000, dim: int = 128, ncomp: int = 64, spread: float = 0.6,
            nlist: int = 256, nprobe: int = 16, seed: int = 7):
+    if TINY:
+        nb, nlist, nprobe = min(nb, 4000), min(nlist, 32), min(nprobe, 8)
+    kmeans_iters = 4 if TINY else 8
     ds = make_dataset(nb=nb, dim=dim, n_components=ncomp, spread=spread, seed=seed)
-    cfg = HarmonyConfig(dim=dim, nlist=nlist, nprobe=nprobe, topk=10, kmeans_iters=8)
+    cfg = HarmonyConfig(dim=dim, nlist=nlist, nprobe=nprobe, topk=10,
+                        kmeans_iters=kmeans_iters)
     index = build_ivf(ds.x, cfg)
     return ds, cfg, index
 
@@ -46,6 +56,8 @@ def corpus(nb: int = 40_000, dim: int = 128, ncomp: int = 64, spread: float = 0.
 @functools.lru_cache(maxsize=16)
 def query_set(nb: int, dim: int, skew: float, nq: int = 256, seed: int = 3,
               noise: float = 0.2, tail: float = 0.0):
+    if TINY:
+        nq = min(nq, 64)
     ds, cfg, index = corpus(nb=nb, dim=dim)
     return make_queries(ds, nq=nq, skew=skew, noise=noise, seed=seed,
                         tail_fraction=tail)

@@ -15,6 +15,7 @@ def main() -> None:
         bench_ablation,
         bench_breakdown,
         bench_build,
+        bench_executor,
         bench_memory,
         bench_pruning_ratio,
         bench_qps_recall,
@@ -28,6 +29,7 @@ def main() -> None:
         bench_qps_recall,
         bench_skew,
         bench_serving,
+        bench_executor,
         bench_breakdown,
         bench_ablation,
         bench_pruning_ratio,

@@ -56,6 +56,16 @@ class IVFIndex:
     def cluster_rows(self, c: int) -> Tuple[int, int]:
         return int(self.offsets[c]), int(self.offsets[c + 1])
 
+    @property
+    def xnorm2(self) -> np.ndarray:
+        """Full-corpus squared norms ‖x‖² [NB], materialized once and
+        cached (the oracle and prewarm paths share it)."""
+        cached = self.__dict__.get("_xnorm2")
+        if cached is None:
+            cached = np.sum(self.x * self.x, axis=1)
+            self.__dict__["_xnorm2"] = cached
+        return cached
+
     def memory_bytes(self) -> int:
         return sum(a.nbytes for a in (self.centers, self.x, self.ids, self.offsets))
 

@@ -55,6 +55,9 @@ def search_oracle(
     out_s = np.full((nq, k), np.inf, np.float32)
     out_i = np.full((nq, k), -1, np.int64)
     t0 = time.perf_counter()
+    # corpus norms are query-invariant: materialize once (cached on the
+    # index), not inside every query chunk
+    xn2 = index.xnorm2 if cfg.metric == "l2" else None
     for lo in range(0, nq, chunk):
         hi = min(nq, lo + chunk)
         member = np.zeros((hi - lo, index.nlist), bool)
@@ -64,7 +67,7 @@ def search_oracle(
             d = (
                 np.sum(q[lo:hi] * q[lo:hi], axis=1)[:, None]
                 - 2.0 * (q[lo:hi] @ index.x.T)
-                + np.sum(index.x * index.x, axis=1)[None, :]
+                + xn2[None, :]
             )
         else:
             d = -(q[lo:hi] @ index.x.T)

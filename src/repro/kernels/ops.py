@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.distance import partial_distance_update as _pallas_update
+from repro.kernels.topk_update import running_topk_update as _pallas_topk
 
 
 def _on_tpu() -> bool:
@@ -67,6 +68,31 @@ def _tile_skip_map(acc: jnp.ndarray, tile_m: int, tile_n: int) -> jnp.ndarray:
     a = a.reshape(mp // tile_m, tile_m, np_ // tile_n, tile_n)
     alive = jnp.isfinite(a).any(axis=(1, 3))
     return (~alive).astype(jnp.int32)
+
+
+def running_topk_update(
+    scores: jnp.ndarray,      # [M, C] f32, +inf = invalid
+    ids: jnp.ndarray,         # [M, C] i32
+    run_s: jnp.ndarray,       # [M, K] f32 ascending
+    run_i: jnp.ndarray,       # [M, K] i32
+    *,
+    k: int,
+    tile_m: int = 8,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Merge a candidate chunk into the per-query running top-K.
+
+    Routes to the fused VMEM-resident Pallas kernel (interpret-mode off
+    TPU) or the concat+sort jnp oracle with ``use_pallas=False``.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    if use_pallas:
+        return _pallas_topk(
+            scores, ids, run_s, run_i, k=k, tile_m=tile_m, interpret=interpret
+        )
+    return ref.running_topk_ref(scores, ids, run_s, run_i, k=k)
 
 
 def masked_topk(scores: jnp.ndarray, ids: jnp.ndarray, k: int):

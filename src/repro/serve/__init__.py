@@ -1,4 +1,36 @@
+"""Serving layer: scheduler-backed batched ANNS over the HARMONY core.
+
+Backend selection
+-----------------
+Every scheduled batch executes through ``HarmonyServer.search_batch``,
+which dispatches to one of two interchangeable engines:
+
+* ``backend="host"`` (default) — the staged numpy engine
+  (:func:`repro.core.search.harmony_search`), the CPU-measured
+  reproduction path and the exactness oracle;
+* ``backend="spmd"`` — the device-resident executor
+  (:class:`repro.serve.executor.SpmdExecutor`), which holds the sharded
+  corpus, per-block norms and ids on the device mesh once and runs the
+  jit'd Pallas/SPMD ring pipeline per batch.
+
+Select per server (``HarmonyServer(..., backend="spmd")``), per call
+(``search_batch(q, backend=...)``), or per scheduler
+(``SchedulerConfig(backend="spmd")`` — what ``HarmonyServer.serve`` uses).
+Both backends return identical top-K up to floating-point tie order.
+
+The bucket ladder
+-----------------
+jit recompiles per static shape, while the scheduler's adaptive batches
+vary in query count and candidate volume. The executor therefore pads
+each batch up a small ladder of (qb, cap) buckets — qb from
+``ExecutorConfig.qb_buckets``, cap = chunk·2^i up to the shard capacity —
+and caches one compiled step per bucket, so a mixed-size replay compiles
+each bucket at most once. Batches beyond the biggest qb bucket are split
+and merged host-side.
+"""
+
 from repro.serve.engine import HarmonyServer, ServeStats
+from repro.serve.executor import ExecutorConfig, SpmdExecutor
 from repro.serve.scheduler import (
     Request,
     RequestResult,
@@ -9,6 +41,8 @@ from repro.serve.scheduler import (
 __all__ = [
     "HarmonyServer",
     "ServeStats",
+    "ExecutorConfig",
+    "SpmdExecutor",
     "Request",
     "RequestResult",
     "SchedulerConfig",

@@ -44,6 +44,8 @@ class ServeStats:
     replans: int = 0
     latencies_ms: List[float] = field(default_factory=list)
 
+    spmd_batches: int = 0            # batches served by the device executor
+
     # --- admission-controlled scheduler accounting (repro.serve.scheduler)
     offered: int = 0                 # requests submitted to admission control
     admitted: int = 0                # requests accepted into the queue
@@ -77,6 +79,7 @@ class ServeStats:
         """JSON-friendly digest for the serving benchmarks."""
         return {
             "batches": self.batches,
+            "spmd_batches": self.spmd_batches,
             "queries": self.queries,
             "replans": self.replans,
             "offered": self.offered,
@@ -104,14 +107,34 @@ class HarmonyServer:
         cfg: Optional[HarmonyConfig] = None,
         replan_every: int = 0,          # batches between plan refreshes (0=off)
         workload_window: int = 2048,
+        backend: str = "host",          # "host" | "spmd" default for batches
+        executor_cfg=None,              # ExecutorConfig for the spmd backend
     ):
+        assert backend in ("host", "spmd"), backend
         self.index = index
         self.cfg = cfg or index.cfg
         self.cluster = ClusterState.fresh(n_nodes)
         self.replan_every = replan_every
+        self.backend = backend
+        self._executor_cfg = executor_cfg
+        self._executor = None           # built lazily on first spmd batch
         self._recent_probes: Deque[np.ndarray] = deque(maxlen=workload_window)
         self.stats = ServeStats()
         self._plan_decision, self.corpus = self._plan(None)
+
+    @property
+    def executor(self):
+        """Lazily-built device-resident executor (the "spmd" backend).
+
+        Self-contained w.r.t. re-planning: the executor keeps its own
+        mesh-shaped corpus packing, so host-plan refreshes (skew drift,
+        fail_node) never force a corpus re-upload — results are
+        plan-invariant by the exactness guarantee."""
+        if self._executor is None:
+            from repro.serve.executor import SpmdExecutor
+
+            self._executor = SpmdExecutor(self.index, self._executor_cfg)
+        return self._executor
 
     # ------------------------------------------------------------- planning
     def _plan(self, probes_sample):
@@ -151,12 +174,26 @@ class HarmonyServer:
         self.refresh_plan()
 
     # -------------------------------------------------------------- serving
-    def search_batch(self, queries: np.ndarray, k: Optional[int] = None):
-        """One batch through the engine; records workload + stats."""
+    def search_batch(
+        self,
+        queries: np.ndarray,
+        k: Optional[int] = None,
+        backend: Optional[str] = None,
+    ):
+        """One batch through the engine; records workload + stats.
+
+        ``backend="host"`` runs the staged numpy engine (the exactness
+        oracle); ``backend="spmd"`` dispatches into the device-resident
+        executor. Results are identical up to floating-point tie order."""
+        backend = backend or self.backend
         t0 = time.perf_counter()
         probes = assign_queries(self.index, queries)
         self._recent_probes.append(probes)
-        res = harmony_search(self.index, self.corpus, queries, k=k)
+        if backend == "spmd":
+            res = self.executor.search_batch(queries, k=k, probes=probes)
+            self.stats.spmd_batches += 1
+        else:
+            res = harmony_search(self.index, self.corpus, queries, k=k)
         dt = time.perf_counter() - t0
         self.stats.batches += 1
         self.stats.queries += queries.shape[0]
@@ -166,14 +203,22 @@ class HarmonyServer:
             self.refresh_plan()
         return res
 
-    def serve(self, request_stream, k: Optional[int] = None, sched=None):
+    def serve(self, request_stream, k: Optional[int] = None, sched=None,
+              arrivals=None):
         """Admission-controlled scheduled serving of an iterable of query
         batches. Incoming batches are flattened into per-query requests and
         pushed through :class:`repro.serve.scheduler.ServingScheduler`,
         which re-forms batches adaptively (size/deadline triggers) and
-        keeps :meth:`search_batch` as the inner execution primitive.
-        Returns one ``SearchResult`` per input batch, aligned with the
-        stream (the synchronous drain-loop contract)."""
+        keeps :meth:`search_batch` as the inner execution primitive (the
+        host engine or, with ``sched.backend="spmd"``, the device-resident
+        executor). Returns one ``SearchResult`` per input batch, aligned
+        with the stream (the synchronous drain-loop contract).
+
+        ``arrivals`` optionally supplies per-batch arrival timestamps for
+        replayed traces (aligned with ``request_stream``; each entry is a
+        scalar for the whole batch or a per-row sequence, non-decreasing
+        across the stream). Without it every request arrives at t=0 and
+        queue-wait/deadline statistics degenerate."""
         from repro.core.types import SearchResult
         from repro.serve.scheduler import SchedulerConfig, ServingScheduler
 
@@ -182,11 +227,24 @@ class HarmonyServer:
         scheduler = ServingScheduler(self, sched_cfg, k=k)
         owners: Dict[int, tuple] = {}            # req_id → (batch_idx, row)
         shapes: List[int] = []
+        arr_iter = iter(arrivals) if arrivals is not None else None
         for bi, qb in enumerate(request_stream):
             qb = np.asarray(qb)
             shapes.append(qb.shape[0])
+            if arr_iter is None:
+                t_b = 0.0
+            else:
+                try:
+                    t_b = next(arr_iter)
+                except StopIteration:
+                    raise ValueError(
+                        f"arrivals exhausted at batch {bi}: it must yield "
+                        "one timestamp (or per-row sequence) per "
+                        "request_stream batch"
+                    ) from None
             for r in range(qb.shape[0]):
-                rid = scheduler.submit(qb[r], arrival_s=0.0)
+                t_r = float(t_b) if np.ndim(t_b) == 0 else float(t_b[r])
+                rid = scheduler.submit(qb[r], arrival_s=t_r)
                 if rid >= 0:
                     owners[rid] = (bi, r)
                 # shed requests (bounded sched config) keep their -1/inf

@@ -58,6 +58,8 @@ class SchedulerConfig:
     skew_window: int = 1024         # probe rows of the live arrival window
     min_batches_between_replans: int = 4
     hedge_deadline_s: float = 0.0   # straggler hedging; 0 → off
+    backend: str = ""               # batch execution backend: "" → server
+                                    # default; "host" | "spmd" to force
 
 
 @dataclass
@@ -124,6 +126,11 @@ class ServingScheduler:
         # fail_node / replan_every ones done behind the scheduler's back)
         self._plan_hot: Optional[float] = None
         self._seen_replans = server.stats.replans
+        if (self.cfg.backend or getattr(server, "backend", "host")) == "spmd":
+            # pre-compile the executor's bucket ladder so no in-trace
+            # dispatch charges a jit compile to the virtual clock (which
+            # would distort queue-wait/shed statistics by seconds)
+            server.executor.warmup(k=self.k)
         self._hedge: Optional[HedgingExecutor] = None
         if self.cfg.hedge_deadline_s > 0:
             # one worker slot per cluster node; every worker executes the
@@ -193,7 +200,9 @@ class ServingScheduler:
     # -------------------------------------------------------------- dispatch
     def _exec_task(self, task):
         queries, k = task
-        return self.server.search_batch(queries, k)
+        return self.server.search_batch(
+            queries, k, backend=self.cfg.backend or None
+        )
 
     def _dispatch(self, dispatch_s: float, trigger: str):
         batch = [self.queue.popleft()
@@ -216,7 +225,9 @@ class ServingScheduler:
             if self._hedge.stats.hedged > hedged_before:
                 stats.hedged_batches += 1
         else:
-            res = self.server.search_batch(queries, self.k)
+            res = self.server.search_batch(
+                queries, self.k, backend=self.cfg.backend or None
+            )
         wall = time.perf_counter() - t0
         service_s = (
             self.service_time_fn(len(batch)) if self.service_time_fn else wall
