@@ -92,13 +92,15 @@ def main():
         sync = replay(index, trace, sync_cfg)
         sched = replay(index, trace, scfg)
         report[name] = {"sync": sync, "scheduled": sched}
+        # percentile fields are None when a replay completes zero requests
+        pct = lambda v: f"{v:.2f}" if v is not None else "na"
         emit(
             f"serving.{name}",
             1e6 / max(sched["qps"], 1e-9),
             f"sched_qps={sched['qps']:.0f};sync_qps={sync['qps']:.0f};"
             f"speedup={sched['qps'] / max(sync['qps'], 1e-9):.2f};"
-            f"p50_wait_ms={sched['p50_queue_wait_ms']:.2f};"
-            f"p99_wait_ms={sched['p99_queue_wait_ms']:.2f};"
+            f"p50_wait_ms={pct(sched['p50_queue_wait_ms'])};"
+            f"p99_wait_ms={pct(sched['p99_queue_wait_ms'])};"
             f"shed={sched['shed']};skew_replans={sched['skew_replans']}",
         )
 

@@ -16,6 +16,7 @@ def main() -> None:
         bench_breakdown,
         bench_build,
         bench_executor,
+        bench_fleet,
         bench_memory,
         bench_pruning_ratio,
         bench_qps_recall,
@@ -29,6 +30,7 @@ def main() -> None:
         bench_qps_recall,
         bench_skew,
         bench_serving,
+        bench_fleet,
         bench_executor,
         bench_breakdown,
         bench_ablation,

@@ -33,14 +33,18 @@ from repro.core.router import load_aware_assignment, ring_offsets
 from repro.data import make_dataset, make_queries
 
 
+TINY = os.environ.get("HARMONY_BENCH_TINY", "") not in ("", "0")
+
+
 def main(use_pallas: bool = False) -> int:
     V, B = 4, 2
     mesh = jax.make_mesh((V, B), ("data", "model"))
 
-    ds = make_dataset(nb=4000, dim=64, n_components=16, spread=0.6, seed=0)
+    nb, nq = (2000, 16) if TINY else (4000, 32)
+    ds = make_dataset(nb=nb, dim=64, n_components=16, spread=0.6, seed=0)
     cfg = HarmonyConfig(dim=64, nlist=32, nprobe=6, topk=5, kmeans_iters=6)
     index = build_ivf(ds.x, cfg)
-    q = make_queries(ds, nq=32, skew=0.2, noise=0.2, seed=1)
+    q = make_queries(ds, nq=nq, skew=0.2, noise=0.2, seed=1)
 
     plan = PartitionPlan(
         v_shards=V,
@@ -70,6 +74,7 @@ def main(use_pallas: bool = False) -> int:
         placed["row_ids"], placed["queries"], placed["probes"], placed["tau0"],
     )
     scores, ids, stats = map(np.asarray, (scores, ids, stats))
+    scores, ids = scores[: q.shape[0]], ids[: q.shape[0]]  # drop qb padding
 
     oracle = search_oracle(index, q)
     ok = True

@@ -2,7 +2,12 @@
 plan, run a distributed search, and check recall + pruning stats.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Set HARMONY_BENCH_TINY=1 to run at CI-smoke sizes (seconds, same code
+paths — the examples job uses it so examples can't rot).
 """
+
+import os
 
 import numpy as np
 
@@ -10,11 +15,14 @@ from repro.config import HarmonyConfig
 from repro.core import build_ivf, harmony_search, plan_search, preassign
 from repro.data import brute_force_topk, make_dataset, make_queries, recall_at_k
 
+TINY = os.environ.get("HARMONY_BENCH_TINY", "") not in ("", "0")
+
 
 def main():
     # 1. corpus + config
-    ds = make_dataset(nb=20_000, dim=128, n_components=48, spread=0.6, seed=0)
-    cfg = HarmonyConfig(dim=128, nlist=128, nprobe=16, topk=10)
+    nb, nlist, nq = (4000, 32, 32) if TINY else (20_000, 128, 128)
+    ds = make_dataset(nb=nb, dim=128, n_components=48, spread=0.6, seed=0)
+    cfg = HarmonyConfig(dim=128, nlist=nlist, nprobe=16, topk=10)
     print(f"corpus: {ds.nb} × {ds.dim}")
 
     # 2. index build (Train + Add)
@@ -32,7 +40,7 @@ def main():
     corpus = preassign(index, plan)
 
     # 5. search
-    q = make_queries(ds, nq=128, skew=0.3, noise=0.2, seed=1)
+    q = make_queries(ds, nq=nq, skew=0.3, noise=0.2, seed=1)
     res = harmony_search(index, corpus, q)
 
     # 6. verify

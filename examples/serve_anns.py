@@ -4,7 +4,12 @@ skew-triggered re-planning, a node failure mid-stream (elastic re-plan),
 straggler-hedged batch dispatch, and full queue/latency accounting.
 
     PYTHONPATH=src python examples/serve_anns.py
+
+Set HARMONY_BENCH_TINY=1 to run at CI-smoke sizes (seconds, same code
+paths — the examples job uses it so examples can't rot).
 """
+
+import os
 
 import numpy as np
 
@@ -12,6 +17,8 @@ from repro.config import HarmonyConfig
 from repro.core import build_ivf, search_oracle
 from repro.data import make_dataset, make_queries
 from repro.serve import HarmonyServer, SchedulerConfig, ServingScheduler
+
+TINY = os.environ.get("HARMONY_BENCH_TINY", "") not in ("", "0")
 
 
 def request_trace(ds, n_req=1024, rate_qps=4000.0, seed=0):
@@ -28,16 +35,18 @@ def request_trace(ds, n_req=1024, rate_qps=4000.0, seed=0):
 
 
 def main():
-    ds = make_dataset(nb=20_000, dim=128, n_components=48, spread=0.6, seed=0)
-    cfg = HarmonyConfig(dim=128, nlist=128, nprobe=16, topk=10)
+    nb, nlist, n_req = (4000, 32, 192) if TINY else (20_000, 128, 1024)
+    ds = make_dataset(nb=nb, dim=128, n_components=48, spread=0.6, seed=0)
+    cfg = HarmonyConfig(dim=128, nlist=nlist, nprobe=16, topk=10)
     index = build_ivf(ds.x, cfg)
     srv = HarmonyServer(index, n_nodes=8)
     print(f"serving with plan V×B = {srv.plan.v_shards}×{srv.plan.d_blocks}")
 
-    trace, q = request_trace(ds)
+    trace, q = request_trace(ds, n_req=n_req)
+    kill_at = 2 if TINY else 12
 
     def mid_stream(batch_idx, sched):
-        if batch_idx == 12:
+        if batch_idx == kill_at:
             print("!! killing node 3 mid-serve")
             sched.server.fail_node(3)
             print(f"   re-planned: V×B = {srv.plan.v_shards}×{srv.plan.d_blocks} "
@@ -77,6 +86,33 @@ def main():
     print(f"hedging: dispatched={sched._hedge.stats.dispatched} "
           f"hedged={sched._hedge.stats.hedged} "
           f"wasted={sched._hedge.stats.wasted}")
+
+    # --- scale OUT: the same trace through a 4-replica fleet (one
+    # half-speed replica) with load-estimate p2c routing and
+    # cross-replica hedging behind the same admission queue
+    from repro.serve import ReplicaFleet, ReplicaSpec
+
+    fleet = ReplicaFleet(
+        index,
+        replicas=[ReplicaSpec(n_nodes=8, capacity=c)
+                  for c in (1.0, 1.0, 1.0, 0.5)],
+        cfg=cfg,
+        seed=0,
+    )
+    fsched = ServingScheduler(
+        fleet,
+        SchedulerConfig(max_batch=cfg.query_block, max_wait_s=2e-3,
+                        hedge_deadline_s=0.05),
+    )
+    fresults = fsched.run_trace(trace)
+    fs = fleet.summary()
+    assert len(fresults) == len(trace)
+    print(f"fleet: {fs['n_replicas']} replicas | "
+          f"QPS(replay)={fsched.served_qps:.0f} | "
+          f"per-replica batches="
+          f"{'/'.join(str(r['batches']) for r in fs['replicas'])} | "
+          f"load-balance gini={fs['load_balance_gini']:.3f} | "
+          f"hedge win rate={fs['hedge']['win_rate']:.2f}")
     print("OK")
 
 

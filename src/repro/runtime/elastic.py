@@ -48,6 +48,10 @@ class ClusterState:
     def n_live(self) -> int:
         return int(self.live.sum())
 
+    def live_ids(self) -> np.ndarray:
+        """Indices of live nodes (replica routing iterates these)."""
+        return np.nonzero(self.live)[0]
+
 
 def replan_on_failure(
     index: IVFIndex,

@@ -23,6 +23,12 @@ class HedgeStats:
     dispatched: int = 0
     hedged: int = 0
     wasted: int = 0                    # hedges whose primary also finished
+    hedge_wins: int = 0                # hedges where the replica served first
+
+    @property
+    def win_rate(self) -> float:
+        """Fraction of fired hedges that actually beat the primary."""
+        return self.hedge_wins / self.hedged if self.hedged else 0.0
 
 
 class HedgingExecutor:
@@ -68,4 +74,20 @@ class HedgingExecutor:
         if lat_p <= lat_r:
             self.stats.wasted += 1
             return self.workers[primary](task), primary, lat_p
+        self.stats.hedge_wins += 1
         return self.workers[replica](task), replica, lat_r
+
+    def run_ranked(
+        self, task: Any, ranked: List[int]
+    ) -> Tuple[Any, int, float]:
+        """Hedged dispatch over a load-ranked worker list: ``ranked[0]``
+        is the router's dispatch choice, ``ranked[1:]`` the remaining
+        workers ordered by load estimate. A hedge, if it fires, re-runs
+        the task on ``ranked[1]`` — the least-loaded *other* replica
+        (i.e. the second-least-loaded overall when the primary was the
+        least-loaded) — the cross-replica policy of the serving fleet,
+        rather than a node ring position."""
+        if not ranked:
+            raise ValueError("run_ranked needs at least one worker index")
+        replica = ranked[1] if len(ranked) > 1 else None
+        return self.run_timed(task, ranked[0], replica)

@@ -18,6 +18,17 @@ Select per server (``HarmonyServer(..., backend="spmd")``), per call
 (``SchedulerConfig(backend="spmd")`` — what ``HarmonyServer.serve`` uses).
 Both backends return identical top-K up to floating-point tie order.
 
+Dispatch targets
+----------------
+The scheduler's batch former is decoupled from execution: formed batches
+go to a pluggable :class:`repro.serve.scheduler.DispatchTarget` —
+:class:`~repro.serve.scheduler.SingleServerTarget` (one server, the
+default when a ``HarmonyServer`` is passed) or
+:class:`repro.serve.fleet.ReplicaFleet` (N replicas behind the same
+admission queue with load-estimate routing, power-of-two-choices
+sampling, cross-replica straggler hedging, and replica fail/join
+elasticity).
+
 The bucket ladder
 -----------------
 jit recompiles per static shape, while the scheduler's adaptive batches
@@ -31,11 +42,14 @@ and merged host-side.
 
 from repro.serve.engine import HarmonyServer, ServeStats
 from repro.serve.executor import ExecutorConfig, SpmdExecutor
+from repro.serve.fleet import Replica, ReplicaFleet, ReplicaSpec, gini
 from repro.serve.scheduler import (
+    DispatchTarget,
     Request,
     RequestResult,
     SchedulerConfig,
     ServingScheduler,
+    SingleServerTarget,
 )
 
 __all__ = [
@@ -43,6 +57,12 @@ __all__ = [
     "ServeStats",
     "ExecutorConfig",
     "SpmdExecutor",
+    "DispatchTarget",
+    "SingleServerTarget",
+    "Replica",
+    "ReplicaFleet",
+    "ReplicaSpec",
+    "gini",
     "Request",
     "RequestResult",
     "SchedulerConfig",

@@ -75,8 +75,15 @@ class ServeStats:
             else 0.0
         )
 
+    def _pct_or_none(self, arr: List[float], p: float) -> Optional[float]:
+        # empty-array quantiles raise in numpy; a trace where nothing
+        # completed (everything shed, or summarised pre-flush) reports
+        # None instead of a misleading 0.0 — and never raises
+        return float(np.percentile(arr, p)) if arr else None
+
     def summary(self) -> dict:
-        """JSON-friendly digest for the serving benchmarks."""
+        """JSON-friendly digest for the serving benchmarks. Percentile
+        fields are ``None`` when no request completed."""
         return {
             "batches": self.batches,
             "spmd_batches": self.spmd_batches,
@@ -90,10 +97,10 @@ class ServeStats:
             "capacity_batches": self.capacity_batches,
             "skew_replans": self.skew_replans,
             "hedged_batches": self.hedged_batches,
-            "p50_queue_wait_ms": self.queue_wait_pct(50),
-            "p99_queue_wait_ms": self.queue_wait_pct(99),
-            "p50_request_latency_ms": self.request_latency_pct(50),
-            "p99_request_latency_ms": self.request_latency_pct(99),
+            "p50_queue_wait_ms": self._pct_or_none(self.queue_wait_ms, 50),
+            "p99_queue_wait_ms": self._pct_or_none(self.queue_wait_ms, 99),
+            "p50_request_latency_ms": self._pct_or_none(self.request_latency_ms, 50),
+            "p99_request_latency_ms": self._pct_or_none(self.request_latency_ms, 99),
         }
 
 

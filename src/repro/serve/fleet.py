@@ -1,0 +1,431 @@
+"""Multi-replica serving fleet: load-aware routing over several
+``HarmonyServer`` replicas behind one admission queue.
+
+This is the scale-*out* rung of the serving stack (ROADMAP's
+"multi-replica routing"): PR 1's admission queue forms batches, PR 2's
+executor serves them fast on one mesh — the fleet now stands N full
+server replicas (host or spmd backend, heterogeneous capacities allowed)
+behind that same queue and *routes* each formed batch, BatANN-style,
+instead of pinning everything to one server.
+
+Routing is load-estimate driven. Each replica carries
+
+* **backlog** — outstanding work in queue-seconds (``busy_until`` minus
+  the dispatch time on the virtual clock);
+* **service estimate** — an EWMA of observed per-query service time,
+  seeded from the §4.2.1 cost model of the replica's own plan (so a
+  replica is routable before its first batch, and a slow/spmd/low-capacity
+  replica is predicted slow from its plan cost, not discovered slow);
+* **capacity weight** — relative speed of heterogeneous replicas.
+
+Policies: ``"p2c"`` (power-of-two-choices: sample two live replicas,
+dispatch to the less loaded — the classic lowest-variance scalable
+policy), ``"least_loaded"`` (global argmin), ``"round_robin"`` (the
+baseline the load-balance Gini is benchmarked against).
+
+Cross-replica hedging: with a hedge deadline set, dispatch goes through
+:meth:`repro.runtime.straggler.HedgingExecutor.run_ranked` over the
+fleet's load ranking — a hedge re-runs the batch on the
+*second-least-loaded replica*, not just another node of the same server.
+Every replica serves the full corpus, so the hedge answer equals the
+primary answer (result parity is tested).
+
+Elasticity rides the existing :class:`repro.runtime.elastic.ClusterState`
+machinery at replica granularity: ``fail_replica`` removes a replica from
+routing (in-flight virtual work still completes — no admitted request is
+lost), ``join_replica`` stands up a new server mid-trace.
+
+Per-replica plans stay independent: each server keeps its own workload
+window and re-plans from *its* observed probes (skew re-planning can
+diverge per replica, the SPFresh-style accuracy-preserving property —
+results are plan-invariant by the exactness guarantee).
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Deque, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.runtime.elastic import ClusterState
+from repro.runtime.straggler import HedgingExecutor
+from repro.serve.engine import HarmonyServer, ServeStats
+from repro.serve.scheduler import DispatchTarget, SchedulerConfig
+
+
+def gini(x: Sequence[float]) -> float:
+    """Gini coefficient of a non-negative load vector (0 = perfectly
+    balanced, →1 = all load on one replica)."""
+    x = np.sort(np.asarray(x, np.float64))
+    n = x.size
+    if n == 0 or x.sum() <= 0:
+        return 0.0
+    cum = np.cumsum(x)
+    return float((n + 1 - 2 * (cum / cum[-1]).sum()) / n)
+
+
+@dataclass(frozen=True)
+class ReplicaSpec:
+    """How to stand up one replica."""
+
+    backend: str = "host"           # "host" | "spmd"
+    capacity: float = 1.0           # relative speed weight (2.0 = 2× faster)
+    n_nodes: int = 4                # nodes inside the replica's own cluster
+    replan_every: int = 0
+    executor_cfg: Optional[object] = None   # ExecutorConfig for spmd
+
+
+@dataclass
+class Replica:
+    """One server plus its fleet-side routing state (virtual clock)."""
+
+    server: HarmonyServer
+    spec: ReplicaSpec
+    busy_until: float = 0.0         # virtual time its queue drains
+    busy_s: float = 0.0             # total virtual service seconds
+    batches: int = 0
+    queries: int = 0
+    ewma_per_q_s: Optional[float] = None
+    service_ms: List[float] = field(default_factory=list)
+
+    def predict_service_s(
+        self, n_queries: int, fleet_per_q_s: Optional[float] = None
+    ) -> float:
+        """Expected service seconds for a batch of ``n_queries``.
+
+        Uses the replica's own EWMA blended 50/50 with the fleet-wide
+        capacity-normalized EWMA (``fleet_per_q_s``, already divided by
+        this replica's capacity by the caller). The blend matters: a
+        replica's own EWMA only updates when it serves, so one noisy-slow
+        observation would otherwise self-reinforce into starvation —
+        anchoring on the fleet mean (heterogeneity carried by the known
+        capacity weight) keeps every replica routable. Before any
+        observation, falls back to the cost model of this replica's own
+        plan (comp+comm per query, scaled by capacity)."""
+        if self.ewma_per_q_s is not None:
+            own = self.ewma_per_q_s
+            if fleet_per_q_s is not None:
+                return 0.5 * (own + fleet_per_q_s) * n_queries
+            return own * n_queries
+        if fleet_per_q_s is not None:
+            return fleet_per_q_s * n_queries
+        # cost-model seed: the plan's comp+comm is costed for a uniform
+        # one-query-per-cluster prior; a real query touches nprobe of
+        # nlist clusters, so scale by the probe fraction
+        cost = self.server._plan_decision.cost
+        frac = self.server.cfg.nprobe / max(self.server.index.nlist, 1)
+        per_q = (cost["comp_s"] + cost["comm_s"]) * frac
+        return per_q * n_queries / max(self.spec.capacity, 1e-9)
+
+
+class ReplicaFleet(DispatchTarget):
+    """N ``HarmonyServer`` replicas behind one admission queue.
+
+    Drop-in :class:`DispatchTarget`: hand it to ``ServingScheduler`` in
+    place of a server and every formed batch is routed by load estimate.
+
+    ``service_time_fn(replica_idx, n_queries) -> seconds`` replaces the
+    measured wall on the virtual clock (tests inject deterministic and
+    heterogeneous service models); the default charges the measured
+    ``search_batch`` wall divided by the replica's capacity weight.
+    ``latency_fn(replica_idx, task)`` overrides the hedge's effective-
+    latency model (default: the fleet's own load estimate).
+    """
+
+    def __init__(
+        self,
+        index,
+        replicas: Union[int, Sequence[ReplicaSpec]] = 2,
+        cfg=None,
+        routing: str = "p2c",
+        ewma_alpha: float = 0.25,
+        service_time_fn: Optional[Callable[[int, int], float]] = None,
+        latency_fn: Optional[Callable[[int, object], float]] = None,
+        workload_window: int = 2048,
+        seed: int = 0,
+    ):
+        assert routing in ("p2c", "least_loaded", "round_robin"), routing
+        if isinstance(replicas, int):
+            replicas = [ReplicaSpec() for _ in range(replicas)]
+        if not replicas:
+            raise ValueError("a fleet needs at least one replica")
+        self.index = index
+        self.cfg = cfg or index.cfg
+        self.routing = routing
+        self.ewma_alpha = ewma_alpha
+        self.service_time_fn = service_time_fn
+        self.latency_fn = latency_fn
+        self.replicas: List[Replica] = [
+            Replica(self._make_server(spec), spec) for spec in replicas
+        ]
+        self.cluster = ClusterState.fresh(len(self.replicas))
+        self.stats = ServeStats()       # fleet-level admission accounting
+        self._recent_probes: Deque[np.ndarray] = deque(maxlen=workload_window)
+        self._rng = np.random.default_rng(seed)
+        self._rr = 0
+        self._backend = ""
+        self._k = self.cfg.topk
+        self._hedge: Optional[HedgingExecutor] = None
+        self._last_done_s = 0.0
+        self._last_start_s = 0.0
+        # fleet-wide EWMA of capacity-normalized per-query service time
+        # (the anchor every replica's load estimate blends against)
+        self._fleet_ewma_norm_per_q: Optional[float] = None
+
+    def _make_server(self, spec: ReplicaSpec) -> HarmonyServer:
+        return HarmonyServer(
+            self.index,
+            n_nodes=spec.n_nodes,
+            cfg=self.cfg,
+            replan_every=spec.replan_every,
+            backend=spec.backend,
+            executor_cfg=spec.executor_cfg,
+        )
+
+    # ------------------------------------------------------ DispatchTarget
+    def configure(self, cfg: SchedulerConfig, k: int) -> None:
+        self._backend = cfg.backend
+        self._k = k
+        for rep in self.replicas:
+            self._warmup_replica(rep)
+        if cfg.hedge_deadline_s > 0:
+            self._hedge = HedgingExecutor(
+                workers=[self._make_worker(i) for i in range(len(self.replicas))],
+                deadline_s=cfg.hedge_deadline_s,
+                latency_fn=self.latency_fn or self._estimate_latency,
+            )
+
+    def _warmup_replica(self, rep: Replica) -> None:
+        if (self._backend or rep.server.backend) == "spmd":
+            rep.server.executor.warmup(k=self._k)
+
+    def next_free_s(self) -> float:
+        live = self.cluster.live_ids()
+        if live.size == 0:
+            raise RuntimeError("no live replicas")
+        return min(self.replicas[int(i)].busy_until for i in live)
+
+    def execute(self, queries, k, dispatch_s, batch_id):
+        ranked = self._rank_replicas(queries.shape[0], dispatch_s, batch_id)
+        if self._hedge is not None:
+            hedged_before = self._hedge.stats.hedged
+            res, served_by, _ = self._hedge.run_ranked(
+                (queries, k, dispatch_s), ranked
+            )
+            if self._hedge.stats.hedged > hedged_before:
+                self.stats.hedged_batches += 1
+                if served_by != ranked[0]:
+                    # the hedge target only received the batch when the
+                    # deadline expired — its execution cannot have started
+                    # before dispatch+deadline; charge the hedge wait to
+                    # the virtual clock (the fleet's latency_fn is the
+                    # hedge *decision* model, so unlike the single-server
+                    # target it is never added to service time — real
+                    # time lives in busy_until/service accounting)
+                    shift = (dispatch_s + self._hedge.deadline_s
+                             - self._last_start_s)
+                    if shift > 0:
+                        self.replicas[served_by].busy_until += shift
+                        self._last_done_s += shift
+        else:
+            res = self._run_on(ranked[0], queries, k, dispatch_s)
+        return res, self._last_done_s
+
+    # ------------------------------------------------------------- routing
+    def load_estimate(self, r_idx: int, now: float, n_queries: int) -> float:
+        """Queue-seconds this batch would wait-plus-run on replica
+        ``r_idx``: outstanding backlog + predicted service time."""
+        rep = self.replicas[r_idx]
+        fleet_per_q = (
+            self._fleet_ewma_norm_per_q / max(rep.spec.capacity, 1e-9)
+            if self._fleet_ewma_norm_per_q is not None
+            else None
+        )
+        return max(rep.busy_until - now, 0.0) + rep.predict_service_s(
+            n_queries, fleet_per_q
+        )
+
+    def _estimate_latency(self, r_idx: int, task) -> float:
+        queries, _, dispatch_s = task
+        return self.load_estimate(r_idx, dispatch_s, queries.shape[0])
+
+    def _rank_replicas(self, n: int, now: float, batch_id: int) -> List[int]:
+        """Dispatch order: [primary, hedge target, ...rest]. The primary
+        follows the routing policy; the hedge target is always the least-
+        loaded *other* live replica (so a hedge lands on the second-least-
+        loaded replica when the primary is the least-loaded)."""
+        live = [int(i) for i in self.cluster.live_ids()]
+        if not live:
+            raise RuntimeError("no live replicas")
+        if len(live) == 1:
+            return live
+        loads = {r: self.load_estimate(r, now, n) for r in live}
+        if self.routing == "round_robin":
+            primary = live[self._rr % len(live)]
+            self._rr += 1
+        elif self.routing == "p2c":
+            # capacity-weighted power-of-two-choices: heterogeneous fleets
+            # sample fast replicas proportionally more often (plain p2c
+            # wastes every slow-slow sample), then the load estimate picks
+            # between the two
+            caps = np.array([self.replicas[r].spec.capacity for r in live])
+            a, b = self._rng.choice(
+                len(live), size=2, replace=False, p=caps / caps.sum()
+            )
+            primary = min(live[int(a)], live[int(b)], key=lambda r: loads[r])
+        else:                                   # least_loaded
+            primary = min(live, key=lambda r: loads[r])
+        rest = sorted((r for r in live if r != primary),
+                      key=lambda r: loads[r])
+        return [primary] + rest
+
+    # ----------------------------------------------------------- execution
+    def _make_worker(self, r_idx: int):
+        def run(task):
+            queries, k, dispatch_s = task
+            return self._run_on(r_idx, queries, k, dispatch_s)
+        return run
+
+    def _run_on(self, r_idx: int, queries, k, dispatch_s: float):
+        rep = self.replicas[r_idx]
+        start_s = max(dispatch_s, rep.busy_until)
+        self._last_start_s = start_s
+        t0 = time.perf_counter()
+        res = rep.server.search_batch(queries, k, backend=self._backend or None)
+        wall = time.perf_counter() - t0
+        n = queries.shape[0]
+        service_s = (
+            self.service_time_fn(r_idx, n)
+            if self.service_time_fn
+            else wall / max(rep.spec.capacity, 1e-9)
+        )
+        rep.busy_until = start_s + service_s
+        rep.busy_s += service_s
+        rep.batches += 1
+        rep.queries += n
+        rep.service_ms.append(service_s * 1e3)
+        obs_per_q = service_s / max(n, 1)
+        rep.ewma_per_q_s = (
+            obs_per_q
+            if rep.ewma_per_q_s is None
+            else self.ewma_alpha * obs_per_q
+            + (1.0 - self.ewma_alpha) * rep.ewma_per_q_s
+        )
+        norm_per_q = obs_per_q * rep.spec.capacity
+        self._fleet_ewma_norm_per_q = (
+            norm_per_q
+            if self._fleet_ewma_norm_per_q is None
+            else self.ewma_alpha * norm_per_q
+            + (1.0 - self.ewma_alpha) * self._fleet_ewma_norm_per_q
+        )
+        # the replica's server just recorded this batch's probes; mirror
+        # them into the fleet-level window (newest last) for the
+        # scheduler's hot-mass drift trigger
+        if rep.server._recent_probes:
+            self._recent_probes.append(rep.server._recent_probes[-1])
+        self._last_done_s = rep.busy_until
+        return res
+
+    # ------------------------------------------------------------ elastic
+    def fail_replica(self, r_idx: int) -> None:
+        """Remove a replica from routing. Virtual work already dispatched
+        to it completes (the batch result was computed at dispatch); no
+        admitted request is lost — the shared queue re-routes everything
+        else to the survivors."""
+        self.cluster.fail(r_idx)
+        if self.cluster.n_live == 0:
+            raise RuntimeError("no live replicas")
+
+    def join_replica(self, spec: Optional[ReplicaSpec] = None) -> int:
+        """Stand up one more replica mid-trace; returns its index."""
+        spec = spec or ReplicaSpec()
+        rep = Replica(self._make_server(spec), spec)
+        self.replicas.append(rep)
+        self.cluster.join()
+        self._warmup_replica(rep)
+        if self._hedge is not None:
+            self._hedge.workers.append(self._make_worker(len(self.replicas) - 1))
+        return len(self.replicas) - 1
+
+    # ------------------------------------------- skew-adaptation surface
+    def window_probes(self):
+        return reversed(self._recent_probes)
+
+    def refresh_plan(self) -> None:
+        """Re-plan every live replica from its *own* workload window —
+        per-replica plans diverge under skew, results stay exact."""
+        for i in self.cluster.live_ids():
+            self.replicas[int(i)].server.refresh_plan()
+
+    @property
+    def replans(self) -> int:
+        return sum(r.server.stats.replans for r in self.replicas)
+
+    @property
+    def nlist(self) -> int:
+        return self.index.nlist
+
+    @property
+    def default_max_batch(self) -> int:
+        return self.cfg.query_block
+
+    @property
+    def default_k(self) -> int:
+        return self.cfg.topk
+
+    # ---------------------------------------------------------- reporting
+    @property
+    def load_balance_gini(self) -> float:
+        """Gini of per-replica virtual busy-seconds (work, not counts —
+        a capacity-blind router looks balanced in counts while its slow
+        replicas drown in seconds)."""
+        return gini([r.busy_s for r in self.replicas])
+
+    def summary(self) -> dict:
+        """Fleet-level digest: per-replica QPS/latency/shed (each
+        replica's own ServeStats threaded up), the load-balance Gini, and
+        the cross-replica hedge win rate, alongside the fleet's admission
+        accounting."""
+        per_replica = []
+        for i, rep in enumerate(self.replicas):
+            sm = np.asarray(rep.service_ms, np.float64)
+            per_replica.append({
+                "replica": i,
+                "backend": rep.server.backend,
+                "capacity": rep.spec.capacity,
+                "live": bool(self.cluster.live[i]),
+                "batches": rep.batches,
+                "queries": rep.queries,
+                "busy_s": rep.busy_s,
+                "virtual_qps": rep.queries / rep.busy_s if rep.busy_s else 0.0,
+                "p50_service_ms": float(np.percentile(sm, 50)) if sm.size else None,
+                "p99_service_ms": float(np.percentile(sm, 99)) if sm.size else None,
+                "server": rep.server.stats.summary(),
+            })
+        hs = self._hedge.stats if self._hedge is not None else None
+        return {
+            "routing": self.routing,
+            "n_replicas": len(self.replicas),
+            "n_live": self.cluster.n_live,
+            "load_balance_gini": self.load_balance_gini,
+            "hedge": {
+                "dispatched": hs.dispatched if hs else 0,
+                "hedged": hs.hedged if hs else 0,
+                "wasted": hs.wasted if hs else 0,
+                "hedge_wins": hs.hedge_wins if hs else 0,
+                "win_rate": hs.win_rate if hs else 0.0,
+            },
+            "replicas": per_replica,
+            **self.stats.summary(),
+            # fleet aggregates (the admission-level ServeStats never sees
+            # execution, which happens inside each replica's server)
+            "batches": sum(r.batches for r in self.replicas),
+            "queries": sum(r.queries for r in self.replicas),
+            "replans": self.replans,
+            "spmd_batches": sum(
+                r.server.stats.spmd_batches for r in self.replicas
+            ),
+        }

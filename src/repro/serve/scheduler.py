@@ -19,6 +19,13 @@ single queries with timestamps; the scheduler
   :class:`repro.runtime.straggler.HedgingExecutor`, whose simulated
   effective latency is charged to the scheduler's virtual clock.
 
+Batch formation is decoupled from execution: ``_dispatch`` hands every
+formed batch to a pluggable :class:`DispatchTarget` —
+:class:`SingleServerTarget` (one ``HarmonyServer``, built automatically
+when the scheduler is handed a server) or
+:class:`repro.serve.fleet.ReplicaFleet` (N replicas behind the same
+admission queue, load-aware routing + cross-replica hedging).
+
 Time model: the scheduler runs on a *virtual clock* driven by request
 arrival timestamps — the standard single-process simulation methodology
 used by the benchmarks (see ``benchmarks/common.py``). Batch service time
@@ -34,7 +41,7 @@ import math
 import time
 from collections import deque
 from dataclasses import dataclass
-from typing import Callable, Deque, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -88,14 +95,180 @@ class RequestResult:
         return self.done_s - self.arrival_s
 
 
+class DispatchTarget:
+    """Execution side of the scheduler: where formed batches go.
+
+    The scheduler owns admission, batch formation, and the virtual clock;
+    a target owns *running* the batch (which engine, which replica, which
+    hedge policy) and reports the completion time back. Implementations:
+    :class:`SingleServerTarget` here and
+    :class:`repro.serve.fleet.ReplicaFleet`.
+
+    The target also exposes the thin server-shaped surface the
+    scheduler's skew adaptation needs (``stats`` for accounting,
+    ``window_probes``/``nlist``/``refresh_plan``/``replans`` for the
+    hot-mass drift trigger, ``default_max_batch``/``default_k`` for
+    config defaults).
+    """
+
+    stats = None                    # ServeStats: admission/queue accounting
+
+    def configure(self, cfg: SchedulerConfig, k: int) -> None:
+        """Bind the scheduler's config (backend override, hedge deadline)
+        and pre-warm compiled paths so no in-trace dispatch charges a jit
+        compile to the virtual clock."""
+
+    def next_free_s(self) -> float:
+        """Earliest virtual time the target can start another batch."""
+        raise NotImplementedError
+
+    def execute(
+        self, queries: np.ndarray, k: int, dispatch_s: float, batch_id: int
+    ):
+        """Run one formed batch; returns ``(result, done_s)`` where
+        ``done_s`` is the completion time on the virtual clock."""
+        raise NotImplementedError
+
+    # --- skew-adaptation surface -----------------------------------------
+    def window_probes(self) -> Iterable[np.ndarray]:
+        """Probe arrays of recently executed batches, newest first."""
+        raise NotImplementedError
+
+    def refresh_plan(self) -> None:
+        raise NotImplementedError
+
+    @property
+    def replans(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def nlist(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def default_max_batch(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def default_k(self) -> int:
+        raise NotImplementedError
+
+
+class SingleServerTarget(DispatchTarget):
+    """One ``HarmonyServer`` behind the queue — the pre-fleet behaviour.
+
+    Hedging here is *intra*-server: one worker slot per cluster node, the
+    primary rotates over live nodes, and a hedge re-runs the batch on the
+    next live node (every node executes the same search primitive, so the
+    hedge target's answer is the primary's answer — HARMONY's replica
+    layout recomputes visits).
+    """
+
+    def __init__(
+        self,
+        server,
+        service_time_fn: Optional[Callable[[int], float]] = None,
+        latency_fn: Optional[Callable[[int, object], float]] = None,
+    ):
+        self.server = server
+        self.service_time_fn = service_time_fn
+        self.latency_fn = latency_fn
+        self.stats = server.stats
+        self.busy_until = 0.0
+        self._backend = ""
+        self._hedge: Optional[HedgingExecutor] = None
+
+    def configure(self, cfg: SchedulerConfig, k: int) -> None:
+        self._backend = cfg.backend
+        if (cfg.backend or getattr(self.server, "backend", "host")) == "spmd":
+            # pre-compile the executor's bucket ladder so no in-trace
+            # dispatch charges a jit compile to the virtual clock (which
+            # would distort queue-wait/shed statistics by seconds)
+            self.server.executor.warmup(k=k)
+        if cfg.hedge_deadline_s > 0:
+            self._hedge = HedgingExecutor(
+                workers=[self._exec_task] * self.server.cluster.n_nodes,
+                deadline_s=cfg.hedge_deadline_s,
+                latency_fn=self.latency_fn or (lambda w, t: 0.0),
+            )
+
+    def next_free_s(self) -> float:
+        return self.busy_until
+
+    def _exec_task(self, task):
+        queries, k = task
+        return self.server.search_batch(
+            queries, k, backend=self._backend or None
+        )
+
+    def execute(self, queries, k, dispatch_s, batch_id):
+        stats = self.server.stats
+        t0 = time.perf_counter()
+        sim_lat = 0.0
+        if self._hedge is not None:
+            # elastic scale-up (join_node) grows the cluster after init;
+            # keep one worker slot per node so live indices stay valid
+            while len(self._hedge.workers) < self.server.cluster.n_nodes:
+                self._hedge.workers.append(self._exec_task)
+            live = self.server.cluster.live_ids()
+            primary = int(live[batch_id % len(live)])
+            replica = (
+                int(live[(batch_id + 1) % len(live)]) if len(live) > 1 else None
+            )
+            hedged_before = self._hedge.stats.hedged
+            res, _, sim_lat = self._hedge.run_timed((queries, k), primary, replica)
+            if self._hedge.stats.hedged > hedged_before:
+                stats.hedged_batches += 1
+        else:
+            res = self.server.search_batch(
+                queries, k, backend=self._backend or None
+            )
+        wall = time.perf_counter() - t0
+        service_s = (
+            self.service_time_fn(queries.shape[0])
+            if self.service_time_fn
+            else wall
+        ) + sim_lat
+        self.busy_until = dispatch_s + service_s
+        return res, self.busy_until
+
+    # --- skew-adaptation surface -----------------------------------------
+    def window_probes(self):
+        return reversed(self.server._recent_probes)
+
+    def refresh_plan(self):
+        self.server.refresh_plan()
+
+    @property
+    def replans(self) -> int:
+        return self.server.stats.replans
+
+    @property
+    def nlist(self) -> int:
+        return self.server.index.nlist
+
+    @property
+    def default_max_batch(self) -> int:
+        return self.server.cfg.query_block
+
+    @property
+    def default_k(self) -> int:
+        return self.server.cfg.topk
+
+
 class ServingScheduler:
-    """Admission-controlled adaptive batcher over a ``HarmonyServer``.
+    """Admission-controlled adaptive batcher over a dispatch target.
+
+    The first argument is either a ``HarmonyServer`` (wrapped in a
+    :class:`SingleServerTarget`) or any :class:`DispatchTarget` — in
+    particular a :class:`repro.serve.fleet.ReplicaFleet`.
 
     Usage: either drive it incrementally (``submit`` per arrival, then
     ``flush``) or replay a whole trace with :meth:`run_trace`. Arrival
     timestamps must be non-decreasing. ``on_batch(batch_idx, scheduler)``
     is invoked after every dispatched batch — tests use it to kill nodes
-    mid-stream (the elastic invariant extends to scheduled serving).
+    or replicas mid-stream (the elastic invariant extends to scheduled
+    serving).
     """
 
     def __init__(
@@ -107,16 +280,28 @@ class ServingScheduler:
         latency_fn: Optional[Callable[[int, object], float]] = None,
         on_batch: Optional[Callable[[int, "ServingScheduler"], None]] = None,
     ):
-        self.server = server
         self.cfg = cfg or SchedulerConfig()
-        self.k = k or server.cfg.topk
-        self.max_batch = self.cfg.max_batch or server.cfg.query_block
+        if isinstance(server, DispatchTarget):
+            if service_time_fn is not None or latency_fn is not None:
+                raise ValueError(
+                    "service_time_fn/latency_fn belong to the target when "
+                    "a DispatchTarget is passed (construct it with them)"
+                )
+            self.target = server
+        else:
+            self.target = SingleServerTarget(
+                server, service_time_fn=service_time_fn, latency_fn=latency_fn
+            )
+        # back-compat alias: the single server, or the target itself
+        self.server = getattr(self.target, "server", self.target)
+        self.stats = self.target.stats
+        self.k = k or self.target.default_k
+        self.max_batch = self.cfg.max_batch or self.target.default_max_batch
         assert self.max_batch >= 1
-        self.service_time_fn = service_time_fn
         self.on_batch = on_batch
         self.queue: Deque[Request] = deque()
         self.done: List[RequestResult] = []
-        self.busy_until = 0.0
+        self.busy_until = 0.0           # last completion seen (makespan end)
         self.first_arrival_s: Optional[float] = None
         self._next_id = 0
         self._batch_id = 0
@@ -125,22 +310,13 @@ class ServingScheduler:
         # built for (set lazily; re-synced after ANY re-plan, including
         # fail_node / replan_every ones done behind the scheduler's back)
         self._plan_hot: Optional[float] = None
-        self._seen_replans = server.stats.replans
-        if (self.cfg.backend or getattr(server, "backend", "host")) == "spmd":
-            # pre-compile the executor's bucket ladder so no in-trace
-            # dispatch charges a jit compile to the virtual clock (which
-            # would distort queue-wait/shed statistics by seconds)
-            server.executor.warmup(k=self.k)
-        self._hedge: Optional[HedgingExecutor] = None
-        if self.cfg.hedge_deadline_s > 0:
-            # one worker slot per cluster node; every worker executes the
-            # same search primitive, so the hedge target's answer is the
-            # primary's answer (HARMONY's replica layout recomputes visits)
-            self._hedge = HedgingExecutor(
-                workers=[self._exec_task] * server.cluster.n_nodes,
-                deadline_s=self.cfg.hedge_deadline_s,
-                latency_fn=latency_fn or (lambda w, t: 0.0),
-            )
+        self.target.configure(self.cfg, self.k)
+        self._seen_replans = self.target.replans
+
+    @property
+    def _hedge(self) -> Optional[HedgingExecutor]:
+        # back-compat: tests/examples inspect sched._hedge.stats
+        return getattr(self.target, "_hedge", None)
 
     # ---------------------------------------------------------------- admit
     def submit(self, query: np.ndarray, arrival_s: float) -> int:
@@ -151,7 +327,7 @@ class ServingScheduler:
         req_id is always its submission (trace) position — results map
         back to the trace even after shedding."""
         self.advance(arrival_s)
-        stats = self.server.stats
+        stats = self.stats
         stats.offered += 1
         rid = self._next_id
         self._next_id += 1
@@ -177,11 +353,11 @@ class ServingScheduler:
                     and len(self.queue) >= self.cfg.queue_capacity
                     and self.queue[-1].arrival_s < ready):
                 # queue at its bound with the size trigger unreachable:
-                # fire as soon as the server frees up instead of shedding
+                # fire as soon as the target frees up instead of shedding
                 # behind an idle server until the deadline
                 ready = self.queue[-1].arrival_s
                 trigger = "capacity"
-        return max(ready, self.busy_until), trigger
+        return max(ready, self.target.next_free_s()), trigger
 
     def advance(self, now: float):
         """Fire every batch whose dispatch time is ≤ ``now``."""
@@ -198,42 +374,16 @@ class ServingScheduler:
         return sorted(self.done, key=lambda r: r.req_id)
 
     # -------------------------------------------------------------- dispatch
-    def _exec_task(self, task):
-        queries, k = task
-        return self.server.search_batch(
-            queries, k, backend=self.cfg.backend or None
-        )
-
     def _dispatch(self, dispatch_s: float, trigger: str):
         batch = [self.queue.popleft()
                  for _ in range(min(len(self.queue), self.max_batch))]
         queries = np.stack([r.query for r in batch])
-        stats = self.server.stats
+        stats = self.stats
 
-        t0 = time.perf_counter()
-        sim_lat = 0.0
-        if self._hedge is not None:
-            # elastic scale-up (join_node) grows the cluster after init;
-            # keep one worker slot per node so live indices stay valid
-            while len(self._hedge.workers) < self.server.cluster.n_nodes:
-                self._hedge.workers.append(self._exec_task)
-            live = np.nonzero(self.server.cluster.live)[0]
-            primary = int(live[self._batch_id % len(live)])
-            replica = int(live[(self._batch_id + 1) % len(live)]) if len(live) > 1 else None
-            hedged_before = self._hedge.stats.hedged
-            res, _, sim_lat = self._hedge.run_timed((queries, self.k), primary, replica)
-            if self._hedge.stats.hedged > hedged_before:
-                stats.hedged_batches += 1
-        else:
-            res = self.server.search_batch(
-                queries, self.k, backend=self.cfg.backend or None
-            )
-        wall = time.perf_counter() - t0
-        service_s = (
-            self.service_time_fn(len(batch)) if self.service_time_fn else wall
-        ) + sim_lat
-        done_s = dispatch_s + service_s
-        self.busy_until = done_s
+        res, done_s = self.target.execute(
+            queries, self.k, dispatch_s, self._batch_id
+        )
+        self.busy_until = max(self.busy_until, done_s)
 
         if trigger == "full":
             stats.full_batches += 1
@@ -266,7 +416,7 @@ class ServingScheduler:
         # walk the probe history from the newest batch back, taking only
         # enough arrays to cover the window (not the whole history)
         take, rows = [], 0
-        for p in reversed(self.server._recent_probes):
+        for p in self.target.window_probes():
             take.append(p)
             rows += p.shape[0]
             if rows >= self.cfg.skew_window:
@@ -274,23 +424,23 @@ class ServingScheduler:
         if not take:
             return None
         window = np.concatenate(take[::-1], axis=0)[-self.cfg.skew_window:]
-        hits = estimate_cluster_hits(window, self.server.index.nlist)
+        hits = estimate_cluster_hits(window, self.target.nlist)
         return workload_concentration(hits, self.cfg.hot_fraction)
 
     def _maybe_replan_on_skew(self):
         if self.cfg.replan_drift <= 0:
             return
-        if self.server.stats.replans != self._seen_replans:
+        if self.target.replans != self._seen_replans:
             # the plan was rebuilt elsewhere (fail_node, replan_every):
             # re-baseline on the window that plan saw
-            self._seen_replans = self.server.stats.replans
+            self._seen_replans = self.target.replans
             self._plan_hot = self._window_hot_mass()
             self._batches_since_replan = 0
             return
         if self._plan_hot is None:
             # the initial plan was built from a uniform workload prior
             self._plan_hot = workload_concentration(
-                np.ones(self.server.index.nlist), self.cfg.hot_fraction
+                np.ones(self.target.nlist), self.cfg.hot_fraction
             )
         if self._batches_since_replan < self.cfg.min_batches_between_replans:
             return
@@ -298,10 +448,10 @@ class ServingScheduler:
         if hot is None:
             return
         if abs(hot - self._plan_hot) > self.cfg.replan_drift:
-            self.server.refresh_plan()
-            self.server.stats.skew_replans += 1
+            self.target.refresh_plan()
+            self.stats.skew_replans += 1
             self._plan_hot = hot
-            self._seen_replans = self.server.stats.replans
+            self._seen_replans = self.target.replans
             self._batches_since_replan = 0
 
     # ---------------------------------------------------------------- replay
@@ -310,7 +460,7 @@ class ServingScheduler:
     ) -> List[RequestResult]:
         """Replay a whole (arrival_s, query)-trace and drain. Returns served
         results ordered by req_id; shed requests have no result (compare
-        ``server.stats.shed``)."""
+        ``stats.shed``)."""
         for arrival_s, q in trace:
             self.submit(q, arrival_s)
         return self.flush()

@@ -1,0 +1,268 @@
+"""Multi-replica fleet tests: load-aware routing, cross-replica hedging,
+replica fail/join elasticity, heterogeneous host+spmd fleets, and the
+degenerate-summary fix.
+
+All timing runs on the scheduler's virtual clock with injected
+deterministic service models, and the fleet's power-of-two-choices
+sampling is seeded — every assertion (batch placement, Gini, hedge
+counts, shed counts) depends only on the trace."""
+
+import numpy as np
+import pytest
+
+from repro.config import HarmonyConfig
+from repro.core import build_ivf, search_oracle
+from repro.data import make_dataset, make_queries
+from repro.serve import (
+    HarmonyServer,
+    ReplicaFleet,
+    ReplicaSpec,
+    SchedulerConfig,
+    ServeStats,
+    ServingScheduler,
+    gini,
+)
+
+
+@pytest.fixture(scope="module")
+def anns():
+    ds = make_dataset(nb=4000, dim=32, n_components=8, spread=0.6, seed=0)
+    cfg = HarmonyConfig(dim=32, nlist=32, nprobe=6, topk=5, kmeans_iters=4)
+    index = build_ivf(ds.x, cfg)
+    q = make_queries(ds, nq=96, skew=0.3, noise=0.2, seed=1)
+    return ds, cfg, index, q
+
+
+def burst_trace(q, spacing=1e-5):
+    return [(i * spacing, q[i]) for i in range(len(q))]
+
+
+# -------------------------------------------------------------- exactness
+
+
+def test_fleet_matches_oracle_and_single_server(anns):
+    """A homogeneous fleet behind the scheduler returns exactly what one
+    server returns (every replica serves the full corpus)."""
+    ds, cfg, index, q = anns
+    fleet = ReplicaFleet(index, replicas=3, cfg=cfg, seed=0)
+    sched = ServingScheduler(fleet, SchedulerConfig(max_batch=16), k=5)
+    results = sched.run_trace(burst_trace(q))
+    assert len(results) == len(q)
+    assert [r.req_id for r in results] == list(range(len(q)))
+    oracle = search_oracle(index, q, k=5)
+    np.testing.assert_allclose(
+        np.stack([r.scores for r in results]), oracle.scores,
+        rtol=1e-3, atol=1e-3,
+    )
+    # work actually spread: more than one replica served batches
+    served_by = [r.batches for r in fleet.replicas]
+    assert sum(served_by) == len(q) // 16
+    assert sum(1 for b in served_by if b > 0) >= 2
+    assert fleet.stats.admitted == len(q) and fleet.stats.shed == 0
+
+
+# ------------------------------------------------- load balance under skew
+
+
+def test_load_balance_gini_under_skew_beats_round_robin(anns):
+    """On a heterogeneous fleet (two half-speed replicas) under a skewed
+    burst, load-estimate routing must spread *work-seconds* strictly more
+    evenly than round-robin — the fleet's Gini is bounded well below the
+    capacity-blind baseline's."""
+    ds, cfg, index, q = anns
+    qh = make_queries(ds, nq=192, skew=0.9, hot_fraction=0.05, noise=0.1,
+                      seed=4)
+    caps = [1.0, 1.0, 0.5, 0.5]
+    specs = [ReplicaSpec(capacity=c) for c in caps]
+    # deterministic service: 1ms per query on a full-speed replica
+    service = lambda r, n: n * 1e-3 / caps[r]
+    trace = burst_trace(qh, spacing=1e-5)
+
+    def run(routing):
+        fleet = ReplicaFleet(index, replicas=specs, cfg=cfg, routing=routing,
+                             service_time_fn=service, seed=0)
+        sched = ServingScheduler(fleet, SchedulerConfig(max_batch=8), k=5)
+        sched.run_trace(trace)
+        return fleet
+
+    rr = run("round_robin")
+    p2c = run("p2c")
+    g_rr, g_p2c = rr.load_balance_gini, p2c.load_balance_gini
+    # round-robin is balanced in counts but not in seconds: the slow
+    # replicas carry ~2x busy time
+    assert g_p2c < g_rr
+    assert g_p2c < 0.10
+    # every admitted request served under both policies
+    assert len(rr.stats.request_latency_ms) == 192
+    assert len(p2c.stats.request_latency_ms) == 192
+
+
+def test_fleet_scales_served_qps(anns):
+    """4 replicas must serve a saturating burst ≥1.5x faster than 1
+    replica on the virtual clock (the bench_fleet acceptance claim, in
+    deterministic miniature)."""
+    ds, cfg, index, q = anns
+    service = lambda r, n: n * 1e-3
+    trace = burst_trace(q, spacing=1e-5)
+
+    def qps(n_rep):
+        fleet = ReplicaFleet(index, replicas=n_rep, cfg=cfg,
+                             service_time_fn=service, seed=0)
+        sched = ServingScheduler(fleet, SchedulerConfig(max_batch=8), k=5)
+        sched.run_trace(trace)
+        return sched.served_qps
+
+    assert qps(4) >= 1.5 * qps(1)
+
+
+# ------------------------------------------------------ replica elasticity
+
+
+def test_replica_fail_join_mid_trace_no_lost_requests(anns):
+    """Failing a replica mid-trace removes it from routing; joining a new
+    one adds capacity — no admitted request is lost and every result
+    stays exact."""
+    ds, cfg, index, q = anns
+    fleet = ReplicaFleet(index, replicas=2, cfg=cfg, routing="least_loaded",
+                         service_time_fn=lambda r, n: n * 1e-3, seed=0)
+
+    def churn(batch_idx, sched):
+        if batch_idx == 2:
+            fleet.fail_replica(1)
+        elif batch_idx == 5:
+            fleet.join_replica(ReplicaSpec())
+
+    sched = ServingScheduler(
+        fleet, SchedulerConfig(max_batch=8), k=5, on_batch=churn
+    )
+    results = sched.run_trace(burst_trace(q))
+    assert len(results) == len(q)                 # nothing lost
+    assert fleet.stats.shed == 0
+    assert len(fleet.replicas) == 3 and fleet.cluster.n_live == 2
+    assert not fleet.cluster.live[1]
+    # the failed replica stopped taking batches; the joiner started
+    assert fleet.replicas[1].batches <= 3
+    assert fleet.replicas[2].batches > 0
+    oracle = search_oracle(index, q, k=5)
+    np.testing.assert_allclose(
+        np.stack([r.scores for r in results]), oracle.scores,
+        rtol=1e-3, atol=1e-3,
+    )
+
+
+# -------------------------------------------------- cross-replica hedging
+
+
+def test_cross_replica_hedge_fires_and_preserves_results(anns):
+    """A straggling primary replica trips the hedge deadline; the batch
+    re-runs on the second-least-loaded *replica* and results are
+    identical to the unhedged fleet (and the oracle)."""
+    ds, cfg, index, q = anns
+
+    def build(hedge_s):
+        # replica 0 straggles 0.5s; the others answer in 10us
+        return ReplicaFleet(
+            index, replicas=3, cfg=cfg, routing="least_loaded",
+            service_time_fn=lambda r, n: n * 1e-4,
+            latency_fn=lambda r, t: 0.5 if r == 0 else 1e-5,
+            seed=0,
+        ), SchedulerConfig(max_batch=8, hedge_deadline_s=hedge_s)
+
+    hedged_fleet, hedged_cfg = build(0.01)
+    sched = ServingScheduler(hedged_fleet, hedged_cfg, k=5)
+    results = sched.run_trace(burst_trace(q))
+
+    plain_fleet, _ = build(0.01)
+    plain = ServingScheduler(plain_fleet, SchedulerConfig(max_batch=8), k=5)
+    plain_results = plain.run_trace(burst_trace(q))
+
+    hs = hedged_fleet._hedge.stats
+    assert hs.hedged >= 1
+    assert hs.hedge_wins >= 1                     # the hedge target won
+    assert 0.0 < hs.win_rate <= 1.0
+    assert hedged_fleet.stats.hedged_batches == hs.hedged
+    # the hedge wait is charged to the virtual clock: a batch whose hedge
+    # won cannot complete before dispatch + deadline (10ms >> the 0.8ms
+    # injected service time)
+    assert max(hedged_fleet.stats.request_latency_ms) >= 10.0
+    # parity: hedging changes placement/latency, never answers
+    np.testing.assert_array_equal(
+        np.stack([r.ids for r in results]),
+        np.stack([r.ids for r in plain_results]),
+    )
+    oracle = search_oracle(index, q, k=5)
+    np.testing.assert_allclose(
+        np.stack([r.scores for r in results]), oracle.scores,
+        rtol=1e-3, atol=1e-3,
+    )
+
+
+# ------------------------------------------- heterogeneous host+spmd fleet
+
+
+def test_heterogeneous_host_spmd_fleet_matches_oracle(anns):
+    """A mixed fleet — one host replica, one device-resident spmd replica
+    — serves through the same queue and matches the oracle."""
+    ds, cfg, index, q = anns
+    fleet = ReplicaFleet(
+        index,
+        replicas=[ReplicaSpec(backend="host"), ReplicaSpec(backend="spmd")],
+        cfg=cfg,
+        routing="round_robin",      # force both backends to serve batches
+        seed=0,
+    )
+    sched = ServingScheduler(fleet, SchedulerConfig(max_batch=16), k=5)
+    results = sched.run_trace(burst_trace(q[:64]))
+    assert len(results) == 64
+    assert fleet.replicas[0].batches > 0 and fleet.replicas[1].batches > 0
+    assert fleet.replicas[1].server.stats.spmd_batches > 0
+    oracle = search_oracle(index, q[:64], k=5)
+    np.testing.assert_allclose(
+        np.stack([r.scores for r in results]), oracle.scores,
+        rtol=1e-3, atol=1e-3,
+    )
+
+
+# ------------------------------------------------- degenerate summaries
+
+
+def test_shed_heavy_trace_summary_none_percentiles(anns):
+    """A saturating trace behind a tiny bounded queue sheds nearly
+    everything; replicas that never served report None percentiles (not a
+    numpy empty-quantile raise, not a misleading 0.0), and the fleet
+    summary stays JSON-clean."""
+    ds, cfg, index, q = anns
+    fleet = ReplicaFleet(
+        index, replicas=2, cfg=cfg, routing="least_loaded",
+        service_time_fn=lambda r, n: 1000.0,      # one batch pins a replica
+        seed=0,
+    )
+    fleet.fail_replica(1)                          # replica 1 never serves
+    sched = ServingScheduler(
+        fleet,
+        SchedulerConfig(max_batch=4, queue_capacity=4, max_wait_s=1e-3),
+        k=5,
+    )
+    for i in range(64):                            # no flush: trace tail only
+        sched.submit(q[i % len(q)], i * 1e-6)
+    s = fleet.summary()                            # must not raise
+    assert fleet.stats.shed > 0
+    assert fleet.stats.offered == 64
+    idle = [r for r in s["replicas"] if r["batches"] == 0]
+    assert idle, "expected at least one replica with zero served batches"
+    for r in idle:
+        assert r["p50_service_ms"] is None and r["p99_service_ms"] is None
+        assert r["server"]["p50_queue_wait_ms"] is None
+    # a fresh stats object reports all-None percentiles and never raises
+    empty = ServeStats().summary()
+    for key in ("p50_queue_wait_ms", "p99_queue_wait_ms",
+                "p50_request_latency_ms", "p99_request_latency_ms"):
+        assert empty[key] is None
+
+
+def test_gini_helper():
+    assert gini([1.0, 1.0, 1.0, 1.0]) == pytest.approx(0.0)
+    assert gini([]) == 0.0
+    assert gini([0.0, 0.0]) == 0.0
+    assert gini([0.0, 0.0, 0.0, 1.0]) == pytest.approx(0.75)
+    assert gini([1.0, 1.0, 2.0, 2.0]) == pytest.approx(1 / 6, abs=1e-9)

@@ -235,6 +235,29 @@ def test_hedged_dispatch_fires_and_preserves_results(anns):
 # ------------------------------------------------------------------ plumbing
 
 
+def test_summary_none_percentiles_with_zero_completions(anns):
+    """With requests offered (and shed) but none completed, summary()
+    must report None percentile fields instead of raising on an empty
+    quantile or fabricating 0.0."""
+    ds, cfg, index, q = anns
+    srv = _server(index)
+    sched = ServingScheduler(
+        srv,
+        SchedulerConfig(max_batch=64, max_wait_s=10.0, queue_capacity=8),
+        k=5,
+    )
+    for i in range(4):          # same-instant burst: nothing fires pre-flush
+        sched.submit(q[i], 0.0)
+    s = srv.stats.summary()     # must not raise
+    assert srv.stats.admitted == 4 and srv.stats.batches == 0
+    for key in ("p50_queue_wait_ms", "p99_queue_wait_ms",
+                "p50_request_latency_ms", "p99_request_latency_ms"):
+        assert s[key] is None
+    results = sched.flush()     # the deadline fires on drain
+    assert len(results) == 4
+    assert srv.stats.summary()["p50_queue_wait_ms"] is not None
+
+
 def test_stats_summary_and_percentiles(anns):
     ds, cfg, index, q = anns
     srv = _server(index)
