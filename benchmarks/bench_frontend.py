@@ -1,0 +1,151 @@
+"""Real-clock front-end benchmark: wall-clock QPS vs offered load ×
+replica count under an open-loop Poisson driver.
+
+Unlike every other serving bench (virtual-clock replays), this one runs
+the live :class:`repro.serve.frontend.ServingFrontend`: requests are
+submitted at their Poisson arrival times on the **wall clock**, batches
+dispatch from a real thread pool, and fleet replicas genuinely overlap.
+
+Service model: each replica runs the real ``search_batch`` and then
+sleeps up to a calibrated per-query service time (measured single-replica
+batch wall with head-room, floored at 1 ms/query) — the standard
+one-box methodology for modelling N remote replicas (see
+``benchmarks/common.py``): sleeping replicas overlap on any core count,
+so the measured speedup isolates the front-end's overlap machinery from
+host parallelism. The driver is open-loop (arrivals don't wait for
+completions), offered at ``OVERSUBSCRIBE``× one replica's capacity, so a
+single replica saturates and sheds while four replicas keep up.
+
+Acceptance claim (ISSUE 4): ≥1.5× wall-clock served QPS at 4 host
+replicas vs 1 on the Poisson trace.
+
+Results fold into ``serving_results.json`` under the ``"frontend"`` key
+(schema in ``benchmarks/README.md``), plus the usual CSV rows.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.bench_fleet import calibrate_batch_wall
+from benchmarks.common import TINY, corpus, emit
+from repro.data import make_queries
+from repro.serve import (
+    ReplicaFleet,
+    ReplicaSpec,
+    SchedulerConfig,
+    ServingFrontend,
+)
+
+N_REQ = 160 if TINY else 512
+N_NODES = 4
+OVERSUBSCRIBE = 3.0     # offered load / single-replica capacity
+
+
+def poisson_arrivals(n: int, rate_qps: float, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate_qps, size=n))
+
+
+def drive_open_loop(frontend: ServingFrontend, arrivals, queries):
+    """Open-loop driver: submit each request at its arrival time on the
+    front-end's wall clock, never waiting for completions."""
+    clock = frontend.clock
+    t0 = clock.now()
+    futs = []
+    for t, qv in zip(arrivals, queries):
+        dt = (t0 + t) - clock.now()
+        if dt > 0:
+            clock.sleep(dt)
+        futs.append(frontend.submit(qv))
+    assert frontend.drain(timeout=300.0), "drain timed out"
+    return futs
+
+
+def run_cell(index, cfg, q, arrivals, n_rep: int, per_q_s: float,
+             mb: int) -> dict:
+    fleet = ReplicaFleet(
+        index,
+        replicas=[ReplicaSpec(backend="host", n_nodes=N_NODES)] * n_rep,
+        cfg=cfg,
+        service_time_fn=lambda r, n: n * per_q_s,
+        seed=0,
+    )
+    sched_cfg = SchedulerConfig(
+        max_batch=mb, max_wait_s=2e-3, queue_capacity=8 * mb
+    )
+    with ServingFrontend(fleet, sched_cfg, k=cfg.topk) as fe:
+        drive_open_loop(fe, arrivals, q)
+        summary = fe.summary()
+    return {
+        "wall_qps": fe.served_qps,
+        "makespan_s": fe.makespan_s,
+        "served": summary["served"],
+        "shed": summary["shed"],
+        "p50_request_latency_ms": summary["p50_request_latency_ms"],
+        "p99_request_latency_ms": summary["p99_request_latency_ms"],
+        "per_replica_batches": [r.batches for r in fleet.replicas],
+        "max_inflight": summary["max_inflight"],
+    }
+
+
+def main():
+    # a lighter corpus than the shared measurement one: this bench runs
+    # real searches concurrently in threads, and the *sleep* model (not
+    # host compute) must dominate the wall for overlap to be measurable
+    ds, cfg, index = corpus(nb=10_000)
+    mb = max(8, cfg.query_block // 4)
+    wall = calibrate_batch_wall(index, cfg, mb)
+    # head-room over the measured compute so the sleep padding (which is
+    # what overlaps across replicas) dominates on any host: at 4 in-flight
+    # replicas the *compute* slices contend for local cores/GIL and can
+    # stretch ~4x (starving the dispatcher/submitter threads too), so the
+    # model leaves 8x slack or the 4-replica cell measures host
+    # parallelism instead of front-end overlap
+    per_q_s = max(8.0 * wall / mb, 1e-3)
+    rate_qps = OVERSUBSCRIBE / per_q_s
+    arrivals = poisson_arrivals(N_REQ, rate_qps, seed=3)
+    q = make_queries(ds, nq=N_REQ, skew=0.3, noise=0.2, seed=11)
+
+    print(f"# frontend: open-loop Poisson x replica count "
+          f"(service {per_q_s * 1e3:.2f}ms/q, offered {rate_qps:.0f} q/s, "
+          f"{N_REQ} requests)")
+    report = {
+        "per_q_service_s": per_q_s,
+        "offered_qps": rate_qps,
+        "n_requests": N_REQ,
+        "cells": {},
+    }
+    for n_rep in (1, 2, 4):
+        cell = run_cell(index, cfg, q, arrivals, n_rep, per_q_s, mb)
+        report["cells"][f"r{n_rep}"] = cell
+        emit(
+            f"frontend.poisson.r{n_rep}",
+            1e6 / max(cell["wall_qps"], 1e-9),
+            f"wall_qps={cell['wall_qps']:.0f};served={cell['served']};"
+            f"shed={cell['shed']};"
+            f"p99_ms={cell['p99_request_latency_ms']:.1f};"
+            f"batches={'/'.join(map(str, cell['per_replica_batches']))}",
+        )
+
+    q1 = report["cells"]["r1"]["wall_qps"]
+    q4 = report["cells"]["r4"]["wall_qps"]
+    ok = q4 >= 1.5 * q1
+    report["claim_wall_qps_4rep_ge_1p5x"] = {
+        "r1_wall_qps": q1, "r4_wall_qps": q4,
+        "speedup": q4 / max(q1, 1e-9), "ok": bool(ok),
+    }
+    emit("frontend.claim.wall_qps_4rep_ge_1p5x_1rep", 0.0,
+         f"ok={ok};speedup={q4 / max(q1, 1e-9):.2f}")
+
+    out = Path(__file__).resolve().parent / "serving_results.json"
+    blob = json.loads(out.read_text()) if out.exists() else {}
+    blob["frontend"] = report
+    out.write_text(json.dumps(blob, indent=2, sort_keys=True))
+
+
+if __name__ == "__main__":
+    main()

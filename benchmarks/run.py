@@ -17,6 +17,7 @@ def main() -> None:
         bench_build,
         bench_executor,
         bench_fleet,
+        bench_frontend,
         bench_memory,
         bench_pruning_ratio,
         bench_qps_recall,
@@ -31,6 +32,7 @@ def main() -> None:
         bench_skew,
         bench_serving,
         bench_fleet,
+        bench_frontend,
         bench_executor,
         bench_breakdown,
         bench_ablation,

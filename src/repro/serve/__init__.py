@@ -1,5 +1,7 @@
 """Serving layer: scheduler-backed batched ANNS over the HARMONY core.
 
+See ``docs/ARCHITECTURE.md`` for the end-to-end picture; the short map:
+
 Backend selection
 -----------------
 Every scheduled batch executes through ``HarmonyServer.search_batch``,
@@ -29,6 +31,21 @@ admission queue with load-estimate routing, power-of-two-choices
 sampling, cross-replica straggler hedging, and replica fail/join
 elasticity).
 
+Clocks
+------
+The queue/deadline/shed logic is clock-agnostic
+(:class:`repro.serve.clock.Clock`):
+
+* :class:`~repro.serve.scheduler.ServingScheduler` +
+  :class:`~repro.serve.clock.VirtualClock` — deterministic trace replay,
+  the test oracle (``tests/test_virtual_clock_goldens.py`` pins it);
+* :class:`~repro.serve.frontend.ServingFrontend` +
+  :class:`~repro.serve.clock.MonotonicClock` — live wall-clock serving:
+  ``submit()``/``asubmit()`` return futures, a dispatcher thread fires
+  the same batch-forming triggers, and a thread pool overlaps replica
+  execution for real (per-replica locks, atomic EWMA accounting,
+  wall-clock hedging).
+
 The bucket ladder
 -----------------
 jit recompiles per static shape, while the scheduler's adaptive batches
@@ -40,9 +57,11 @@ each bucket at most once. Batches beyond the biggest qb bucket are split
 and merged host-side.
 """
 
+from repro.serve.clock import Clock, MonotonicClock, VirtualClock
 from repro.serve.engine import HarmonyServer, ServeStats
 from repro.serve.executor import ExecutorConfig, SpmdExecutor
 from repro.serve.fleet import Replica, ReplicaFleet, ReplicaSpec, gini
+from repro.serve.frontend import ServingFrontend, ShedError
 from repro.serve.scheduler import (
     DispatchTarget,
     Request,
@@ -50,6 +69,7 @@ from repro.serve.scheduler import (
     SchedulerConfig,
     ServingScheduler,
     SingleServerTarget,
+    SkewMonitor,
 )
 
 __all__ = [
@@ -57,8 +77,12 @@ __all__ = [
     "ServeStats",
     "ExecutorConfig",
     "SpmdExecutor",
+    "Clock",
+    "VirtualClock",
+    "MonotonicClock",
     "DispatchTarget",
     "SingleServerTarget",
+    "SkewMonitor",
     "Replica",
     "ReplicaFleet",
     "ReplicaSpec",
@@ -67,4 +91,6 @@ __all__ = [
     "RequestResult",
     "SchedulerConfig",
     "ServingScheduler",
+    "ServingFrontend",
+    "ShedError",
 ]

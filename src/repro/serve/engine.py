@@ -38,11 +38,22 @@ from repro.runtime import ClusterState, replan_on_failure
 
 @dataclass
 class ServeStats:
-    batches: int = 0
-    queries: int = 0
-    wall_s: float = 0.0
+    """Serving counters and timing samples.
+
+    Unit convention (suffixes are authoritative): ``*_s`` fields are
+    **seconds**, ``*_ms`` fields are **milliseconds**; unsuffixed fields
+    are counts. Execution-side timings (``wall_s``, ``latencies_ms``)
+    are *measured* process wall time of ``search_batch``; the
+    admission-side timings (``queue_wait_ms``, ``request_latency_ms``)
+    are on whichever clock drives serving — the virtual trace clock
+    under ``ServingScheduler`` replays, the wall clock under the live
+    ``ServingFrontend``."""
+
+    batches: int = 0                 # search_batch calls
+    queries: int = 0                 # rows across those batches
+    wall_s: float = 0.0              # summed measured batch wall (seconds)
     replans: int = 0
-    latencies_ms: List[float] = field(default_factory=list)
+    latencies_ms: List[float] = field(default_factory=list)  # per batch (ms)
 
     spmd_batches: int = 0            # batches served by the device executor
 
@@ -60,6 +71,11 @@ class ServeStats:
 
     @property
     def qps(self) -> float:
+        """Queries per second of *summed batch execution wall*
+        (``queries / wall_s``) — engine throughput while serving, not
+        end-to-end trace throughput (idle gaps between batches don't
+        count; for trace-level QPS see ``ServingScheduler.served_qps`` /
+        ``ServingFrontend.served_qps``)."""
         return self.queries / self.wall_s if self.wall_s else 0.0
 
     def latency_pct(self, p: float) -> float:
@@ -83,7 +99,14 @@ class ServeStats:
 
     def summary(self) -> dict:
         """JSON-friendly digest for the serving benchmarks. Percentile
-        fields are ``None`` when no request completed."""
+        fields are ``None`` when no request completed.
+
+        Units: every ``p50_*``/``p99_*`` key is **milliseconds** (the
+        ``_ms`` suffix is part of the key); all other keys are plain
+        counts. ``p50/p99_queue_wait_ms`` measure arrival → batch
+        dispatch; ``p50/p99_request_latency_ms`` measure arrival → batch
+        completion (so latency ≥ queue wait for the same request). The
+        full schema is documented in ``benchmarks/README.md``."""
         return {
             "batches": self.batches,
             "spmd_batches": self.spmd_batches,
@@ -105,7 +128,30 @@ class ServeStats:
 
 
 class HarmonyServer:
-    """Single-process serving engine over the HARMONY core."""
+    """Single-process serving engine over the HARMONY core.
+
+    Owns one partition plan (cost-model chosen, refreshed on workload
+    drift or node failure), a simulated cluster of ``n_nodes``, and the
+    backend switch between the host numpy engine and the device-resident
+    SPMD executor. One server = one replica; stack several behind a
+    :class:`repro.serve.fleet.ReplicaFleet` to scale out.
+
+    >>> import numpy as np
+    >>> from repro.config import HarmonyConfig
+    >>> from repro.core import build_ivf
+    >>> rng = np.random.default_rng(0)
+    >>> x = rng.standard_normal((256, 8)).astype(np.float32)
+    >>> cfg = HarmonyConfig(dim=8, nlist=4, nprobe=2, topk=3,
+    ...                     kmeans_iters=2)
+    >>> srv = HarmonyServer(build_ivf(x, cfg), n_nodes=2)
+    >>> res = srv.search_batch(x[:4], k=3)      # one batch, top-3 each
+    >>> res.ids.shape, res.scores.shape
+    ((4, 3), (4, 3))
+    >>> bool((res.ids[:, 0] == np.arange(4)).all())   # self-NN is exact
+    True
+    >>> srv.stats.batches, srv.stats.queries
+    (1, 4)
+    """
 
     def __init__(
         self,

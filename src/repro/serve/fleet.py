@@ -39,10 +39,18 @@ Per-replica plans stay independent: each server keeps its own workload
 window and re-plans from *its* observed probes (skew re-planning can
 diverge per replica, the SPFresh-style accuracy-preserving property —
 results are plan-invariant by the exactness guarantee).
+
+Clocks: behind :class:`repro.serve.scheduler.ServingScheduler` the fleet
+runs the deterministic virtual-clock replay (``execute``); behind
+:class:`repro.serve.frontend.ServingFrontend` it executes for real
+(``execute_wall``) — replicas genuinely overlap on a thread pool, with
+per-replica locks serializing same-replica batches and all load/EWMA
+accounting made atomic (``_record_service``).
 """
 
 from __future__ import annotations
 
+import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -52,6 +60,7 @@ import numpy as np
 
 from repro.runtime.elastic import ClusterState
 from repro.runtime.straggler import HedgingExecutor
+from repro.serve.clock import Clock
 from repro.serve.engine import HarmonyServer, ServeStats
 from repro.serve.scheduler import DispatchTarget, SchedulerConfig
 
@@ -80,16 +89,30 @@ class ReplicaSpec:
 
 @dataclass
 class Replica:
-    """One server plus its fleet-side routing state (virtual clock)."""
+    """One server plus its fleet-side routing state.
+
+    Times are **seconds** on whichever clock drives the fleet (virtual
+    replay or the live front-end's wall clock); ``service_ms`` is
+    **milliseconds** per served batch. ``lock`` serializes wall-clock
+    execution on this replica — two batches routed to the same replica
+    queue behind it while other replicas run concurrently."""
 
     server: HarmonyServer
     spec: ReplicaSpec
-    busy_until: float = 0.0         # virtual time its queue drains
-    busy_s: float = 0.0             # total virtual service seconds
+    busy_until: float = 0.0         # time (s) its dispatch queue drains
+    busy_s: float = 0.0             # total service seconds
     batches: int = 0
     queries: int = 0
     ewma_per_q_s: Optional[float] = None
     service_ms: List[float] = field(default_factory=list)
+    lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+    # wall-clock mode only: predicted service-seconds of batches dispatched
+    # to this replica but not yet completed. On the virtual clock execution
+    # is inline, so busy_until always carries the backlog and this stays 0;
+    # on the real clock busy_until is stale while a batch runs, and without
+    # this term the router would pile every batch onto the same "idle"
+    # replica (they'd serialize on its lock).
+    inflight_s: float = 0.0
 
     def predict_service_s(
         self, n_queries: int, fleet_per_q_s: Optional[float] = None
@@ -133,6 +156,23 @@ class ReplicaFleet(DispatchTarget):
     ``search_batch`` wall divided by the replica's capacity weight.
     ``latency_fn(replica_idx, task)`` overrides the hedge's effective-
     latency model (default: the fleet's own load estimate).
+
+    >>> import numpy as np
+    >>> from repro.config import HarmonyConfig
+    >>> from repro.core import build_ivf
+    >>> from repro.serve import SchedulerConfig, ServingScheduler
+    >>> rng = np.random.default_rng(0)
+    >>> x = rng.standard_normal((256, 8)).astype(np.float32)
+    >>> cfg = HarmonyConfig(dim=8, nlist=4, nprobe=2, topk=3,
+    ...                     kmeans_iters=2)
+    >>> fleet = ReplicaFleet(build_ivf(x, cfg), replicas=2, cfg=cfg,
+    ...                      service_time_fn=lambda r, n: n * 1e-3, seed=0)
+    >>> sched = ServingScheduler(fleet, SchedulerConfig(max_batch=8), k=3)
+    >>> results = sched.run_trace([(i * 1e-5, x[i]) for i in range(32)])
+    >>> len(results), sum(r.batches for r in fleet.replicas)
+    (32, 4)
+    >>> sum(1 for r in fleet.replicas if r.batches > 0) > 1  # spread out
+    True
     """
 
     def __init__(
@@ -174,6 +214,10 @@ class ReplicaFleet(DispatchTarget):
         # fleet-wide EWMA of capacity-normalized per-query service time
         # (the anchor every replica's load estimate blends against)
         self._fleet_ewma_norm_per_q: Optional[float] = None
+        # guards routing state (busy_until, EWMAs, rng, probes window) so
+        # the real-clock front-end can dispatch to replicas from a thread
+        # pool; uncontended (hence free) on the single-threaded virtual path
+        self._mu = threading.Lock()
 
     def _make_server(self, spec: ReplicaSpec) -> HarmonyServer:
         return HarmonyServer(
@@ -234,18 +278,61 @@ class ReplicaFleet(DispatchTarget):
             res = self._run_on(ranked[0], queries, k, dispatch_s)
         return res, self._last_done_s
 
+    def execute_wall(self, queries, k, batch_id, clock: Clock):
+        """Real-clock dispatch for the live front-end: route by the same
+        load estimates (``clock.now()`` as "now"), then actually run the
+        batch on the chosen replica — concurrently with batches other
+        worker threads are running on *other* replicas. With a hedge
+        deadline configured, dispatch goes through
+        :meth:`repro.runtime.straggler.HedgingExecutor.run_ranked_wall`:
+        the primary really runs, and if it misses the deadline the batch
+        is re-issued to the least-loaded other replica, first result
+        wins."""
+        n = queries.shape[0]
+        with self._mu:
+            ranked = self._rank_replicas(n, clock.now(), batch_id)
+            primary = self.replicas[ranked[0]]
+            # reserve the predicted service so concurrent dispatches see
+            # this replica as loaded while the batch is in flight
+            reserve_s = self._predict_service_s(primary, n)
+            primary.inflight_s += reserve_s
+        try:
+            if self._hedge is not None and len(ranked) > 1:
+                (res, done_s), served_by, hedge_fired = (
+                    self._hedge.run_ranked_wall((queries, k, clock), ranked)
+                )
+                if hedge_fired:
+                    with self._mu:
+                        self.stats.hedged_batches += 1
+            else:
+                res, done_s = self._run_on_wall(ranked[0], queries, k, clock)
+        finally:
+            with self._mu:
+                primary.inflight_s = max(primary.inflight_s - reserve_s, 0.0)
+        return res, done_s
+
     # ------------------------------------------------------------- routing
-    def load_estimate(self, r_idx: int, now: float, n_queries: int) -> float:
-        """Queue-seconds this batch would wait-plus-run on replica
-        ``r_idx``: outstanding backlog + predicted service time."""
-        rep = self.replicas[r_idx]
+    def _predict_service_s(self, rep: Replica, n_queries: int) -> float:
+        """Predicted service seconds for a batch on ``rep``: the replica's
+        own EWMA blended with the capacity-normalized fleet EWMA (cost-
+        model seeded before any observation). Single source for both the
+        routing estimate and the wall-mode in-flight reservation."""
         fleet_per_q = (
             self._fleet_ewma_norm_per_q / max(rep.spec.capacity, 1e-9)
             if self._fleet_ewma_norm_per_q is not None
             else None
         )
-        return max(rep.busy_until - now, 0.0) + rep.predict_service_s(
-            n_queries, fleet_per_q
+        return rep.predict_service_s(n_queries, fleet_per_q)
+
+    def load_estimate(self, r_idx: int, now: float, n_queries: int) -> float:
+        """Queue-seconds this batch would wait-plus-run on replica
+        ``r_idx``: outstanding backlog (completed-work horizon plus
+        in-flight reservations) + predicted service time."""
+        rep = self.replicas[r_idx]
+        return (
+            max(rep.busy_until - now, 0.0)
+            + rep.inflight_s
+            + self._predict_service_s(rep, n_queries)
         )
 
     def _estimate_latency(self, r_idx: int, task) -> float:
@@ -285,8 +372,12 @@ class ReplicaFleet(DispatchTarget):
     # ----------------------------------------------------------- execution
     def _make_worker(self, r_idx: int):
         def run(task):
-            queries, k, dispatch_s = task
-            return self._run_on(r_idx, queries, k, dispatch_s)
+            # task is (queries, k, dispatch_s) on the virtual clock, or
+            # (queries, k, clock) from the real-clock front-end
+            queries, k, when = task
+            if isinstance(when, Clock):
+                return self._run_on_wall(r_idx, queries, k, when)
+            return self._run_on(r_idx, queries, k, when)
         return run
 
     def _run_on(self, r_idx: int, queries, k, dispatch_s: float):
@@ -302,32 +393,73 @@ class ReplicaFleet(DispatchTarget):
             if self.service_time_fn
             else wall / max(rep.spec.capacity, 1e-9)
         )
-        rep.busy_until = start_s + service_s
-        rep.busy_s += service_s
-        rep.batches += 1
-        rep.queries += n
-        rep.service_ms.append(service_s * 1e3)
-        obs_per_q = service_s / max(n, 1)
-        rep.ewma_per_q_s = (
-            obs_per_q
-            if rep.ewma_per_q_s is None
-            else self.ewma_alpha * obs_per_q
-            + (1.0 - self.ewma_alpha) * rep.ewma_per_q_s
-        )
-        norm_per_q = obs_per_q * rep.spec.capacity
-        self._fleet_ewma_norm_per_q = (
-            norm_per_q
-            if self._fleet_ewma_norm_per_q is None
-            else self.ewma_alpha * norm_per_q
-            + (1.0 - self.ewma_alpha) * self._fleet_ewma_norm_per_q
-        )
-        # the replica's server just recorded this batch's probes; mirror
-        # them into the fleet-level window (newest last) for the
-        # scheduler's hot-mass drift trigger
-        if rep.server._recent_probes:
-            self._recent_probes.append(rep.server._recent_probes[-1])
-        self._last_done_s = rep.busy_until
+        self._record_service(rep, n, service_s, done_s=start_s + service_s)
         return res
+
+    def _run_on_wall(self, r_idx: int, queries, k, clock: Clock):
+        """Wall-clock execution on one replica: ``rep.lock`` serializes
+        batches routed to the *same* replica (they queue, as a real
+        replica's dispatch queue would) while other replicas run
+        concurrently on the front-end's thread pool. With an injected
+        ``service_time_fn`` the wall is padded by sleeping the shortfall —
+        the real-clock analogue of the virtual service model (models a
+        remote replica whose service time exceeds local compute).
+
+        Hedge losers run to completion here and are *deliberately*
+        recorded: a discarded hedge execution still consumed the
+        replica's time for real, so counting it keeps busy-seconds,
+        EWMAs, and load estimates honest (it is the ``wasted`` in
+        ``HedgeStats.wasted``). Per-replica ``queries`` sums can
+        therefore exceed served requests in wall mode — by exactly the
+        hedged-and-lost batches."""
+        rep = self.replicas[r_idx]
+        with rep.lock:
+            t0 = clock.now()
+            res = rep.server.search_batch(
+                queries, k, backend=self._backend or None
+            )
+            n = queries.shape[0]
+            if self.service_time_fn is not None:
+                clock.sleep(
+                    self.service_time_fn(r_idx, n) - (clock.now() - t0)
+                )
+            done_s = clock.now()
+        self._record_service(rep, n, done_s - t0, done_s)
+        return res, done_s
+
+    def _record_service(self, rep: Replica, n: int, service_s: float,
+                        done_s: float):
+        """Atomically account one served batch: busy bookkeeping, the
+        per-replica and fleet-wide EWMAs, and the probe-window mirror.
+        Shared by the virtual and wall paths; ``_mu`` keeps concurrent
+        wall-mode dispatches exact (EWMA read-modify-writes and counter
+        increments would otherwise race)."""
+        with self._mu:
+            rep.busy_until = done_s
+            rep.busy_s += service_s
+            rep.batches += 1
+            rep.queries += n
+            rep.service_ms.append(service_s * 1e3)
+            obs_per_q = service_s / max(n, 1)
+            rep.ewma_per_q_s = (
+                obs_per_q
+                if rep.ewma_per_q_s is None
+                else self.ewma_alpha * obs_per_q
+                + (1.0 - self.ewma_alpha) * rep.ewma_per_q_s
+            )
+            norm_per_q = obs_per_q * rep.spec.capacity
+            self._fleet_ewma_norm_per_q = (
+                norm_per_q
+                if self._fleet_ewma_norm_per_q is None
+                else self.ewma_alpha * norm_per_q
+                + (1.0 - self.ewma_alpha) * self._fleet_ewma_norm_per_q
+            )
+            # the replica's server just recorded this batch's probes;
+            # mirror them into the fleet-level window (newest last) for
+            # the scheduler's hot-mass drift trigger
+            if rep.server._recent_probes:
+                self._recent_probes.append(rep.server._recent_probes[-1])
+            self._last_done_s = done_s
 
     # ------------------------------------------------------------ elastic
     def fail_replica(self, r_idx: int) -> None:
@@ -335,24 +467,37 @@ class ReplicaFleet(DispatchTarget):
         to it completes (the batch result was computed at dispatch); no
         admitted request is lost — the shared queue re-routes everything
         else to the survivors."""
-        self.cluster.fail(r_idx)
-        if self.cluster.n_live == 0:
-            raise RuntimeError("no live replicas")
+        with self._mu:
+            self.cluster.fail(r_idx)
+            if self.cluster.n_live == 0:
+                raise RuntimeError("no live replicas")
 
     def join_replica(self, spec: Optional[ReplicaSpec] = None) -> int:
-        """Stand up one more replica mid-trace; returns its index."""
+        """Stand up one more replica mid-trace; returns its index.
+
+        The server is built and warmed *before* the replica becomes
+        routable, and the routing state (replica list, hedge worker slot,
+        live set) is updated atomically under the fleet lock — a
+        concurrent wall-clock dispatch never sees a live replica without
+        its hedge worker."""
         spec = spec or ReplicaSpec()
         rep = Replica(self._make_server(spec), spec)
-        self.replicas.append(rep)
-        self.cluster.join()
         self._warmup_replica(rep)
-        if self._hedge is not None:
-            self._hedge.workers.append(self._make_worker(len(self.replicas) - 1))
-        return len(self.replicas) - 1
+        with self._mu:
+            self.replicas.append(rep)
+            if self._hedge is not None:
+                self._hedge.workers.append(
+                    self._make_worker(len(self.replicas) - 1)
+                )
+            self.cluster.join()
+            return len(self.replicas) - 1
 
     # ------------------------------------------- skew-adaptation surface
     def window_probes(self):
-        return reversed(self._recent_probes)
+        # snapshot under the lock: wall-mode workers append to the deque
+        # concurrently, and iterating a mutating deque raises
+        with self._mu:
+            return list(self._recent_probes)[::-1]       # newest first
 
     def refresh_plan(self) -> None:
         """Re-plan every live replica from its *own* workload window —
@@ -376,6 +521,12 @@ class ReplicaFleet(DispatchTarget):
     def default_k(self) -> int:
         return self.cfg.topk
 
+    @property
+    def parallelism(self) -> int:
+        """Live replica count — the front-end's default in-flight bound
+        (one wall-clock batch per live replica can genuinely overlap)."""
+        return max(int(self.cluster.n_live), 1)
+
     # ---------------------------------------------------------- reporting
     @property
     def load_balance_gini(self) -> float:
@@ -388,7 +539,25 @@ class ReplicaFleet(DispatchTarget):
         """Fleet-level digest: per-replica QPS/latency/shed (each
         replica's own ServeStats threaded up), the load-balance Gini, and
         the cross-replica hedge win rate, alongside the fleet's admission
-        accounting."""
+        accounting (see :meth:`repro.serve.engine.ServeStats.summary` for
+        those keys).
+
+        Units — seconds vs milliseconds are explicit in key names:
+
+        * ``replicas[i].busy_s`` — total service time in **seconds** (on
+          the driving clock: virtual in replay, wall under the live
+          front-end);
+        * ``replicas[i].virtual_qps`` — ``queries / busy_s``: the
+          replica's throughput while busy (queries per second), not
+          wall-clock QPS — idle gaps between batches don't count;
+        * ``replicas[i].p50_service_ms`` / ``p99_service_ms`` —
+          per-*batch* service-time percentiles in **milliseconds**
+          (``None`` until the replica has served a batch);
+        * ``load_balance_gini`` — dimensionless in [0, 1) over
+          per-replica busy-seconds (0 = perfectly balanced);
+        * ``hedge.win_rate`` — fraction of fired hedges the hedge target
+          won, in [0, 1].
+        """
         per_replica = []
         for i, rep in enumerate(self.replicas):
             sm = np.asarray(rep.service_ms, np.float64)

@@ -1,0 +1,402 @@
+"""Real-clock asynchronous serving front-end — live traffic through the
+same admission queue, adaptive batch former, and deadline/shed accounting
+that the virtual-clock scheduler replays deterministically.
+
+This is the ROADMAP's "real-clock front-end": BatANN-style, an async
+driver that overlaps replica execution for real instead of only on the
+simulated clock. The split of responsibilities:
+
+* :class:`ServingFrontend` (here) — owns the wall clock
+  (:class:`repro.serve.clock.MonotonicClock`), a bounded admission queue,
+  the batch-forming triggers (the *same* ``next_fire`` policy the
+  scheduler uses: size / deadline / capacity), a dispatcher thread that
+  fires due batches, and a thread pool that executes up to
+  ``max_inflight`` batches concurrently;
+* the :class:`repro.serve.scheduler.DispatchTarget` — owns running one
+  batch (``execute_wall``): a :class:`~repro.serve.scheduler.SingleServerTarget`
+  serializes on its server; a :class:`repro.serve.fleet.ReplicaFleet`
+  routes by live load estimates and runs the batch on the chosen replica
+  concurrently with other in-flight batches (per-replica locks, atomic
+  EWMA accounting, optional wall-clock straggler hedging).
+
+Requests are submitted live — :meth:`ServingFrontend.submit` returns a
+``concurrent.futures.Future`` resolving to a
+:class:`~repro.serve.scheduler.RequestResult`; :meth:`~ServingFrontend.asubmit`
+is the asyncio twin. Backpressure sheds by failing the future with
+:class:`ShedError` (and counting it), never by blocking the submitter.
+
+The virtual-clock replay (:class:`~repro.serve.scheduler.ServingScheduler`)
+remains the test oracle for the shared queue/deadline/shed logic —
+``tests/test_virtual_clock_goldens.py`` pins it bit-for-bit.
+
+>>> import numpy as np
+>>> from repro.config import HarmonyConfig
+>>> from repro.core import build_ivf
+>>> from repro.serve import HarmonyServer, SchedulerConfig, ServingFrontend
+>>> rng = np.random.default_rng(0)
+>>> x = rng.standard_normal((256, 8)).astype(np.float32)
+>>> cfg = HarmonyConfig(dim=8, nlist=4, nprobe=2, topk=3, kmeans_iters=2)
+>>> srv = HarmonyServer(build_ivf(x, cfg), n_nodes=2)
+>>> with ServingFrontend(srv, SchedulerConfig(max_batch=4, max_wait_s=1e-3),
+...                      k=3) as fe:
+...     futs = fe.submit_many(x[:8])            # live submission
+...     ids = [f.result(timeout=30).ids for f in futs]
+>>> len(ids), ids[0].shape
+(8, (3,))
+>>> fe.stats.admitted, fe.stats.shed
+(8, 0)
+"""
+
+from __future__ import annotations
+
+import asyncio
+import threading
+from collections import deque
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Deque, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import time
+import warnings
+
+from repro.serve.clock import Clock, MonotonicClock
+from repro.serve.scheduler import (
+    DispatchTarget,
+    Request,
+    RequestResult,
+    SchedulerConfig,
+    SingleServerTarget,
+    SkewMonitor,
+    next_fire,
+)
+
+
+class ShedError(RuntimeError):
+    """A request was rejected by admission control (bounded queue full).
+
+    Delivered through the submitted future — ``future.result()`` (or
+    ``await asubmit(...)``) raises it; the request was counted in
+    ``stats.shed`` and never queued."""
+
+
+class ServingFrontend:
+    """Live (wall-clock) admission-controlled serving front-end.
+
+    Parameters mirror :class:`~repro.serve.scheduler.ServingScheduler`:
+    pass a ``HarmonyServer`` (wrapped in a ``SingleServerTarget``) or any
+    ``DispatchTarget`` — in particular a
+    :class:`repro.serve.fleet.ReplicaFleet`, whose replicas then execute
+    concurrently on the front-end's thread pool.
+
+    ``max_inflight`` bounds concurrently executing batches (default: the
+    target's ``parallelism`` — 1 for a single server, the live replica
+    count for a fleet). ``service_time_fn(n_queries) -> seconds`` (single
+    server only) pads each batch's wall to a service model by sleeping —
+    used by benchmarks/tests to model remote-replica service time on one
+    box; fleets take the per-replica model in their own constructor.
+
+    Lifecycle: the dispatcher thread starts immediately; use as a context
+    manager or call :meth:`shutdown`. :meth:`drain` blocks until queue and
+    in-flight batches are empty (firing still-queued batches immediately
+    rather than waiting out their deadlines).
+
+    All timestamps are seconds on ``clock`` (default
+    :class:`~repro.serve.clock.MonotonicClock`, epoch ≈ construction
+    time); ``stats`` durations are milliseconds (see
+    :meth:`repro.serve.engine.ServeStats.summary`).
+    """
+
+    def __init__(
+        self,
+        server,
+        cfg: Optional[SchedulerConfig] = None,
+        k: Optional[int] = None,
+        max_inflight: Optional[int] = None,
+        service_time_fn=None,
+        clock: Optional[Clock] = None,
+        on_batch=None,
+    ):
+        self.cfg = cfg or SchedulerConfig()
+        if isinstance(server, DispatchTarget):
+            if service_time_fn is not None:
+                raise ValueError(
+                    "service_time_fn belongs to the target when a "
+                    "DispatchTarget is passed (construct it with one)"
+                )
+            self.target = server
+        else:
+            self.target = SingleServerTarget(
+                server, service_time_fn=service_time_fn
+            )
+        self.server = getattr(self.target, "server", self.target)
+        self.stats = self.target.stats
+        self.clock: Clock = clock or MonotonicClock()
+        self.k = k or self.target.default_k
+        self.max_batch = self.cfg.max_batch or self.target.default_max_batch
+        assert self.max_batch >= 1
+        self.max_inflight = int(max_inflight or self.target.parallelism)
+        assert self.max_inflight >= 1
+        self.on_batch = on_batch
+        self.target.configure(self.cfg, self.k)
+        self._skew = SkewMonitor(self.cfg, self.target)
+        self._skew_mu = threading.Lock()
+
+        self._mu = threading.Condition()
+        self.queue: Deque[Request] = deque()       # same shape the shared
+        self._futures: dict = {}                   # next_fire policy reads
+        self._inflight = 0
+        self._closing = False
+        self._draining = 0
+        self._next_id = 0
+        self._batch_id = 0
+        self._served = 0
+        self.first_arrival_s: Optional[float] = None
+        self.last_done_s = 0.0
+        self._pool = ThreadPoolExecutor(
+            max_workers=self.max_inflight, thread_name_prefix="harmony-serve"
+        )
+        self._dispatcher = threading.Thread(
+            target=self._dispatch_loop, name="harmony-dispatch", daemon=True
+        )
+        self._dispatcher.start()
+
+    # ---------------------------------------------------------------- admit
+    def submit(self, query: np.ndarray) -> "Future[RequestResult]":
+        """Offer one request at the current wall time. Returns a future
+        that resolves to its :class:`RequestResult` — or raises
+        :class:`ShedError` from the future if backpressure shed it.
+        Raises ``RuntimeError`` immediately if the front-end is shut
+        down."""
+        fut: "Future[RequestResult]" = Future()
+        with self._mu:
+            if self._closing:
+                raise RuntimeError("ServingFrontend is shut down")
+            arrival_s = self.clock.now()
+            self.stats.offered += 1
+            rid = self._next_id
+            self._next_id += 1
+            if self.first_arrival_s is None:
+                self.first_arrival_s = arrival_s
+            if (self.cfg.queue_capacity
+                    and len(self.queue) >= self.cfg.queue_capacity):
+                self.stats.shed += 1
+                shed_exc = ShedError(
+                    f"request {rid} shed: queue at capacity "
+                    f"{self.cfg.queue_capacity}"
+                )
+            else:
+                self.queue.append(Request(rid, np.asarray(query), arrival_s))
+                self._futures[rid] = fut
+                self.stats.admitted += 1
+                shed_exc = None
+                self._mu.notify_all()
+        if shed_exc is not None:
+            fut.set_exception(shed_exc)
+        return fut
+
+    def submit_many(
+        self, queries: Sequence[np.ndarray]
+    ) -> List["Future[RequestResult]"]:
+        """Submit a sequence of single-query requests; one future each
+        (shed requests come back as already-failed futures)."""
+        return [self.submit(q) for q in queries]
+
+    async def asubmit(self, query: np.ndarray) -> RequestResult:
+        """asyncio twin of :meth:`submit`: ``await`` the result directly
+        (raises :class:`ShedError` if admission shed the request)."""
+        return await asyncio.wrap_future(self.submit(query))
+
+    # ----------------------------------------------------------- dispatcher
+    def _due(self, now: float) -> Tuple[float, str]:
+        """When may the queued requests dispatch, and why — the
+        scheduler's shared :func:`~repro.serve.scheduler.next_fire`
+        policy verbatim. The virtual scheduler gates on
+        ``target.next_free_s()``; here the in-flight bound plays that
+        role (checked by the caller), so the free-time argument is 0.
+        While draining/closing, still-queued requests fire immediately
+        instead of waiting out their deadline (trigger classification
+        unchanged)."""
+        fire_s, trigger = next_fire(self.queue, self.cfg, self.max_batch, 0.0)
+        if self._closing or self._draining:
+            return now, trigger
+        return fire_s, trigger
+
+    def _dispatch_loop(self) -> None:
+        while True:
+            with self._mu:
+                while not self.queue and not self._closing:
+                    self._mu.wait()
+                if not self.queue:          # closing and drained
+                    break
+                now = self.clock.now()
+                fire_s, trigger = self._due(now)
+                if fire_s > now:
+                    self._mu.wait(timeout=min(fire_s - now, 0.05))
+                    continue
+                if self._inflight >= self.max_inflight:
+                    self._mu.wait(timeout=0.05)
+                    continue
+                batch = [
+                    self.queue.popleft()
+                    for _ in range(min(len(self.queue), self.max_batch))
+                ]
+                futs = [self._futures.pop(r.req_id) for r in batch]
+                self._inflight += 1
+                bid = self._batch_id
+                self._batch_id += 1
+                dispatch_s = now
+            try:
+                self._pool.submit(
+                    self._run_batch, batch, futs, dispatch_s, trigger, bid
+                )
+            except RuntimeError:            # pool torn down mid-close
+                with self._mu:
+                    self._inflight -= 1
+                    self._mu.notify_all()
+                for fut in futs:
+                    fut.cancel()
+
+    def _run_batch(self, batch, futs, dispatch_s: float, trigger: str,
+                   bid: int):
+        res, err = None, None
+        try:
+            queries = np.stack([req.query for req in batch])
+            res, done_s = self.target.execute_wall(
+                queries, self.k, bid, self.clock
+            )
+        except BaseException as e:          # noqa: BLE001 - relayed to futures
+            err = e
+            done_s = self.clock.now()
+        with self._mu:
+            self._inflight -= 1
+            if err is None:
+                if trigger == "full":
+                    self.stats.full_batches += 1
+                elif trigger == "capacity":
+                    self.stats.capacity_batches += 1
+                else:
+                    self.stats.deadline_batches += 1
+                for req in batch:
+                    self.stats.queue_wait_ms.append(
+                        (dispatch_s - req.arrival_s) * 1e3
+                    )
+                    self.stats.request_latency_ms.append(
+                        (done_s - req.arrival_s) * 1e3
+                    )
+                self._served += len(batch)
+                self.last_done_s = max(self.last_done_s, done_s)
+            self._mu.notify_all()
+        # complete futures outside the lock: done-callbacks run inline
+        if err is not None:
+            for fut in futs:
+                fut.set_exception(err)
+        else:
+            for row, (req, fut) in enumerate(zip(batch, futs)):
+                fut.set_result(
+                    RequestResult(
+                        req_id=req.req_id,
+                        ids=res.ids[row],
+                        scores=res.scores[row],
+                        arrival_s=req.arrival_s,
+                        dispatch_s=dispatch_s,
+                        done_s=done_s,
+                        batch_id=bid,
+                    )
+                )
+            try:
+                with self._skew_mu:         # serialized hot-mass check
+                    self._skew.after_batch()
+            except Exception as e:          # results already delivered —
+                warnings.warn(              # surface, don't lose, the error
+                    f"skew-replan check failed on batch {bid}: {e!r}"
+                )
+        if self.on_batch is not None:
+            try:
+                self.on_batch(bid, self)
+            except Exception as e:
+                warnings.warn(f"on_batch callback failed on batch {bid}: {e!r}")
+
+    # ------------------------------------------------------------ lifecycle
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Block until the queue is empty and no batch is in flight,
+        firing still-queued batches immediately. Returns False if
+        ``timeout`` (seconds) expired first. The timeout is measured on
+        real time (``time.monotonic``), not ``self.clock`` — waiting is
+        real even if a non-wall clock was injected."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._mu:
+            self._draining += 1
+            self._mu.notify_all()
+            try:
+                while self.queue or self._inflight:
+                    wait_s = 0.05
+                    if deadline is not None:
+                        remaining = deadline - time.monotonic()
+                        if remaining <= 0:
+                            return False
+                        wait_s = min(wait_s, remaining)
+                    self._mu.wait(timeout=wait_s)
+                return True
+            finally:
+                self._draining -= 1
+                self._mu.notify_all()
+
+    def shutdown(self, wait: bool = True,
+                 timeout: Optional[float] = None) -> None:
+        """Graceful stop: refuse new submissions, then (``wait=True``)
+        drain queued and in-flight work before tearing the pool down.
+        With ``wait=False``, queued requests are cancelled and in-flight
+        batches finish in the background. If ``timeout`` expires while
+        draining, remaining in-flight batches are likewise left to finish
+        in the background rather than blocking past the timeout.
+        Idempotent."""
+        drained = True
+        with self._mu:
+            already = self._closing
+            self._closing = True
+            if not wait:
+                dropped = [self._futures.pop(r.req_id, None)
+                           for r in self.queue]
+                self.queue.clear()
+            self._mu.notify_all()
+        if not wait:
+            for fut in dropped:
+                if fut is not None:
+                    fut.cancel()
+        elif not already:
+            drained = self.drain(timeout)
+        self._dispatcher.join(timeout=5.0)
+        self._pool.shutdown(wait=wait and drained)
+
+    def __enter__(self) -> "ServingFrontend":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.shutdown(wait=exc_type is None)
+
+    # ------------------------------------------------------------ reporting
+    @property
+    def makespan_s(self) -> float:
+        """First arrival → last completion, in wall seconds."""
+        if self.first_arrival_s is None:
+            return 0.0
+        return max(self.last_done_s - self.first_arrival_s, 0.0)
+
+    @property
+    def served_qps(self) -> float:
+        """Served requests per wall second of makespan."""
+        return self._served / self.makespan_s if self.makespan_s > 0 else 0.0
+
+    def summary(self) -> dict:
+        """Admission/latency digest (`ServeStats.summary` keys — ms/counts)
+        plus the front-end's wall-clock view: ``served`` requests,
+        ``makespan_s`` (seconds), ``served_qps`` (requests per wall
+        second), and the in-flight bound."""
+        return {
+            **self.stats.summary(),
+            "served": self._served,
+            "makespan_s": self.makespan_s,
+            "served_qps": self.served_qps,
+            "max_inflight": self.max_inflight,
+        }

@@ -26,18 +26,24 @@ when the scheduler is handed a server) or
 :class:`repro.serve.fleet.ReplicaFleet` (N replicas behind the same
 admission queue, load-aware routing + cross-replica hedging).
 
-Time model: the scheduler runs on a *virtual clock* driven by request
-arrival timestamps — the standard single-process simulation methodology
-used by the benchmarks (see ``benchmarks/common.py``). Batch service time
-is the measured ``search_batch`` wall by default, or an injected
-``service_time_fn`` (tests use this to force deterministic backlog). The
-queue/deadline/shed logic is exactly what a multi-host front-end would
-run on real clocks.
+Time model: the clock is factored behind :class:`repro.serve.clock.Clock`.
+``ServingScheduler`` itself always runs the **virtual-clock replay**
+(:class:`~repro.serve.clock.VirtualClock` driven by request arrival
+timestamps) — the standard single-process simulation methodology used by
+the benchmarks (see ``benchmarks/common.py``) and the repo's
+deterministic test oracle (``tests/test_virtual_clock_goldens.py`` pins
+its counters bit-for-bit). Batch service time is the measured
+``search_batch`` wall by default, or an injected ``service_time_fn``
+(tests use this to force deterministic backlog). The *same*
+queue/deadline/shed logic runs against the wall clock in
+:class:`repro.serve.frontend.ServingFrontend`, which dispatches formed
+batches to a thread pool so fleet replicas overlap in real time.
 """
 
 from __future__ import annotations
 
 import math
+import threading
 import time
 from collections import deque
 from dataclasses import dataclass
@@ -51,11 +57,24 @@ from repro.core.router import (
     workload_concentration,
 )
 from repro.runtime.straggler import HedgingExecutor
+from repro.serve.clock import Clock, VirtualClock
 
 
 @dataclass(frozen=True)
 class SchedulerConfig:
-    """Knobs of the admission-controlled batch former."""
+    """Knobs of the admission-controlled batch former.
+
+    Shared by the virtual-clock :class:`ServingScheduler` and the
+    real-clock :class:`repro.serve.frontend.ServingFrontend` — the same
+    config replayed virtually is the test oracle for a live run.
+
+    All durations are **seconds**.
+
+    >>> cfg = SchedulerConfig(max_batch=16, max_wait_s=2e-3,
+    ...                       queue_capacity=64)
+    >>> cfg.max_batch, cfg.queue_capacity
+    (16, 64)
+    """
 
     max_batch: int = 0              # size trigger; 0 → server cfg.query_block
     max_wait_s: float = 2e-3        # deadline trigger for the oldest request
@@ -71,6 +90,8 @@ class SchedulerConfig:
 
 @dataclass
 class Request:
+    """One admitted query with its arrival timestamp (seconds)."""
+
     req_id: int
     query: np.ndarray               # [D]
     arrival_s: float
@@ -78,6 +99,11 @@ class Request:
 
 @dataclass
 class RequestResult:
+    """Per-request outcome: top-K ids/scores plus the three timeline
+    points (all seconds on the scheduler's clock): ``arrival_s`` →
+    ``dispatch_s`` (batch formed and handed to the target) → ``done_s``
+    (batch completed)."""
+
     req_id: int
     ids: np.ndarray                 # [K]
     scores: np.ndarray              # [K]
@@ -98,7 +124,7 @@ class RequestResult:
 class DispatchTarget:
     """Execution side of the scheduler: where formed batches go.
 
-    The scheduler owns admission, batch formation, and the virtual clock;
+    The scheduler owns admission, batch formation, and the clock;
     a target owns *running* the batch (which engine, which replica, which
     hedge policy) and reports the completion time back. Implementations:
     :class:`SingleServerTarget` here and
@@ -129,6 +155,21 @@ class DispatchTarget:
         ``done_s`` is the completion time on the virtual clock."""
         raise NotImplementedError
 
+    def execute_wall(
+        self, queries: np.ndarray, k: int, batch_id: int, clock: Clock
+    ):
+        """Real-clock batch execution for the live front-end: run the
+        batch NOW and return ``(result, done_s)`` with ``done_s`` read
+        from ``clock`` at completion.
+
+        Default: delegate to :meth:`execute` with the current wall time
+        as the dispatch stamp and re-stamp completion from the clock —
+        correct for stub/virtual targets whose ``execute`` is synchronous;
+        real targets override for thread-safe accounting and wall-enforced
+        service models."""
+        res, _ = self.execute(queries, k, clock.now(), batch_id)
+        return res, clock.now()
+
     # --- skew-adaptation surface -----------------------------------------
     def window_probes(self) -> Iterable[np.ndarray]:
         """Probe arrays of recently executed batches, newest first."""
@@ -153,6 +194,13 @@ class DispatchTarget:
     def default_k(self) -> int:
         raise NotImplementedError
 
+    @property
+    def parallelism(self) -> int:
+        """Batches the target can genuinely overlap on a real clock (the
+        live front-end's default in-flight bound). 1 for a single
+        server; the fleet reports its live replica count."""
+        return 1
+
 
 class SingleServerTarget(DispatchTarget):
     """One ``HarmonyServer`` behind the queue — the pre-fleet behaviour.
@@ -161,7 +209,10 @@ class SingleServerTarget(DispatchTarget):
     primary rotates over live nodes, and a hedge re-runs the batch on the
     next live node (every node executes the same search primitive, so the
     hedge target's answer is the primary's answer — HARMONY's replica
-    layout recomputes visits).
+    layout recomputes visits). The hedge latency model is simulated, so
+    it is charged to the virtual clock only; on the real clock
+    (``execute_wall``) batches simply run back-to-back and cross-replica
+    hedging belongs to the fleet.
     """
 
     def __init__(
@@ -177,6 +228,7 @@ class SingleServerTarget(DispatchTarget):
         self.busy_until = 0.0
         self._backend = ""
         self._hedge: Optional[HedgingExecutor] = None
+        self._wall_mu = threading.Lock()    # serializes wall execution
 
     def configure(self, cfg: SchedulerConfig, k: int) -> None:
         self._backend = cfg.backend
@@ -232,9 +284,32 @@ class SingleServerTarget(DispatchTarget):
         self.busy_until = dispatch_s + service_s
         return res, self.busy_until
 
+    def execute_wall(self, queries, k, batch_id, clock: Clock):
+        """Wall-clock execution: one batch at a time on the server (the
+        lock keeps ``ServeStats`` counters exact when the front-end is
+        configured with in-flight > 1). With an injected
+        ``service_time_fn`` the wall is padded by sleeping the shortfall —
+        the real-clock analogue of the virtual service model (models a
+        remote replica whose service time exceeds local compute)."""
+        with self._wall_mu:
+            t0 = clock.now()
+            res = self.server.search_batch(
+                queries, k, backend=self._backend or None
+            )
+            if self.service_time_fn is not None:
+                clock.sleep(
+                    self.service_time_fn(queries.shape[0])
+                    - (clock.now() - t0)
+                )
+            done_s = clock.now()
+            self.busy_until = done_s
+        return res, done_s
+
     # --- skew-adaptation surface -----------------------------------------
     def window_probes(self):
-        return reversed(self.server._recent_probes)
+        # snapshot (newest first): with in-flight > 1 on the wall clock a
+        # concurrent search_batch may append while the skew check iterates
+        return list(self.server._recent_probes)[::-1]
 
     def refresh_plan(self):
         self.server.refresh_plan()
@@ -256,8 +331,105 @@ class SingleServerTarget(DispatchTarget):
         return self.server.cfg.topk
 
 
+class SkewMonitor:
+    """Hot-mass drift detector behind the scheduler's skew adaptation.
+
+    Tracks the workload concentration the current plan was built for and
+    asks the target to re-plan when the live window drifts past
+    ``cfg.replan_drift``. Factored out of ``ServingScheduler`` so the
+    real-clock front-end reuses the identical trigger logic (pure code
+    motion — the virtual-clock goldens pin its behaviour).
+    """
+
+    def __init__(self, cfg: SchedulerConfig, target: DispatchTarget):
+        self.cfg = cfg
+        self.target = target
+        self.batches_since_replan = 0
+        # skew baseline: hot-mass of the workload the current plan was
+        # built for (set lazily; re-synced after ANY re-plan, including
+        # fail_node / replan_every ones done behind the scheduler's back)
+        self._plan_hot: Optional[float] = None
+        self._seen_replans = target.replans
+
+    def _window_hot_mass(self) -> Optional[float]:
+        # walk the probe history from the newest batch back, taking only
+        # enough arrays to cover the window (not the whole history)
+        take, rows = [], 0
+        for p in self.target.window_probes():
+            take.append(p)
+            rows += p.shape[0]
+            if rows >= self.cfg.skew_window:
+                break
+        if not take:
+            return None
+        window = np.concatenate(take[::-1], axis=0)[-self.cfg.skew_window:]
+        hits = estimate_cluster_hits(window, self.target.nlist)
+        return workload_concentration(hits, self.cfg.hot_fraction)
+
+    def after_batch(self) -> bool:
+        """Account one dispatched batch; re-plan (and return True) if the
+        live window's hot-mass drifted past the threshold."""
+        self.batches_since_replan += 1
+        if self.cfg.replan_drift <= 0:
+            return False
+        if self.target.replans != self._seen_replans:
+            # the plan was rebuilt elsewhere (fail_node, replan_every):
+            # re-baseline on the window that plan saw
+            self._seen_replans = self.target.replans
+            self._plan_hot = self._window_hot_mass()
+            self.batches_since_replan = 0
+            return False
+        if self._plan_hot is None:
+            # the initial plan was built from a uniform workload prior
+            self._plan_hot = workload_concentration(
+                np.ones(self.target.nlist), self.cfg.hot_fraction
+            )
+        if self.batches_since_replan < self.cfg.min_batches_between_replans:
+            return False
+        hot = self._window_hot_mass()
+        if hot is None:
+            return False
+        if abs(hot - self._plan_hot) > self.cfg.replan_drift:
+            self.target.refresh_plan()
+            self.target.stats.skew_replans += 1
+            self._plan_hot = hot
+            self._seen_replans = self.target.replans
+            self.batches_since_replan = 0
+            return True
+        return False
+
+
+def next_fire(
+    queue: "Deque[Request]",
+    cfg: SchedulerConfig,
+    max_batch: int,
+    target_free_s: float,
+) -> Tuple[float, str]:
+    """Batch-forming policy: the earliest time the queued requests can
+    dispatch, and why (``"full"`` size trigger, ``"deadline"`` oldest-wait
+    trigger, or ``"capacity"`` bounded-queue early fire). Shared verbatim
+    by the virtual-clock scheduler and the real-clock front-end."""
+    if len(queue) >= max_batch:
+        ready = queue[max_batch - 1].arrival_s
+        trigger = "full"
+    else:
+        ready = queue[0].arrival_s + cfg.max_wait_s
+        trigger = "deadline"
+        if (cfg.queue_capacity
+                and len(queue) >= cfg.queue_capacity
+                and queue[-1].arrival_s < ready):
+            # queue at its bound with the size trigger unreachable:
+            # fire as soon as the target frees up instead of shedding
+            # behind an idle server until the deadline
+            ready = queue[-1].arrival_s
+            trigger = "capacity"
+    return max(ready, target_free_s), trigger
+
+
 class ServingScheduler:
-    """Admission-controlled adaptive batcher over a dispatch target.
+    """Admission-controlled adaptive batcher over a dispatch target
+    (virtual-clock replay — the deterministic harness; for live traffic
+    use :class:`repro.serve.frontend.ServingFrontend`).
 
     The first argument is either a ``HarmonyServer`` (wrapped in a
     :class:`SingleServerTarget`) or any :class:`DispatchTarget` — in
@@ -269,6 +441,23 @@ class ServingScheduler:
     is invoked after every dispatched batch — tests use it to kill nodes
     or replicas mid-stream (the elastic invariant extends to scheduled
     serving).
+
+    >>> import numpy as np
+    >>> from repro.config import HarmonyConfig
+    >>> from repro.core import build_ivf
+    >>> from repro.serve import HarmonyServer
+    >>> rng = np.random.default_rng(0)
+    >>> x = rng.standard_normal((256, 8)).astype(np.float32)
+    >>> cfg = HarmonyConfig(dim=8, nlist=4, nprobe=2, topk=3,
+    ...                     kmeans_iters=2)
+    >>> srv = HarmonyServer(build_ivf(x, cfg), n_nodes=2)
+    >>> sched = ServingScheduler(srv, SchedulerConfig(max_batch=8), k=3)
+    >>> trace = [(i * 1e-4, x[i]) for i in range(16)]   # replayed arrivals
+    >>> results = sched.run_trace(trace)
+    >>> len(results), results[0].ids.shape
+    (16, (3,))
+    >>> srv.stats.full_batches        # 16 requests → two size-8 batches
+    2
     """
 
     def __init__(
@@ -279,6 +468,7 @@ class ServingScheduler:
         service_time_fn: Optional[Callable[[int], float]] = None,
         latency_fn: Optional[Callable[[int, object], float]] = None,
         on_batch: Optional[Callable[[int, "ServingScheduler"], None]] = None,
+        clock: Optional[VirtualClock] = None,
     ):
         self.cfg = cfg or SchedulerConfig()
         if isinstance(server, DispatchTarget):
@@ -295,6 +485,7 @@ class ServingScheduler:
         # back-compat alias: the single server, or the target itself
         self.server = getattr(self.target, "server", self.target)
         self.stats = self.target.stats
+        self.clock = clock or VirtualClock()
         self.k = k or self.target.default_k
         self.max_batch = self.cfg.max_batch or self.target.default_max_batch
         assert self.max_batch >= 1
@@ -305,13 +496,8 @@ class ServingScheduler:
         self.first_arrival_s: Optional[float] = None
         self._next_id = 0
         self._batch_id = 0
-        self._batches_since_replan = 0
-        # skew baseline: hot-mass of the workload the current plan was
-        # built for (set lazily; re-synced after ANY re-plan, including
-        # fail_node / replan_every ones done behind the scheduler's back)
-        self._plan_hot: Optional[float] = None
         self.target.configure(self.cfg, self.k)
-        self._seen_replans = self.target.replans
+        self._skew = SkewMonitor(self.cfg, self.target)
 
     @property
     def _hedge(self) -> Optional[HedgingExecutor]:
@@ -319,13 +505,16 @@ class ServingScheduler:
         return getattr(self.target, "_hedge", None)
 
     # ---------------------------------------------------------------- admit
-    def submit(self, query: np.ndarray, arrival_s: float) -> int:
-        """Offer one request. Returns its req_id, or -1 if shed by
+    def submit(self, query: np.ndarray, arrival_s: Optional[float] = None) -> int:
+        """Offer one request at virtual time ``arrival_s`` (default: the
+        clock's current time). Returns its req_id, or -1 if shed by
         backpressure. Fires any batches due before ``arrival_s`` first.
 
         req_ids are consumed by shed requests too, so a served request's
         req_id is always its submission (trace) position — results map
         back to the trace even after shedding."""
+        if arrival_s is None:
+            arrival_s = self.clock.now()
         self.advance(arrival_s)
         stats = self.stats
         stats.offered += 1
@@ -343,24 +532,14 @@ class ServingScheduler:
     # ------------------------------------------------------------ batch form
     def _next_fire(self) -> Tuple[float, str]:
         """(virtual time at which the next batch can dispatch, trigger)."""
-        if len(self.queue) >= self.max_batch:
-            ready = self.queue[self.max_batch - 1].arrival_s
-            trigger = "full"
-        else:
-            ready = self.queue[0].arrival_s + self.cfg.max_wait_s
-            trigger = "deadline"
-            if (self.cfg.queue_capacity
-                    and len(self.queue) >= self.cfg.queue_capacity
-                    and self.queue[-1].arrival_s < ready):
-                # queue at its bound with the size trigger unreachable:
-                # fire as soon as the target frees up instead of shedding
-                # behind an idle server until the deadline
-                ready = self.queue[-1].arrival_s
-                trigger = "capacity"
-        return max(ready, self.target.next_free_s()), trigger
+        return next_fire(
+            self.queue, self.cfg, self.max_batch, self.target.next_free_s()
+        )
 
     def advance(self, now: float):
-        """Fire every batch whose dispatch time is ≤ ``now``."""
+        """Move the virtual clock to ``now``, firing every batch whose
+        dispatch time is ≤ ``now``."""
+        self.clock.advance_to(now)
         while self.queue:
             dispatch_s, trigger = self._next_fire()
             if dispatch_s > now:
@@ -406,53 +585,9 @@ class ServingScheduler:
                 )
             )
         self._batch_id += 1
-        self._batches_since_replan += 1
-        self._maybe_replan_on_skew()
+        self._skew.after_batch()
         if self.on_batch is not None:
             self.on_batch(self._batch_id - 1, self)
-
-    # ------------------------------------------------------- skew adaptation
-    def _window_hot_mass(self) -> Optional[float]:
-        # walk the probe history from the newest batch back, taking only
-        # enough arrays to cover the window (not the whole history)
-        take, rows = [], 0
-        for p in self.target.window_probes():
-            take.append(p)
-            rows += p.shape[0]
-            if rows >= self.cfg.skew_window:
-                break
-        if not take:
-            return None
-        window = np.concatenate(take[::-1], axis=0)[-self.cfg.skew_window:]
-        hits = estimate_cluster_hits(window, self.target.nlist)
-        return workload_concentration(hits, self.cfg.hot_fraction)
-
-    def _maybe_replan_on_skew(self):
-        if self.cfg.replan_drift <= 0:
-            return
-        if self.target.replans != self._seen_replans:
-            # the plan was rebuilt elsewhere (fail_node, replan_every):
-            # re-baseline on the window that plan saw
-            self._seen_replans = self.target.replans
-            self._plan_hot = self._window_hot_mass()
-            self._batches_since_replan = 0
-            return
-        if self._plan_hot is None:
-            # the initial plan was built from a uniform workload prior
-            self._plan_hot = workload_concentration(
-                np.ones(self.target.nlist), self.cfg.hot_fraction
-            )
-        if self._batches_since_replan < self.cfg.min_batches_between_replans:
-            return
-        hot = self._window_hot_mass()
-        if hot is None:
-            return
-        if abs(hot - self._plan_hot) > self.cfg.replan_drift:
-            self.target.refresh_plan()
-            self.stats.skew_replans += 1
-            self._plan_hot = hot
-            self._seen_replans = self.target.replans
-            self._batches_since_replan = 0
 
     # ---------------------------------------------------------------- replay
     def run_trace(
@@ -475,4 +610,5 @@ class ServingScheduler:
 
     @property
     def served_qps(self) -> float:
+        """Served requests per second of makespan (virtual wall)."""
         return len(self.done) / self.makespan_s if self.makespan_s > 0 else 0.0

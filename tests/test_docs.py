@@ -1,0 +1,52 @@
+"""Fast docs checks in tier-1: required docs exist, every intra-repo
+markdown link resolves, and the README quickstart block parses.
+
+(Actually *executing* the quickstart lives in the CI docs job via
+``tools/check_docs.py --quickstart`` — too slow for tier-1.)"""
+
+import ast
+import importlib.util
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _check_docs():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", REPO / "tools" / "check_docs.py"
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_required_docs_exist():
+    for rel in ("README.md", "docs/ARCHITECTURE.md", "benchmarks/README.md",
+                "ROADMAP.md", "CHANGES.md"):
+        assert (REPO / rel).is_file(), f"missing {rel}"
+
+
+def test_intra_repo_markdown_links_resolve():
+    broken = _check_docs().check_links()
+    assert not broken, f"broken markdown links: {broken}"
+
+
+def test_readme_quickstart_parses():
+    """The first fenced python block must at least be valid Python (CI
+    executes it for real)."""
+    cd = _check_docs()
+    snippet = cd.extract_quickstart(REPO / "README.md")
+    ast.parse(snippet)
+    assert "build_ivf" in snippet      # it really is the quickstart
+
+
+def test_architecture_doc_names_real_modules():
+    """Every `src/...` path ARCHITECTURE.md mentions must exist — the
+    paper→module map can't drift from the tree."""
+    text = (REPO / "docs" / "ARCHITECTURE.md").read_text()
+    import re
+
+    for path in set(re.findall(r"`(src/[\w/]+\.py)`", text)):
+        assert (REPO / path).is_file(), f"ARCHITECTURE.md names missing {path}"
+    for path in set(re.findall(r"`(src/[\w/]+/)`", text)):
+        assert (REPO / path).is_dir(), f"ARCHITECTURE.md names missing {path}"

@@ -1,0 +1,336 @@
+"""Real-clock front-end tests: live submit/drain/shutdown, deadline
+shedding under a slow target, wall-clock trigger accounting, asyncio
+submission, fleet overlap + EWMA thread-safety under concurrent dispatch,
+and wall-clock cross-replica hedging.
+
+Kept fast with stub targets wherever real search isn't the point; the
+timing assertions are deliberately loose (they check *overlap happened*,
+not exact walls) so the suite stays robust on loaded CI boxes."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.config import HarmonyConfig
+from repro.core import build_ivf, search_oracle
+from repro.data import make_dataset, make_queries
+from repro.serve import (
+    DispatchTarget,
+    HarmonyServer,
+    MonotonicClock,
+    ReplicaFleet,
+    SchedulerConfig,
+    ServeStats,
+    ServingFrontend,
+    ShedError,
+    VirtualClock,
+)
+
+
+class StubResult:
+    def __init__(self, n, k):
+        self.ids = np.tile(np.arange(k, dtype=np.int64), (n, 1))
+        self.scores = np.zeros((n, k), np.float32)
+
+
+class StubTarget(DispatchTarget):
+    """Executes instantly (or after a fixed wall sleep) — isolates the
+    front-end's queue/trigger/lifecycle logic from real search."""
+
+    def __init__(self, service_s: float = 0.0, parallel: int = 1):
+        self.stats = ServeStats()
+        self.service_s = service_s
+        self._parallel = parallel
+        self.executed = []              # (batch_id, n) in completion order
+
+    def configure(self, cfg, k):
+        pass
+
+    def next_free_s(self):
+        return 0.0
+
+    def execute(self, queries, k, dispatch_s, batch_id):
+        if self.service_s:
+            time.sleep(self.service_s)
+        self.executed.append((batch_id, queries.shape[0]))
+        return StubResult(queries.shape[0], k), dispatch_s + self.service_s
+
+    @property
+    def default_max_batch(self):
+        return 8
+
+    @property
+    def default_k(self):
+        return 5
+
+    @property
+    def replans(self):
+        return 0
+
+    @property
+    def nlist(self):
+        return 4
+
+    @property
+    def parallelism(self):
+        return self._parallel
+
+
+@pytest.fixture(scope="module")
+def anns():
+    ds = make_dataset(nb=2000, dim=16, n_components=6, spread=0.6, seed=0)
+    cfg = HarmonyConfig(dim=16, nlist=16, nprobe=4, topk=5, kmeans_iters=3)
+    index = build_ivf(ds.x, cfg)
+    q = make_queries(ds, nq=64, skew=0.3, noise=0.2, seed=1)
+    return ds, cfg, index, q
+
+
+@pytest.fixture(scope="module")
+def mini_anns():
+    """Tiny corpus for wall-timing tests: real search compute must be
+    negligible next to the injected wall service models, or GIL-serialized
+    compute across 'replica' threads swamps the timing assertions."""
+    ds = make_dataset(nb=512, dim=8, n_components=4, spread=0.6, seed=0)
+    cfg = HarmonyConfig(dim=8, nlist=8, nprobe=2, topk=5, kmeans_iters=2)
+    index = build_ivf(ds.x, cfg)
+    q = make_queries(ds, nq=64, skew=0.3, noise=0.2, seed=1)
+    return ds, cfg, index, q
+
+
+# -------------------------------------------------- lifecycle smoke
+
+
+def test_submit_drain_shutdown_smoke():
+    """Live submissions resolve, counters add up, shutdown is graceful
+    and idempotent, and post-shutdown submits are refused."""
+    target = StubTarget()
+    fe = ServingFrontend(target, SchedulerConfig(max_batch=4, max_wait_s=1e-3))
+    futs = fe.submit_many(np.zeros((10, 8), np.float32))
+    assert fe.drain(timeout=10.0)
+    results = [f.result(timeout=10) for f in futs]
+    assert [r.req_id for r in results] == list(range(10))
+    assert all(r.ids.shape == (5,) for r in results)
+    assert fe.stats.offered == fe.stats.admitted == 10
+    assert fe.stats.shed == 0
+    assert sum(n for _, n in target.executed) == 10
+    s = fe.summary()
+    assert s["served"] == 10 and s["served_qps"] > 0
+    assert s["full_batches"] + s["deadline_batches"] + s["capacity_batches"] \
+        == len(target.executed)
+    fe.shutdown()
+    fe.shutdown()                       # idempotent
+    with pytest.raises(RuntimeError):
+        fe.submit(np.zeros(8, np.float32))
+
+
+def test_request_timeline_is_wall_ordered():
+    """arrival ≤ dispatch ≤ done on the monotonic clock, and queue
+    wait/latency accounting matches the future timeline."""
+    target = StubTarget(service_s=0.01)
+    with ServingFrontend(
+        target, SchedulerConfig(max_batch=4, max_wait_s=1e-3)
+    ) as fe:
+        futs = fe.submit_many(np.zeros((8, 8), np.float32))
+        results = [f.result(timeout=10) for f in futs]
+    for r in results:
+        assert r.arrival_s <= r.dispatch_s <= r.done_s
+        assert r.latency_s >= 0.01 - 1e-4       # the stub's service sleep
+    assert len(fe.stats.request_latency_ms) == 8
+
+
+def test_deadline_trigger_fires_small_batches():
+    """Arrivals slower than max_wait_s must fire deadline batches on the
+    wall clock (the size trigger is never reached)."""
+    target = StubTarget()
+    with ServingFrontend(
+        target, SchedulerConfig(max_batch=64, max_wait_s=5e-3)
+    ) as fe:
+        for i in range(4):
+            fe.submit(np.zeros(8, np.float32)).result(timeout=10)
+    assert fe.stats.deadline_batches == 4
+    assert fe.stats.full_batches == 0
+
+
+# -------------------------------------------------- backpressure / shedding
+
+
+def test_slow_target_sheds_by_backpressure():
+    """A burst into a tiny bounded queue behind a slow target sheds: shed
+    futures fail with ShedError, counters add up, admitted all serve."""
+    target = StubTarget(service_s=0.2)
+    with ServingFrontend(
+        target,
+        SchedulerConfig(max_batch=4, queue_capacity=4, max_wait_s=1e-3),
+    ) as fe:
+        futs = fe.submit_many(np.zeros((32, 8), np.float32))
+        fe.drain(timeout=30.0)
+        shed = [f for f in futs if isinstance(f.exception(timeout=10),
+                                              ShedError)]
+        served = [f for f in futs if f.exception(timeout=10) is None]
+    assert fe.stats.offered == 32
+    assert fe.stats.shed == len(shed) > 0
+    assert fe.stats.admitted == len(served) == 32 - len(shed)
+    assert all(f.result().ids.shape == (5,) for f in served)
+
+
+# -------------------------------------------------- asyncio surface
+
+
+def test_asubmit_asyncio_roundtrip():
+    import asyncio
+
+    target = StubTarget()
+
+    async def drive(fe):
+        results = await asyncio.gather(
+            *(fe.asubmit(np.zeros(8, np.float32)) for _ in range(6))
+        )
+        return results
+
+    with ServingFrontend(
+        target, SchedulerConfig(max_batch=4, max_wait_s=1e-3)
+    ) as fe:
+        results = asyncio.run(drive(fe))
+    assert sorted(r.req_id for r in results) == list(range(6))
+
+
+# -------------------------------------------------- fleet: overlap + safety
+
+
+def test_fleet_overlaps_replica_execution_on_wall_clock(mini_anns):
+    """4 replicas with an 8ms/query wall service model must serve a
+    saturating burst with real overlap: wall makespan well below the
+    serial sum of service times (the whole point of the real-clock
+    front-end), and every result stays exact."""
+    ds, cfg, index, q = mini_anns
+    # service model well above the mini corpus's real per-batch compute,
+    # so the sleeps (which overlap on any core count) dominate the wall
+    # and the assertion isn't at the mercy of CI compute contention
+    per_q = 8e-3
+    # least_loaded (not p2c) so the spread is deterministic given the
+    # in-flight reservations — the test measures overlap machinery, not
+    # p2c's sampling variance
+    fleet = ReplicaFleet(index, replicas=4, cfg=cfg, routing="least_loaded",
+                         service_time_fn=lambda r, n: n * per_q, seed=0)
+    with ServingFrontend(
+        fleet, SchedulerConfig(max_batch=8, max_wait_s=1e-3), k=5
+    ) as fe:
+        assert fe.max_inflight == 4     # target.parallelism default
+        futs = fe.submit_many(q)
+        results = [f.result(timeout=60) for f in futs]
+    serial_s = len(q) * per_q           # one replica, back to back
+    assert fe.makespan_s < 0.6 * serial_s, (
+        f"no overlap: makespan {fe.makespan_s:.3f}s vs serial "
+        f"{serial_s:.3f}s"
+    )
+    assert sum(r.batches for r in fleet.replicas) == len(q) // 8
+    assert sum(1 for r in fleet.replicas if r.batches > 0) >= 2
+    oracle = search_oracle(index, q, k=5)
+    got = np.stack(
+        [r.scores for r in sorted(results, key=lambda r: r.req_id)]
+    )
+    np.testing.assert_allclose(got, oracle.scores, rtol=1e-3, atol=1e-3)
+
+
+def test_fleet_ewma_accounting_safe_under_concurrent_dispatch(anns):
+    """Hammer the fleet's shared accounting from many threads directly:
+    counters must come out exact (no lost increments) and both EWMAs
+    converge to the injected service model."""
+    ds, cfg, index, q = anns
+    fleet = ReplicaFleet(index, replicas=4, cfg=cfg, seed=0)
+    per_q = 1e-3
+    n_threads, per_thread, n_q = 8, 50, 4
+
+    def hammer(tid):
+        rep = fleet.replicas[tid % 4]
+        for _ in range(per_thread):
+            fleet._record_service(rep, n_q, n_q * per_q,
+                                  done_s=fleet._last_done_s + n_q * per_q)
+
+    threads = [threading.Thread(target=hammer, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    total = n_threads * per_thread
+    assert sum(r.batches for r in fleet.replicas) == total
+    assert sum(r.queries for r in fleet.replicas) == total * n_q
+    for rep in fleet.replicas:
+        assert rep.batches == (n_threads // 4) * per_thread
+        assert rep.ewma_per_q_s == pytest.approx(per_q)
+        assert rep.busy_s == pytest.approx(rep.batches * n_q * per_q)
+    assert fleet._fleet_ewma_norm_per_q == pytest.approx(per_q)
+
+
+def test_fleet_wall_hedge_fires_and_preserves_results(mini_anns):
+    """A replica whose wall service model straggles past the hedge
+    deadline gets hedged for real: the batch re-runs on another replica,
+    the first finisher wins, and results stay exact."""
+    ds, cfg, index, q = mini_anns
+    # replica 0's wall service model straggles 0.4s; the 50ms hedge
+    # deadline sits well above the fast replicas' contended real compute
+    # (so only genuine stragglers hedge) and well below the straggle (so
+    # the hedge target always finishes first)
+    fleet = ReplicaFleet(
+        index, replicas=3, cfg=cfg, routing="least_loaded",
+        service_time_fn=lambda r, n: 0.4 if r == 0 else 1e-3, seed=0,
+    )
+    with ServingFrontend(
+        fleet,
+        SchedulerConfig(max_batch=8, max_wait_s=1e-3, hedge_deadline_s=0.05),
+        k=5,
+    ) as fe:
+        futs = fe.submit_many(q[:32])
+        results = [f.result(timeout=60) for f in futs]
+    hs = fleet._hedge.stats
+    assert hs.hedged >= 1
+    assert hs.hedge_wins >= 1           # the 1ms replicas beat the 250ms one
+    assert fleet.stats.hedged_batches == hs.hedged
+    oracle = search_oracle(index, q[:32], k=5)
+    got = np.stack(
+        [r.scores for r in sorted(results, key=lambda r: r.req_id)]
+    )
+    np.testing.assert_allclose(got, oracle.scores, rtol=1e-3, atol=1e-3)
+
+
+# -------------------------------------------------- single real server
+
+
+def test_single_server_frontend_matches_oracle(anns):
+    """The front-end over one real HarmonyServer returns oracle-exact
+    results for live submissions."""
+    ds, cfg, index, q = anns
+    srv = HarmonyServer(index, n_nodes=4)
+    with ServingFrontend(
+        srv, SchedulerConfig(max_batch=16, max_wait_s=1e-3), k=5
+    ) as fe:
+        futs = fe.submit_many(q)
+        results = [f.result(timeout=60) for f in futs]
+    assert fe.stats.admitted == len(q)
+    oracle = search_oracle(index, q, k=5)
+    got = np.stack(
+        [r.scores for r in sorted(results, key=lambda r: r.req_id)]
+    )
+    np.testing.assert_allclose(got, oracle.scores, rtol=1e-3, atol=1e-3)
+
+
+# -------------------------------------------------- clock unit behaviour
+
+
+def test_clocks():
+    v = VirtualClock()
+    assert v.now() == 0.0
+    v.advance_to(2.0)
+    v.advance_to(1.0)                   # never backwards
+    assert v.now() == 2.0
+    v.sleep(10.0)                       # no-op: virtual time is trace-driven
+    assert v.now() == 2.0
+    m = MonotonicClock()
+    t0 = m.now()
+    m.sleep(0.005)
+    assert m.now() - t0 >= 0.004
+    m.advance_to(1e9)                   # no-op on a wall clock
+    assert m.now() < 1e6

@@ -1,0 +1,223 @@
+"""Golden regression: virtual-clock replay stats must be bit-identical
+across serving-stack refactors.
+
+The scheduler's virtual-clock replay is the repo's test oracle for the
+queue/deadline/shed logic — PR 4 factors the clock out of
+``ServingScheduler`` (``Clock`` protocol, real-clock ``ServingFrontend``)
+and these goldens pin the replay behaviour across that refactor: every
+admission counter, trigger counter, queue-wait/latency percentile,
+makespan, hedge counter, and per-replica placement below was captured
+from the pre-refactor scheduler and must not move.
+
+All scenarios inject deterministic service/latency models and fixed
+seeds, so the numbers depend only on the trace — any drift is a real
+behaviour change, not noise.
+
+Regenerate (only when a behaviour change is *intended* and reviewed):
+
+    PYTHONPATH=src python tests/test_virtual_clock_goldens.py --regen
+"""
+
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.config import HarmonyConfig
+from repro.core import build_ivf
+from repro.data import make_dataset, make_queries
+from repro.serve import (
+    ReplicaFleet,
+    ReplicaSpec,
+    SchedulerConfig,
+    ServingScheduler,
+)
+
+GOLDEN_PATH = Path(__file__).parent / "goldens" / "serving_virtual_clock.json"
+
+
+def _fixture():
+    ds = make_dataset(nb=2000, dim=16, n_components=6, spread=0.6, seed=0)
+    cfg = HarmonyConfig(dim=16, nlist=16, nprobe=4, topk=5, kmeans_iters=3)
+    index = build_ivf(ds.x, cfg)
+    q = make_queries(ds, nq=96, skew=0.3, noise=0.2, seed=1)
+    qh = make_queries(ds, nq=64, skew=0.95, hot_fraction=0.06, noise=0.1,
+                      seed=3)
+    return ds, cfg, index, q, qh
+
+
+def _burst(q, spacing=1e-5, t0=0.0):
+    return [(t0 + i * spacing, q[i]) for i in range(len(q))]
+
+
+def _digest(sched, target) -> dict:
+    """Every counter the replay oracle guarantees, JSON-normalized.
+
+    Floats are rounded to 9 decimals purely for stable JSON round-trips;
+    the comparison below is exact equality on the rounded values."""
+    stats = target.stats
+    out = {
+        "served": len(sched.done),
+        "req_ids_sum": int(sum(r.req_id for r in sched.done)),
+        "batch_ids": [r.batch_id for r in sorted(sched.done,
+                                                 key=lambda r: r.req_id)],
+        "makespan_s": round(sched.makespan_s, 9),
+        "queue_wait_sum_ms": round(float(np.sum(stats.queue_wait_ms)), 9),
+        "latency_sum_ms": round(float(np.sum(stats.request_latency_ms)), 9),
+        "summary": {
+            k: (round(v, 9) if isinstance(v, float) else v)
+            for k, v in stats.summary().items()
+            if k not in ("batches", "queries")  # execution-side counters
+        },
+    }
+    hedge = getattr(target, "_hedge", None) or getattr(
+        sched, "_hedge", None
+    )
+    if hedge is not None:
+        hs = hedge.stats
+        out["hedge"] = {
+            "dispatched": hs.dispatched, "hedged": hs.hedged,
+            "wasted": hs.wasted, "hedge_wins": hs.hedge_wins,
+        }
+    if isinstance(target, ReplicaFleet):
+        out["per_replica_batches"] = [r.batches for r in target.replicas]
+        out["per_replica_queries"] = [r.queries for r in target.replicas]
+        out["per_replica_busy_s"] = [round(r.busy_s, 9)
+                                     for r in target.replicas]
+        out["gini"] = round(target.load_balance_gini, 9)
+    return out
+
+
+def _scenarios():
+    """name -> digest for every deterministic virtual-clock scenario."""
+    ds, cfg, index, q, qh = _fixture()
+    out = {}
+
+    # -- single server: size-trigger batches on a same-instant burst
+    from repro.serve import HarmonyServer
+
+    srv = HarmonyServer(index, n_nodes=4)
+    sched = ServingScheduler(
+        srv, SchedulerConfig(max_batch=16), k=5,
+        service_time_fn=lambda n: n * 1e-3,
+    )
+    sched.run_trace(_burst(q, spacing=0.0))
+    out["single_full"] = _digest(sched, sched.target)
+
+    # -- single server: deadline-trigger batches under slow arrivals
+    srv = HarmonyServer(index, n_nodes=4)
+    sched = ServingScheduler(
+        srv, SchedulerConfig(max_batch=32, max_wait_s=2e-3), k=5,
+        service_time_fn=lambda n: 0.0,
+    )
+    sched.run_trace([(0.01 * i, q[i]) for i in range(16)])
+    out["single_deadline"] = _digest(sched, sched.target)
+
+    # -- single server: backpressure shed behind a 1s-per-batch server
+    srv = HarmonyServer(index, n_nodes=4)
+    sched = ServingScheduler(
+        srv,
+        SchedulerConfig(max_batch=4, queue_capacity=8, max_wait_s=1e-3),
+        k=5, service_time_fn=lambda n: 1.0,
+    )
+    sched.run_trace([(i * 1e-6, q[i % len(q)]) for i in range(64)])
+    out["single_backpressure"] = _digest(sched, sched.target)
+
+    # -- single server: hedged dispatch with a deterministic straggler
+    srv = HarmonyServer(index, n_nodes=4)
+    sched = ServingScheduler(
+        srv, SchedulerConfig(max_batch=8, hedge_deadline_s=0.01), k=5,
+        service_time_fn=lambda n: n * 1e-4,
+        latency_fn=lambda w, t: 0.5 if w == 0 else 1e-5,
+    )
+    sched.run_trace(_burst(q[:32]))
+    out["single_hedged"] = _digest(sched, sched.target)
+
+    # -- single server: hot-mass drift triggers a skew re-plan
+    srv = HarmonyServer(index, n_nodes=4)
+    sched = ServingScheduler(
+        srv,
+        SchedulerConfig(max_batch=8, replan_drift=0.15,
+                        min_batches_between_replans=2),
+        k=5, service_time_fn=lambda n: n * 1e-4,
+    )
+    trace = _burst(q[:32], spacing=1e-4) + _burst(qh, spacing=1e-4, t0=0.01)
+    sched.run_trace(trace)
+    out["single_skew_replan"] = _digest(sched, sched.target)
+
+    # -- fleet: heterogeneous p2c routing under a skewed burst
+    caps = [1.0, 1.0, 0.5, 0.5]
+    fleet = ReplicaFleet(
+        index, replicas=[ReplicaSpec(capacity=c) for c in caps], cfg=cfg,
+        routing="p2c", service_time_fn=lambda r, n: n * 1e-3 / caps[r],
+        seed=0,
+    )
+    sched = ServingScheduler(fleet, SchedulerConfig(max_batch=8), k=5)
+    sched.run_trace(_burst(qh))
+    out["fleet_p2c_hetero"] = _digest(sched, fleet)
+
+    # -- fleet: cross-replica hedging with a straggling replica 0
+    fleet = ReplicaFleet(
+        index, replicas=3, cfg=cfg, routing="least_loaded",
+        service_time_fn=lambda r, n: n * 1e-4,
+        latency_fn=lambda r, t: 0.5 if r == 0 else 1e-5,
+        seed=0,
+    )
+    sched = ServingScheduler(
+        fleet, SchedulerConfig(max_batch=8, hedge_deadline_s=0.01), k=5
+    )
+    sched.run_trace(_burst(q))
+    out["fleet_hedged"] = _digest(sched, fleet)
+
+    # -- fleet: replica fail/join mid-trace
+    fleet = ReplicaFleet(
+        index, replicas=2, cfg=cfg, routing="least_loaded",
+        service_time_fn=lambda r, n: n * 1e-3, seed=0,
+    )
+
+    def churn(batch_idx, sched):
+        if batch_idx == 2:
+            fleet.fail_replica(1)
+        elif batch_idx == 5:
+            fleet.join_replica(ReplicaSpec())
+
+    sched = ServingScheduler(
+        fleet, SchedulerConfig(max_batch=8), k=5, on_batch=churn
+    )
+    sched.run_trace(_burst(q))
+    out["fleet_churn"] = _digest(sched, fleet)
+
+    return out
+
+
+def test_virtual_clock_replay_matches_goldens():
+    """Every admission/trigger/hedge/placement counter of the virtual-clock
+    replay is unchanged from the pre-clock-refactor goldens."""
+    assert GOLDEN_PATH.exists(), (
+        f"missing {GOLDEN_PATH}; regenerate with "
+        "PYTHONPATH=src python tests/test_virtual_clock_goldens.py --regen"
+    )
+    golden = json.loads(GOLDEN_PATH.read_text())
+    got = _scenarios()
+    assert sorted(got) == sorted(golden), "scenario set changed"
+    for name in golden:
+        assert got[name] == golden[name], (
+            f"virtual-clock replay drifted in scenario {name!r}:\n"
+            f"  golden: {json.dumps(golden[name], sort_keys=True)}\n"
+            f"  got:    {json.dumps(got[name], sort_keys=True)}"
+        )
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--regen" in sys.argv:
+        GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
+        GOLDEN_PATH.write_text(
+            json.dumps(_scenarios(), indent=2, sort_keys=True) + "\n"
+        )
+        print(f"wrote {GOLDEN_PATH}")
+    else:
+        test_virtual_clock_replay_matches_goldens()
+        print("goldens match")

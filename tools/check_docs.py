@@ -1,0 +1,124 @@
+"""Docs validation: intra-repo markdown links + the README quickstart.
+
+Two checks, runnable together or separately (CI's docs job runs both):
+
+* ``--links`` — every relative ``[text](target)`` link in the repo's
+  markdown files must resolve to an existing file/directory (anchors are
+  stripped; ``http(s)``/``mailto`` links are skipped).
+* ``--quickstart`` — the first fenced ``python`` block in ``README.md``
+  is extracted and executed with ``HARMONY_BENCH_TINY=1`` and
+  ``PYTHONPATH=src`` — the quickstart cannot rot.
+
+Usage (from the repo root):
+
+    python tools/check_docs.py            # both checks
+    python tools/check_docs.py --links
+    python tools/check_docs.py --quickstart
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# [text](target) — excluding images' inner brackets is unnecessary here;
+# the target group stops at the first ')' which is fine for repo links
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+SKIP_DIRS = {".git", ".pytest_cache", "__pycache__", ".claude"}
+
+
+def markdown_files():
+    for path in sorted(REPO.rglob("*.md")):
+        if not SKIP_DIRS.intersection(p.name for p in path.parents):
+            yield path
+
+
+def check_links() -> list:
+    """Return a list of ``(file, target)`` for links that don't resolve."""
+    broken = []
+    for md in markdown_files():
+        for target in LINK_RE.findall(md.read_text()):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (md.parent / rel).exists():
+                broken.append((str(md.relative_to(REPO)), target))
+    return broken
+
+
+def extract_quickstart(readme: Path) -> str:
+    """All fenced python blocks, concatenated — the README's snippets are
+    written to flow (the serving snippet reuses the quickstart's index),
+    so the whole sequence must execute top to bottom."""
+    blocks = FENCE_RE.findall(readme.read_text())
+    if not blocks:
+        raise SystemExit(f"no ```python block found in {readme}")
+    return "\n\n".join(blocks)
+
+
+def run_quickstart() -> int:
+    snippet = extract_quickstart(REPO / "README.md")
+    env = dict(os.environ)
+    env["HARMONY_BENCH_TINY"] = "1"
+    env["PYTHONPATH"] = (
+        f"{REPO / 'src'}:{env['PYTHONPATH']}"
+        if env.get("PYTHONPATH")
+        else str(REPO / "src")
+    )
+    with tempfile.NamedTemporaryFile(
+        "w", suffix="_quickstart.py", delete=False
+    ) as f:
+        f.write(snippet)
+        path = f.name
+    try:
+        proc = subprocess.run(
+            [sys.executable, path], env=env, cwd=REPO, timeout=600
+        )
+        return proc.returncode
+    finally:
+        os.unlink(path)
+
+
+def main(argv) -> int:
+    unknown = [a for a in argv if a not in ("--links", "--quickstart")]
+    if unknown:
+        # a typo must not silently skip every check and exit green
+        print(f"unknown argument(s): {unknown}; "
+              "use --links and/or --quickstart (default: both)")
+        return 2
+    do_links = "--links" in argv or len(argv) == 0
+    do_quickstart = "--quickstart" in argv or len(argv) == 0
+    rc = 0
+    if do_links:
+        broken = check_links()
+        if broken:
+            print("BROKEN markdown links:")
+            for where, target in broken:
+                print(f"  {where}: {target}")
+            rc = 1
+        else:
+            n = sum(1 for _ in markdown_files())
+            print(f"links OK across {n} markdown files")
+    if do_quickstart:
+        print("running README quickstart (HARMONY_BENCH_TINY=1)...")
+        q_rc = run_quickstart()
+        if q_rc != 0:
+            print(f"README quickstart FAILED (exit {q_rc})")
+            rc = 1
+        else:
+            print("README quickstart OK")
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
