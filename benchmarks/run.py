@@ -18,6 +18,7 @@ def main() -> None:
         bench_executor,
         bench_fleet,
         bench_frontend,
+        bench_ingest,
         bench_memory,
         bench_pruning_ratio,
         bench_qps_recall,
@@ -34,6 +35,7 @@ def main() -> None:
         bench_fleet,
         bench_frontend,
         bench_executor,
+        bench_ingest,
         bench_breakdown,
         bench_ablation,
         bench_pruning_ratio,

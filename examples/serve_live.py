@@ -1,4 +1,5 @@
-"""Live serving demo: real-clock traffic through the async front-end.
+"""Live serving demo: real-clock traffic through the async front-end,
+with a writer thread streaming upserts/deletes into the shared data plane.
 
 Where ``serve_anns.py`` *replays* a trace on the virtual clock, this demo
 serves for real: a 4-replica fleet (one half-speed replica, one wall-
@@ -6,7 +7,15 @@ clock straggler) behind :class:`repro.serve.frontend.ServingFrontend` —
 requests submitted at Poisson arrival times on the wall clock, batches
 formed by the size/deadline triggers, replicas overlapping on a thread
 pool, stragglers hedged for real (first finisher wins), and an asyncio
-client awaiting individual results.
+client awaiting individual results. Meanwhile a **writer thread** streams
+upserts (and deletes of its own keys) through ``frontend.upsert/delete``
+into the fleet-shared :class:`repro.core.SegmentedIndex`, and a
+background :class:`repro.serve.compactor.Compactor` seals the growing
+delta buffer into new segments mid-traffic — the demo prints the
+delta-buffer size and every compaction event. (The writer inserts far
+from the query distribution and the compactor only *seals* — never
+re-trains the original segment — so the oracle check on read results
+stays exact.)
 
     PYTHONPATH=src python examples/serve_live.py
 
@@ -16,6 +25,7 @@ paths — the examples job uses it so examples can't rot).
 
 import asyncio
 import os
+import threading
 import time
 
 import numpy as np
@@ -24,6 +34,8 @@ from repro.config import HarmonyConfig
 from repro.core import build_ivf, search_oracle
 from repro.data import make_dataset, make_queries
 from repro.serve import (
+    CompactionConfig,
+    Compactor,
     ReplicaFleet,
     ReplicaSpec,
     SchedulerConfig,
@@ -81,10 +93,41 @@ def main():
     rng = np.random.default_rng(3)
     arrivals = np.cumsum(rng.exponential(1.0 / rate_qps, size=n_req))
 
+    # background compactor over the fleet-shared data plane: seal-only
+    # policy (huge max_segments) — the original segment is never
+    # re-trained, so the oracle check below stays exact
+    write_batch = 16
+    compactor = Compactor(
+        fleet.data, fleet,
+        CompactionConfig(delta_threshold=4 * write_batch,
+                         max_segments=10_000, poll_s=0.01),
+    )
+
+    stop_writer = threading.Event()
+    writer_log = {"upserts": 0, "deletes": 0}
+
+    def writer(fe):
+        """Stream upserts/deletes while clients query: fresh keys far from
+        the query distribution (they never perturb read results), with a
+        trailing delete of every 4th key."""
+        wrng = np.random.default_rng(7)
+        next_id = 1_000_000
+        while not stop_writer.is_set():
+            ids = np.arange(next_id, next_id + write_batch)
+            vecs = (50.0 + wrng.standard_normal((write_batch, dim))
+                    ).astype(np.float32)
+            fe.upsert(ids, vecs)
+            writer_log["upserts"] += write_batch
+            writer_log["deletes"] += fe.delete(ids[::4])
+            next_id += write_batch
+            stop_writer.wait(0.02)
+
     print(f"live serving: {len(caps)} replicas, offered {rate_qps:.0f} q/s, "
-          f"{n_req} requests on the wall clock")
+          f"{n_req} requests on the wall clock + writer thread")
     t0 = time.monotonic()
-    with ServingFrontend(fleet, sched_cfg, k=cfg.topk) as fe:
+    with compactor, ServingFrontend(fleet, sched_cfg, k=cfg.topk) as fe:
+        wt = threading.Thread(target=writer, args=(fe,), daemon=True)
+        wt.start()
         futs = []
         for i in range(n_req):
             # absolute-time pacing: open-loop arrivals don't drift when a
@@ -94,6 +137,8 @@ def main():
                 time.sleep(dt)
             futs.append(fe.submit(q[i]))
         fe.drain(timeout=120.0)
+        stop_writer.set()
+        wt.join(timeout=10.0)
 
         # an asyncio client rides the same front-end
         async def aclient():
@@ -128,6 +173,18 @@ def main():
           f"hedged={hedge['hedged']} (wins={hedge['hedge_wins']}, "
           f"win rate {hedge['win_rate']:.2f})")
     assert hedge["hedged"] >= 1, "straggling replica 3 should trip the hedge"
+
+    data = fleet.data
+    print(f"data plane: {writer_log['upserts']} upserts / "
+          f"{writer_log['deletes']} deletes streamed | "
+          f"generation {data.generation} | {data.n_segments} segments | "
+          f"delta buffer {data.delta_len} rows | live {data.nb_live}")
+    for e in compactor.events:
+        print(f"   compaction[{e['reason']}] → gen {e['generation']}: "
+              f"sealed {e['sealed_rows']} rows into "
+              f"{e['new_segments']} segment(s) in {e['wall_s'] * 1e3:.0f}ms")
+    assert writer_log["upserts"] > 0, "writer thread should have streamed"
+    assert compactor.events, "the delta should have been sealed mid-traffic"
     print("OK")
 
 

@@ -1,3 +1,4 @@
 from repro.checkpoint.checkpointer import Checkpointer
+from repro.checkpoint.index_io import load_segmented_index, save_segmented_index
 
-__all__ = ["Checkpointer"]
+__all__ = ["Checkpointer", "save_segmented_index", "load_segmented_index"]

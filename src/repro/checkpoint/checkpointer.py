@@ -109,6 +109,33 @@ class Checkpointer:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def load_arrays(self, step: Optional[int] = None):
+        """Load one step's raw (manifest, flat arrays) without needing a
+        ``target_like`` pytree — for consumers whose structure is encoded
+        in the arrays themselves (e.g. the segmented-index manifest,
+        whose segment count is data). Keys are the flattened tree paths
+        (``a/b/c``). Leaves saved as bfloat16 (stored on disk as uint16
+        views) are reconstructed from the manifest dtype, as
+        :meth:`restore` does."""
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = self.dir / f"step_{step:09d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        data = np.load(d / "arrays.npz")
+        arrays = {}
+        for k in data.files:
+            key = k[: -len("@shard0")]
+            arr = data[k]
+            want = manifest["leaves"].get(key, {}).get("dtype")
+            if want == "bfloat16" and arr.dtype == np.uint16:
+                import ml_dtypes
+
+                arr = arr.view(ml_dtypes.bfloat16)
+            arrays[key] = arr
+        return manifest, arrays
+
     def restore(self, target_like, step: Optional[int] = None,
                 shardings=None):
         """Restore into the structure of ``target_like``. ``shardings``

@@ -1,0 +1,124 @@
+"""Persist/restore the segmented ANNS data plane through
+:class:`repro.checkpoint.Checkpointer`.
+
+Servers no longer rebuild (train + add + pre-assign) the corpus on every
+start: ``save_segmented_index`` writes the sealed segments (centers,
+packed rows, external ids, cluster tables), the dead-row bitmaps, the
+live delta rows, and the config as one generation-numbered checkpoint
+step; ``load_segmented_index`` reconstructs a byte-equivalent
+:class:`repro.core.SegmentedIndex` that any ``HarmonyServer`` /
+``ReplicaFleet`` can serve immediately (plans/corpora/executors are
+derived state and rebuilt on adopt, as after any generation swap).
+
+Layout: the standard Checkpointer step directory (manifest + npz), with
+the tree structure encoded in the flat keys (``segments/<i>/<leaf>``) and
+the non-array metadata (config, segment ids, generation) JSON-encoded in
+a ``meta`` uint8 leaf. The step number is the data plane's generation, so
+``latest_step()`` is always the newest committed data.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Optional
+
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.config import HarmonyConfig
+from repro.core import IVFIndex, Segment, SegmentedIndex
+
+
+def _meta_array(meta: dict) -> np.ndarray:
+    return np.frombuffer(json.dumps(meta).encode("utf-8"), np.uint8).copy()
+
+
+def _meta_parse(arr: np.ndarray) -> dict:
+    return json.loads(bytes(arr.astype(np.uint8)).decode("utf-8"))
+
+
+def save_segmented_index(
+    ckpt: Checkpointer, data: SegmentedIndex, step: Optional[int] = None
+) -> Path:
+    """Write ``data`` as checkpoint step ``step`` (default: its current
+    generation). Point-in-time consistent: the snapshot is taken under
+    the data-plane lock, so a concurrent writer can't tear it."""
+    with data._mu:
+        step = data.generation if step is None else step
+        meta = {
+            "generation": data.generation,
+            "op_count": data.op_count,
+            "next_seg_id": data._next_seg_id,
+            "seg_ids": [s.seg_id for s in data.segments],
+            "seg_cfgs": [dataclasses.asdict(s.index.cfg) for s in data.segments],
+            "cfg": dataclasses.asdict(data.cfg),
+        }
+        tree = {"meta": _meta_array(meta)}
+        for i, seg in enumerate(data.segments):
+            tree[f"segments/{i}"] = {
+                "centers": seg.index.centers,
+                "x": seg.index.x,
+                "ids": seg.index.ids,
+                "cluster_of": seg.index.cluster_of,
+                "offsets": seg.index.offsets,
+                "dead_rows": data._dead_rows[seg.seg_id].copy(),
+            }
+        n = data._delta_len
+        live = data._delta_live[:n]
+        tree["delta"] = {
+            "ids": data._delta_ids[:n][live].copy(),
+            "x": data._delta_x[:n][live].copy(),
+        }
+    return ckpt.save(step, tree)
+
+
+def load_segmented_index(
+    ckpt: Checkpointer, step: Optional[int] = None
+) -> SegmentedIndex:
+    """Rebuild the :class:`SegmentedIndex` from checkpoint ``step``
+    (default: the latest). Searches over the restored index are
+    bit-identical to the saved one's."""
+    _, arrays = ckpt.load_arrays(step)
+    meta = _meta_parse(arrays["meta"])
+    cfg = HarmonyConfig(**meta["cfg"])
+    segments = []
+    for i, seg_id in enumerate(meta["seg_ids"]):
+        pre = f"segments/{i}/"
+        seg_cfg = HarmonyConfig(**meta["seg_cfgs"][i])
+        segments.append(Segment(
+            seg_id=int(seg_id),
+            index=IVFIndex(
+                cfg=seg_cfg,
+                centers=arrays[pre + "centers"],
+                x=arrays[pre + "x"],
+                ids=arrays[pre + "ids"].astype(np.int64),
+                cluster_of=arrays[pre + "cluster_of"].astype(np.int32),
+                offsets=arrays[pre + "offsets"].astype(np.int64),
+                build_times={},
+            ),
+        ))
+    data = SegmentedIndex(cfg, segments)
+    data.generation = int(meta["generation"])
+    data.op_count = int(meta["op_count"])
+    data._next_seg_id = int(meta["next_seg_id"])
+    # rebuild the location map from the dead bitmaps: an external id is
+    # live in exactly one (segment, row) — the one whose bit is clear.
+    # (The constructor's map ignores tombstones, and a stale sealed copy
+    # of an overwritten id must not shadow the live one.)
+    data._loc = {}
+    for i, seg in enumerate(segments):
+        dead = arrays[f"segments/{i}/dead_rows"].astype(bool)
+        data._dead_rows[seg.seg_id] = dead
+        for r in np.nonzero(~dead)[0]:
+            data._loc[int(seg.index.ids[r])] = (seg.seg_id, int(r))
+    d_ids = arrays["delta/ids"].astype(np.int64)
+    d_x = arrays["delta/x"].astype(np.float32)
+    with data._mu:
+        for i, v in zip(d_ids, d_x):
+            # saved delta rows are the live set: any sealed copy of the
+            # same id was tombstoned at save time (dead_rows), so a plain
+            # append reconstructs the exact live state
+            data._append_delta_locked(int(i), v)
+    return data

@@ -9,17 +9,30 @@ Public API:
   (TPU-target SPMD ring engine)
 """
 
-from repro.core.index import IVFIndex, ShardedCorpus, build_ivf, preassign, assign_queries, dim_block_bounds
+from repro.core.index import (
+    CompactionPlan,
+    DataSnapshot,
+    IVFIndex,
+    Segment,
+    SegmentedIndex,
+    ShardedCorpus,
+    assign_queries,
+    build_ivf,
+    dim_block_bounds,
+    preassign,
+)
 from repro.core.types import PartitionPlan, SearchResult
 from repro.core.planner import plan_search, factorizations, PlanDecision
 from repro.core.cost_model import HardwareModel, WorkloadStats, plan_cost, TPU_V5E
-from repro.core.search import harmony_search, search_oracle
+from repro.core.search import delta_topk, harmony_search, merge_topk, search_oracle
 from repro.core.pruning import TopKHeap, prewarm_tau, partial_scores_block
 
 __all__ = [
     "IVFIndex", "ShardedCorpus", "build_ivf", "preassign", "assign_queries",
     "dim_block_bounds", "PartitionPlan", "SearchResult",
+    "Segment", "SegmentedIndex", "DataSnapshot", "CompactionPlan",
     "plan_search", "factorizations", "PlanDecision", "HardwareModel",
     "WorkloadStats", "plan_cost", "TPU_V5E", "harmony_search",
-    "search_oracle", "TopKHeap", "prewarm_tau", "partial_scores_block",
+    "search_oracle", "delta_topk", "merge_topk",
+    "TopKHeap", "prewarm_tau", "partial_scores_block",
 ]

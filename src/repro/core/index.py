@@ -1,4 +1,5 @@
-"""IVF index build and multi-granularity (vector × dimension) layout.
+"""IVF index build, multi-granularity (vector × dimension) layout, and the
+mutable segmented data plane.
 
 Build stages mirror the paper's Fig. 10 breakdown:
 
@@ -10,13 +11,24 @@ Build stages mirror the paper's Fig. 10 breakdown:
   machine grid of a :class:`PartitionPlan`: rows (grouped by cluster) to
   vector shards, dimension blocks to model ranks, and precompute per-block
   squared norms used by the monotone partial-distance recursion.
+
+Mutability (the streaming-ingest axis) is segment-based, the standard
+design of serving-grade ANNS systems (Milvus-style delta/sealed
+segments): a :class:`SegmentedIndex` is an ordered set of immutable
+*sealed* :class:`Segment`\\ s (each exactly today's packed IVF layout),
+one append-only *delta buffer* of fresh vectors, and per-segment
+*dead-row* bitmaps (tombstones for deletes and superseded upserts).
+Background compaction seals the delta into a new segment or merges
+everything into one — the frozen-corpus index of the early PRs is just
+the one-sealed-segment, empty-delta special case.
 """
 
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -70,8 +82,16 @@ class IVFIndex:
         return sum(a.nbytes for a in (self.centers, self.x, self.ids, self.offsets))
 
 
-def build_ivf(x: np.ndarray, cfg: HarmonyConfig) -> IVFIndex:
-    """Train + Add stages."""
+def build_ivf(
+    x: np.ndarray, cfg: HarmonyConfig, ext_ids: Optional[np.ndarray] = None
+) -> IVFIndex:
+    """Train + Add stages.
+
+    ``ext_ids`` optionally names each input row with a stable *external*
+    id (the ids returned by search); default is the row position —
+    exactly the seed behaviour. Segment seals pass the surviving
+    external ids through here, so ids stay stable across compactions.
+    """
     t0 = time.perf_counter()
     centers, assign = kmeans_fit_np(
         x, cfg.nlist, iters=cfg.kmeans_iters, seed=cfg.kmeans_seed
@@ -87,11 +107,12 @@ def build_ivf(x: np.ndarray, cfg: HarmonyConfig) -> IVFIndex:
     np.cumsum(counts, out=offsets[1:])
     t_add = time.perf_counter() - t0
 
+    ids = order if ext_ids is None else np.asarray(ext_ids, np.int64)[order]
     return IVFIndex(
         cfg=cfg,
         centers=centers.astype(np.float32),
         x=x_sorted,
-        ids=order.astype(np.int64),
+        ids=ids.astype(np.int64),
         cluster_of=cluster_sorted.astype(np.int32),
         offsets=offsets,
         build_times={"train": t_train, "add": t_add},
@@ -204,3 +225,419 @@ def preassign(index: IVFIndex, plan: PartitionPlan, pad_to: int = 64) -> Sharded
         cluster_slices=cluster_slices,
         preassign_time=time.perf_counter() - t0,
     )
+
+
+# ---------------------------------------------------------------------------
+# Mutable segmented data plane
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Segment:
+    """One immutable sealed segment: a packed IVF index whose ``ids`` are
+    stable external ids. Row r of ``index.x`` is addressed everywhere as
+    ``(seg_id, r)``; deletions never rewrite a sealed segment — they flip
+    a bit in the owning :class:`SegmentedIndex`'s dead-row bitmap."""
+
+    seg_id: int
+    index: IVFIndex
+
+    @property
+    def nb(self) -> int:
+        return self.index.nb
+
+
+@dataclass(frozen=True)
+class CompactionPlan:
+    """Consistent snapshot handed to the (off-path, lock-free) seal step.
+
+    ``ids``/``x`` are the live rows of the structures being compacted
+    (delta buffer + ``merge_seg_ids`` sealed segments), sorted by external
+    id — so a full merge is bit-identical to ``build_ivf`` over the live
+    set. ``carry_seg_ids`` keep serving untouched through the swap."""
+
+    base_generation: int
+    merge_seg_ids: Tuple[int, ...]
+    carry_seg_ids: Tuple[int, ...]
+    ids: np.ndarray                 # [n] int64, sorted ascending
+    x: np.ndarray                   # [n, D] float32
+
+
+class SegmentedIndex:
+    """Mutable segmented vector index: sealed segments + delta + tombstones.
+
+    The single shared data plane of the serving stack — every replica's
+    :class:`repro.serve.engine.HarmonyServer` holds a reference to the
+    same object, so one ``upsert``/``delete`` is immediately visible
+    fleet-wide, and a compaction *commit* (generation bump) tells every
+    replica to adopt the new segment set.
+
+    Thread model: all mutation happens under ``_mu``; readers take a
+    :meth:`snapshot` (cheap — tuple of immutable segments plus copies of
+    the dead bitmaps and delta state, taken under the lock) and search
+    lock-free on a true point-in-time view. Delta rows are append-only
+    (an upsert of an existing id appends a new row and kills the old one
+    — rows are never rewritten in place, so a reader can never observe a
+    torn vector).
+
+    >>> import numpy as np
+    >>> from repro.config import HarmonyConfig
+    >>> rng = np.random.default_rng(0)
+    >>> x = rng.standard_normal((64, 4)).astype(np.float32)
+    >>> cfg = HarmonyConfig(dim=4, nlist=4, nprobe=4, topk=3, kmeans_iters=2)
+    >>> si = SegmentedIndex.build(x, cfg)
+    >>> si.n_segments, si.delta_len, si.nb_live
+    (1, 0, 64)
+    >>> si.upsert([64], x[:1] + 1.0)
+    >>> si.delete([0, 1])
+    2
+    >>> si.delta_len, si.nb_live, sorted(si.dead_count_by_segment().values())
+    (1, 63, [2])
+    >>> si.compact_inline(merge_all=True)       # one-shot, serving paused
+    >>> si.generation, si.n_segments, si.delta_len, si.nb_live
+    (1, 1, 0, 63)
+    """
+
+    def __init__(self, cfg: HarmonyConfig, segments: Sequence[Segment] = ()):
+        self.cfg = cfg
+        self._mu = threading.RLock()
+        self.segments: Tuple[Segment, ...] = tuple(segments)
+        self.generation = 0
+        self._next_seg_id = 1 + max((s.seg_id for s in self.segments), default=-1)
+        # sealed-row tombstones: seg_id -> bool [nb] (True = dead)
+        self._dead_rows: Dict[int, np.ndarray] = {
+            s.seg_id: np.zeros(s.nb, bool) for s in self.segments
+        }
+        # location maps: external id -> (seg_id, row) | delta row
+        self._loc: Dict[int, Tuple[int, int]] = {}
+        for s in self.segments:
+            for r, i in enumerate(s.index.ids):
+                self._loc[int(i)] = (s.seg_id, r)
+        # append-only delta buffer (doubled on growth; old buffers stay
+        # valid for readers that snapshotted them)
+        self._delta_x = np.zeros((0, cfg.dim), np.float32)
+        self._delta_ids = np.zeros((0,), np.int64)
+        self._delta_live = np.zeros((0,), bool)
+        self._delta_len = 0
+        self._delta_pos: Dict[int, int] = {}
+        self._journal: Optional[List[tuple]] = None     # ops during compaction
+        self.op_count = 0               # total accepted upsert/delete rows
+
+    # ------------------------------------------------------------- builders
+    @classmethod
+    def build(
+        cls, x: np.ndarray, cfg: HarmonyConfig,
+        ids: Optional[np.ndarray] = None,
+    ) -> "SegmentedIndex":
+        """Build a one-sealed-segment index (the static special case)."""
+        return cls.from_static(build_ivf(np.asarray(x, np.float32), cfg, ids))
+
+    @classmethod
+    def from_static(cls, index: IVFIndex) -> "SegmentedIndex":
+        """Wrap an already-built :func:`build_ivf` index as generation 0."""
+        return cls(index.cfg, [Segment(seg_id=0, index=index)])
+
+    # ------------------------------------------------------------ properties
+    @property
+    def dim(self) -> int:
+        return self.cfg.dim
+
+    @property
+    def nlist(self) -> int:
+        """Cluster count of the *plan/routing* cluster space (the config's
+        nlist; small sealed segments may carry fewer centroids)."""
+        return self.cfg.nlist
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.segments)
+
+    @property
+    def delta_len(self) -> int:
+        """Live rows currently in the delta buffer."""
+        with self._mu:
+            return int(self._delta_live[: self._delta_len].sum())
+
+    @property
+    def nb_live(self) -> int:
+        """Total live vectors (sealed minus tombstoned, plus delta)."""
+        with self._mu:
+            return len(self._loc) + len(self._delta_pos)
+
+    def live_sizes(self, seg: Segment) -> np.ndarray:
+        """Tombstone-aware per-cluster sizes of one sealed segment (what
+        load-aware planning should balance — dead rows carry no work)."""
+        with self._mu:
+            alive = ~self._dead_rows[seg.seg_id]
+        return np.bincount(
+            seg.index.cluster_of[alive], minlength=seg.index.nlist
+        ).astype(np.int64)
+
+    def dead_count_by_segment(self) -> Dict[int, int]:
+        with self._mu:
+            return {sid: int(d.sum()) for sid, d in self._dead_rows.items()}
+
+    def memory_bytes(self) -> int:
+        """Resident bytes: sealed segments + dead bitmaps + delta buffer."""
+        with self._mu:
+            seg = sum(s.index.memory_bytes() for s in self.segments)
+            masks = sum(d.nbytes for d in self._dead_rows.values())
+            delta = (self._delta_x.nbytes + self._delta_ids.nbytes
+                     + self._delta_live.nbytes)
+            return seg + masks + delta
+
+    def has(self, ext_id: int) -> bool:
+        """Is ``ext_id`` live (reachable by search)?"""
+        with self._mu:
+            return int(ext_id) in self._loc or int(ext_id) in self._delta_pos
+
+    # -------------------------------------------------------------- writes
+    def _kill_locked(self, ext_id: int) -> bool:
+        """Remove ``ext_id``'s current live copy (sealed tombstone or delta
+        mask). Returns True if a copy existed."""
+        loc = self._loc.pop(ext_id, None)
+        if loc is not None:
+            self._dead_rows[loc[0]][loc[1]] = True
+            return True
+        row = self._delta_pos.pop(ext_id, None)
+        if row is not None:
+            self._delta_live[row] = False
+            return True
+        return False
+
+    def _append_delta_locked(self, ext_id: int, vec: np.ndarray) -> None:
+        n = self._delta_len
+        if n == len(self._delta_x):
+            cap = max(64, 2 * len(self._delta_x))
+            for name in ("_delta_x", "_delta_ids", "_delta_live"):
+                old = getattr(self, name)
+                shape = (cap,) + old.shape[1:]
+                new = np.zeros(shape, old.dtype)
+                new[:n] = old[:n]
+                setattr(self, name, new)    # readers keep their old buffer
+        self._delta_x[n] = vec
+        self._delta_ids[n] = ext_id
+        self._delta_live[n] = True
+        self._delta_len = n + 1
+        self._delta_pos[ext_id] = n
+
+    def upsert(self, ids: Sequence[int], vecs: np.ndarray) -> None:
+        """Insert-or-replace vectors under stable external ids. The newest
+        version wins immediately: any older copy (sealed or delta) is
+        tombstoned in the same critical section.
+
+        Ids are int64 end-to-end on the host backend; the device
+        (``spmd``) pipeline carries ids as int32, so keep external ids
+        within int32 range when serving through it."""
+        vecs = np.asarray(vecs, np.float32)
+        if vecs.ndim == 1:
+            vecs = vecs[None]
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        assert vecs.shape == (len(ids), self.dim), (vecs.shape, len(ids))
+        with self._mu:
+            for i, v in zip(ids, vecs):
+                i = int(i)
+                self._kill_locked(i)
+                self._append_delta_locked(i, v)
+            self.op_count += len(ids)
+            if self._journal is not None:
+                self._journal.append(("upsert", ids.copy(), vecs.copy()))
+
+    def delete(self, ids: Sequence[int]) -> int:
+        """Tombstone external ids. Returns how many were actually live."""
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        with self._mu:
+            removed = sum(1 for i in ids if self._kill_locked(int(i)))
+            self.op_count += len(ids)
+            if self._journal is not None:
+                self._journal.append(("delete", ids.copy()))
+            return removed
+
+    # ------------------------------------------------------------ snapshots
+    def snapshot(self) -> "DataSnapshot":
+        """Point-in-time read view for one search: immutable sealed
+        segments plus *copies* of the dead bitmaps and the delta's live
+        id/row state. The bitmap copy matters: an upsert of a sealed id
+        flips its dead bit and appends the new delta row as one atomic
+        write — a reader sharing the live bitmap could observe the
+        tombstone half without the new row and lose the id entirely."""
+        with self._mu:
+            n = self._delta_len
+            return DataSnapshot(
+                generation=self.generation,
+                segments=self.segments,
+                dead_rows={sid: d.copy() for sid, d in self._dead_rows.items()},
+                delta_ids=self._delta_ids[:n].copy(),
+                delta_x=self._delta_x[:n],          # append-only: rows ≤ n frozen
+                delta_live=self._delta_live[:n].copy(),
+            )
+
+    def live_vectors(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(ids, x) of every live vector, sorted by external id — the
+        brute-force-oracle and from-scratch-rebuild reference set."""
+        with self._mu:
+            parts_i, parts_x = [], []
+            for s in self.segments:
+                alive = ~self._dead_rows[s.seg_id]
+                parts_i.append(s.index.ids[alive])
+                parts_x.append(s.index.x[alive])
+            n = self._delta_len
+            live = self._delta_live[:n]
+            parts_i.append(self._delta_ids[:n][live])
+            parts_x.append(self._delta_x[:n][live])
+        ids = np.concatenate(parts_i) if parts_i else np.zeros(0, np.int64)
+        x = (np.concatenate(parts_x) if parts_x
+             else np.zeros((0, self.dim), np.float32))
+        order = np.argsort(ids, kind="stable")
+        return ids[order], np.ascontiguousarray(x[order])
+
+    # ----------------------------------------------------------- compaction
+    def begin_compaction(self, merge_all: bool = False,
+                         merge_seg_ids: Optional[Sequence[int]] = None
+                         ) -> CompactionPlan:
+        """Open a compaction: snapshot the rows to re-seal and start
+        journaling writes so the (long) seal step can run off the serving
+        path. Exactly one compaction may be in flight."""
+        with self._mu:
+            if self._journal is not None:
+                raise RuntimeError("a compaction is already in flight")
+            if merge_seg_ids is None:
+                merge_seg_ids = ([s.seg_id for s in self.segments]
+                                 if merge_all else [])
+            merge_seg_ids = tuple(int(s) for s in merge_seg_ids)
+            carry = tuple(s.seg_id for s in self.segments
+                          if s.seg_id not in merge_seg_ids)
+            parts_i, parts_x = [], []
+            for s in self.segments:
+                if s.seg_id not in merge_seg_ids:
+                    continue
+                alive = ~self._dead_rows[s.seg_id]
+                parts_i.append(s.index.ids[alive])
+                parts_x.append(s.index.x[alive].copy())
+            n = self._delta_len
+            live = self._delta_live[:n]
+            parts_i.append(self._delta_ids[:n][live].copy())
+            parts_x.append(self._delta_x[:n][live].copy())
+            ids = np.concatenate(parts_i)
+            x = (np.concatenate(parts_x) if ids.size
+                 else np.zeros((0, self.dim), np.float32))
+            order = np.argsort(ids, kind="stable")
+            self._journal = []
+            return CompactionPlan(
+                base_generation=self.generation,
+                merge_seg_ids=merge_seg_ids,
+                carry_seg_ids=carry,
+                ids=ids[order],
+                x=np.ascontiguousarray(x[order]),
+            )
+
+    def seal(self, plan: CompactionPlan) -> List[Segment]:
+        """Heavy step (k-means + pack), run OUTSIDE the lock: seal the
+        plan's rows into new segment(s). A full merge re-trains with the
+        config's exact settings, so the result is bit-identical to
+        ``build_ivf`` over the live set."""
+        if plan.ids.size == 0:
+            return []
+        n = int(plan.ids.size)
+        nlist = max(1, min(self.cfg.nlist, n))
+        seg_cfg = self.cfg.replace(
+            nlist=nlist, nprobe=min(self.cfg.nprobe, nlist)
+        )
+        with self._mu:
+            seg_id = self._next_seg_id
+            self._next_seg_id += 1
+        return [Segment(seg_id=seg_id,
+                        index=build_ivf(plan.x, seg_cfg, ext_ids=plan.ids))]
+
+    def abort_compaction(self) -> None:
+        with self._mu:
+            self._journal = None
+
+    def commit_compaction(self, plan: CompactionPlan,
+                          new_segments: Sequence[Segment]) -> int:
+        """Atomically install the sealed segments and replay the writes
+        that arrived during the seal. Bumps ``generation`` (replicas adopt
+        on their next batch, or eagerly via the compactor). Returns the
+        new generation."""
+        # precompute the new segments' location entries OUTSIDE the lock
+        # (they're immutable): the critical section must stay O(journal),
+        # not O(corpus), or readers' snapshot() calls would stall behind
+        # a large merge — the very thing the swap protocol forbids
+        new_loc: Dict[int, Tuple[int, int]] = {}
+        for s in new_segments:
+            for r, i in enumerate(s.index.ids):
+                new_loc[int(i)] = (s.seg_id, r)
+        with self._mu:
+            if self._journal is None:
+                raise RuntimeError("no compaction in flight")
+            if self.generation != plan.base_generation:
+                self._journal = None
+                raise RuntimeError("concurrent generation change")
+            carry = [s for s in self.segments if s.seg_id in plan.carry_seg_ids]
+            self.segments = tuple(carry) + tuple(new_segments)
+            self._dead_rows = {
+                sid: d for sid, d in self._dead_rows.items()
+                if sid in plan.carry_seg_ids
+            }
+            for s in new_segments:
+                self._dead_rows[s.seg_id] = np.zeros(s.nb, bool)
+            # rebuild location maps: carried entries survive, merged /
+            # delta entries now point at the new sealed rows. The two
+            # common shapes stay cheap under the lock: a full merge is an
+            # O(1) dict swap, a delta-only seal an O(delta) update;
+            # partial merges pay one pass over the carried entries.
+            if not plan.carry_seg_ids:
+                self._loc = new_loc
+            elif plan.merge_seg_ids:
+                self._loc = {i: l for i, l in self._loc.items()
+                             if l[0] in plan.carry_seg_ids}
+                self._loc.update(new_loc)
+            else:
+                self._loc.update(new_loc)   # sealed entries all carried
+            self._delta_x = np.zeros((0, self.cfg.dim), np.float32)
+            self._delta_ids = np.zeros((0,), np.int64)
+            self._delta_live = np.zeros((0,), bool)
+            self._delta_len = 0
+            self._delta_pos = {}
+            ops, self._journal = self._journal, None
+            self.generation += 1
+            # replay the journal onto the new structures (idempotent kills
+            # + fresh delta appends — ops were counted when first applied)
+            for op in ops:
+                if op[0] == "upsert":
+                    _, ids, vecs = op
+                    for i, v in zip(ids, vecs):
+                        self._kill_locked(int(i))
+                        self._append_delta_locked(int(i), v)
+                else:
+                    for i in op[1]:
+                        self._kill_locked(int(i))
+            return self.generation
+
+    def compact_inline(self, merge_all: bool = False) -> None:
+        """Synchronous begin→seal→commit (tests / offline tools; live
+        serving uses :class:`repro.serve.compactor.Compactor`, which
+        interleaves replica preparation before the commit)."""
+        plan = self.begin_compaction(merge_all=merge_all)
+        try:
+            segs = self.seal(plan)
+        except BaseException:
+            self.abort_compaction()
+            raise
+        self.commit_compaction(plan, segs)
+
+
+@dataclass(frozen=True)
+class DataSnapshot:
+    """One search's point-in-time view of a :class:`SegmentedIndex`."""
+
+    generation: int
+    segments: Tuple[Segment, ...]
+    dead_rows: Dict[int, np.ndarray]    # seg_id -> bool [nb] (point-in-time copy)
+    delta_ids: np.ndarray               # [n] int64
+    delta_x: np.ndarray                 # [n, D] float32 (frozen rows)
+    delta_live: np.ndarray              # [n] bool
+
+    @property
+    def delta_count(self) -> int:
+        return int(self.delta_live.sum())

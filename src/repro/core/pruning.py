@@ -14,7 +14,7 @@ therefore exact: it changes work, never results.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -98,6 +98,7 @@ def prewarm_tau(
     k: int,
     samples_per_cluster: int = 4,
     metric: str = "l2",
+    dead_rows: Optional[np.ndarray] = None,
 ) -> np.ndarray:
     """PrewarmHeap (Alg. 1, lines 1–5): exactly score a small sample of real
     candidates per probed cluster; the kth-smallest sampled distance is a
@@ -106,6 +107,11 @@ def prewarm_tau(
 
     Sampled rows are *not* inserted into result heaps — they are re-scored
     by the main scan, which avoids duplicate ids in merged top-K lists.
+
+    ``dead_rows`` (bool [NB], packed-row tombstones of the mutable data
+    plane) excludes dead rows from the sample — a tombstoned vector must
+    not tighten τ below the live candidate set's kth-best, or pruning
+    would stop being exact.
 
     Returns tau0 [NQ] float32 (+inf where the sample was smaller than K).
     """
@@ -130,6 +136,8 @@ def prewarm_tau(
     for i, rows in enumerate(all_rows):
         mat[i, : len(rows)] = rows
         msk[i, : len(rows)] = True
+    if dead_rows is not None:
+        msk &= ~dead_rows[mat]
     cand = index.x[mat]                                    # [NQ, W, D]
     if metric == "l2":
         diff = cand - q[:, None, :]

@@ -46,8 +46,13 @@ def search_oracle(
     k: Optional[int] = None,
     nprobe: Optional[int] = None,
     chunk: int = 128,
+    dead_rows: Optional[np.ndarray] = None,
 ) -> SearchResult:
-    """Exact top-k over probed clusters (masked full scan, chunked)."""
+    """Exact top-k over probed clusters (masked full scan, chunked).
+
+    ``dead_rows`` (bool [NB], packed-row tombstones) excludes deleted /
+    superseded rows from the candidate set — the sealed-segment masking
+    of the mutable data plane."""
     cfg = index.cfg
     k = k or cfg.topk
     probes = assign_queries(index, q, nprobe)
@@ -63,6 +68,8 @@ def search_oracle(
         member = np.zeros((hi - lo, index.nlist), bool)
         member[np.arange(hi - lo)[:, None], probes[lo:hi]] = True
         mask = member[:, index.cluster_of]                     # [m, NB]
+        if dead_rows is not None:
+            mask &= ~dead_rows[None, :]
         if cfg.metric == "l2":
             d = (
                 np.sum(q[lo:hi] * q[lo:hi], axis=1)[:, None]
@@ -185,8 +192,15 @@ def harmony_search(
     enable_pruning: Optional[bool] = None,
     pipeline: bool = True,
     collect_stats: bool = True,
+    dead_rows: Optional[np.ndarray] = None,
 ) -> SearchResult:
-    """Distributed HARMONY search (host-scheduled reproduction engine)."""
+    """Distributed HARMONY search (host-scheduled reproduction engine).
+
+    ``dead_rows`` (bool [NB] over *packed* index rows) applies the mutable
+    data plane's tombstones exactly: dead rows are excluded from the τ
+    prewarm sample and masked out of every candidate batch before it can
+    enter a heap, so a deleted/superseded id can neither appear in results
+    nor tighten pruning below the live kth-best."""
     cfg = index.cfg
     plan = corpus.plan
     k = k or cfg.topk
@@ -201,7 +215,8 @@ def harmony_search(
     t_host0 = time.perf_counter()
     probes = assign_queries(index, q, nprobe)
     tau0 = (
-        prewarm_tau(index, q, probes, k, cfg.prewarm_samples, metric)
+        prewarm_tau(index, q, probes, k, cfg.prewarm_samples, metric,
+                    dead_rows=dead_rows)
         if enable_pruning
         else np.full((nq,), np.inf, np.float32)
     )
@@ -211,6 +226,15 @@ def harmony_search(
         if pipeline
         else [_all_visits(probes, plan)]
     )
+    # remap packed-row tombstones onto the shard layout once per search
+    # (shard row lo_r+j of cluster c is packed row offsets[c]+j)
+    dead_sh = None
+    if dead_rows is not None and dead_rows.any():
+        dead_sh = np.zeros((V, corpus.cap), bool)
+        for c in range(index.nlist):
+            v, lo_r, hi_r = corpus.cluster_slices[c]
+            lo, hi = index.cluster_rows(c)
+            dead_sh[v, lo_r:hi_r] = dead_rows[lo:hi]
     stats.wall_other_s += time.perf_counter() - t_host0
 
     for stage in schedule:
@@ -232,6 +256,7 @@ def harmony_search(
                 enable_pruning=enable_pruning,
                 stats=stats,
                 stage_idx=stats.stages - 1,
+                dead_sh=dead_sh,
             )
             if local is not None:
                 pending.append((qidx, local))
@@ -242,6 +267,9 @@ def harmony_search(
             heap.merge_rows(qidx, local.scores, local.ids)
         stats.wall_other_s += time.perf_counter() - t0
 
+    # never report an id whose score is +inf (pruned-to-nothing or dead
+    # slots) — matches the oracle's -1 convention
+    heap.ids[~np.isfinite(heap.scores)] = -1
     res = SearchResult(ids=heap.ids, scores=heap.scores, stats=stats.as_dict())
     return res
 
@@ -260,6 +288,7 @@ def _process_visit(
     enable_pruning: bool,
     stats: "SearchStats",
     stage_idx: int,
+    dead_sh: Optional[np.ndarray] = None,
 ) -> Optional[TopKHeap]:
     """One (shard, query-group) visit.
 
@@ -315,6 +344,11 @@ def _process_visit(
             t0 = time.perf_counter()
             ms = len(sub)
             acc = np.zeros((ms, nrows), np.float32)
+            if dead_sh is not None:
+                # tombstoned rows enter the visit already pruned: they are
+                # compacted away with the other dead pairs and can never
+                # reach a heap (exactly the sealed-segment delete mask)
+                acc[:, dead_sh[v, lo_r:hi_r]] = np.inf
             live_rows = np.arange(lo_r, hi_r)
             tau_g = tau_local[sub]
             stats.slice_total += ms * nrows   # every pair reaches every slot
@@ -367,3 +401,87 @@ def _all_visits(probes: np.ndarray, plan: PartitionPlan):
         if qs.size:
             out.append((v, qs.astype(np.int64)))
     return out
+
+
+# ---------------------------------------------------------------------------
+# Mutable data plane: delta scan + cross-segment merge
+# ---------------------------------------------------------------------------
+
+
+def delta_topk(
+    delta_x: np.ndarray,
+    delta_ids: np.ndarray,
+    delta_live: np.ndarray,
+    q: np.ndarray,
+    k: int,
+    metric: str = "l2",
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact brute-force top-k over the live rows of a delta buffer.
+
+    The delta is small by construction (the compactor seals it before it
+    grows), so a dense scan is the right tool — no clustering, no
+    pruning, no approximation. Returns (scores [NQ, k] ascending
+    +inf-padded, ids [NQ, k] int64 -1-padded).
+    """
+    from repro.core.pruning import exact_scores
+
+    nq = q.shape[0]
+    live = np.nonzero(delta_live)[0]
+    if live.size == 0:
+        return (np.full((nq, k), np.inf, np.float32),
+                np.full((nq, k), -1, np.int64))
+    sc = exact_scores(delta_x[live], q, metric)            # [NQ, n_live]
+    ids = delta_ids[live]
+    heap = TopKHeap.empty(nq, k)
+    heap.merge_rows(np.arange(nq), sc, np.broadcast_to(ids, sc.shape))
+    heap.ids[~np.isfinite(heap.scores)] = -1
+    return heap.scores, heap.ids
+
+
+def merge_topk(
+    parts: Sequence[Tuple[np.ndarray, np.ndarray]],
+    k: int,
+    fused: bool = False,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Merge per-segment (scores, ids) top-k lists into one global top-k.
+
+    ``fused=True`` folds each part into a running top-K with the fused
+    :func:`repro.kernels.ops.running_topk_update` kernel (the same
+    VMEM-resident primitive the SPMD ring uses between chunks) — the
+    device-backend path; the default is the host ``TopKHeap`` merge.
+    Both return (scores [NQ, k] ascending, ids [NQ, k] int64, -1 where
+    +inf).
+
+    The kernel carries ids as int32 (like the whole device pipeline, whose
+    resident ``row_ids`` are int32); external ids beyond the int32 range
+    fall back to the host merge rather than silently wrapping.
+    """
+    assert parts
+    nq = parts[0][0].shape[0]
+    if fused and any(np.abs(ids).max(initial=0) > np.iinfo(np.int32).max
+                     for _, ids in parts):
+        fused = False
+    if fused:
+        import jax.numpy as jnp
+
+        from repro.kernels import ops as kops
+
+        run_s = jnp.full((nq, k), jnp.inf, jnp.float32)
+        run_i = jnp.full((nq, k), -1, jnp.int32)
+        for sc, ids in parts:
+            run_s, run_i = kops.running_topk_update(
+                jnp.asarray(np.asarray(sc, np.float32)),
+                jnp.asarray(np.asarray(ids, np.int32)),
+                run_s, run_i, k=k,
+            )
+        scores = np.asarray(run_s)
+        out_i = np.asarray(run_i).astype(np.int64)
+    else:
+        heap = TopKHeap.empty(nq, k)
+        rows = np.arange(nq)
+        for sc, ids in parts:
+            heap.merge_rows(rows, sc, ids)
+        scores, out_i = heap.scores, heap.ids
+    out_i = out_i.copy()
+    out_i[~np.isfinite(scores)] = -1
+    return scores, out_i

@@ -46,6 +46,18 @@ The queue/deadline/shed logic is clock-agnostic
   execution for real (per-replica locks, atomic EWMA accounting,
   wall-clock hedging).
 
+Mutable data plane
+------------------
+Servers serve a shared :class:`repro.core.SegmentedIndex` (sealed
+segments + delta buffer + tombstones; a plain ``IVFIndex`` is wrapped as
+the one-sealed-segment special case). ``upsert()``/``delete()`` are
+exposed at every level — ``HarmonyServer``, ``ReplicaFleet``,
+``ServingFrontend`` — and are visible to the next dispatched batch;
+:class:`repro.serve.compactor.Compactor` seals the delta / merges
+segments in the background and hot-swaps the result into all live
+replicas with zero dropped queries (see ``docs/ARCHITECTURE.md``,
+"Data-plane lifecycle").
+
 The bucket ladder
 -----------------
 jit recompiles per static shape, while the scheduler's adaptive batches
@@ -58,6 +70,7 @@ and merged host-side.
 """
 
 from repro.serve.clock import Clock, MonotonicClock, VirtualClock
+from repro.serve.compactor import CompactionConfig, Compactor
 from repro.serve.engine import HarmonyServer, ServeStats
 from repro.serve.executor import ExecutorConfig, SpmdExecutor
 from repro.serve.fleet import Replica, ReplicaFleet, ReplicaSpec, gini
@@ -75,6 +88,8 @@ from repro.serve.scheduler import (
 __all__ = [
     "HarmonyServer",
     "ServeStats",
+    "Compactor",
+    "CompactionConfig",
     "ExecutorConfig",
     "SpmdExecutor",
     "Clock",

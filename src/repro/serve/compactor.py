@@ -1,0 +1,228 @@
+"""Background compaction for the mutable segmented data plane.
+
+The :class:`repro.core.SegmentedIndex` absorbs writes into a small
+append-only delta buffer and tombstone bitmaps; left alone, the delta's
+brute-force scan and the dead rows' wasted residency would slowly tax
+every query. The :class:`Compactor` keeps both bounded, off the serving
+path:
+
+* **seal** — when the delta reaches ``delta_threshold`` live rows, seal
+  it into a new sealed segment (k-means + pack, the expensive step, runs
+  without holding the data-plane lock; writes that land meanwhile are
+  journaled and replayed at commit);
+* **merge** — when the sealed segment count exceeds ``max_segments`` or
+  the tombstoned fraction exceeds ``max_dead_fraction``, re-seal *all*
+  live rows into one fresh segment (dropping dead rows and resetting the
+  tombstone bitmaps). A full merge is bit-identical to ``build_ivf``
+  over the live set — recall is exactly a from-scratch rebuild's.
+
+Swap protocol (zero dropped queries):
+
+1. ``begin_compaction`` snapshots the rows to re-seal and starts the
+   write journal — serving continues on the old segments;
+2. ``seal`` builds the new segment(s) — long, lock-free;
+3. every live replica ``prepare_segments`` — plans/corpora (and warmed
+   device executors for spmd replicas) are built into a staging area, so
+   the swap itself is O(1);
+4. ``commit_compaction`` atomically installs the new segment set, replays
+   the journal, and bumps the generation;
+5. every live replica ``adopt``\\ s the new generation (a replica that
+   missed this call self-heals on its next batch).
+
+In-flight batches keep searching their snapshot throughout — a query
+admitted at any point during 1–5 is answered, exactly, by whichever
+generation its batch snapshotted.
+
+>>> import numpy as np
+>>> from repro.config import HarmonyConfig
+>>> from repro.core import SegmentedIndex
+>>> from repro.serve import HarmonyServer
+>>> from repro.serve.compactor import CompactionConfig, Compactor
+>>> rng = np.random.default_rng(0)
+>>> cfg = HarmonyConfig(dim=8, nlist=4, nprobe=4, topk=3, kmeans_iters=2)
+>>> data = SegmentedIndex.build(
+...     rng.standard_normal((128, 8)).astype(np.float32), cfg)
+>>> srv = HarmonyServer(data, n_nodes=2)
+>>> comp = Compactor(data, srv, CompactionConfig(delta_threshold=4))
+>>> srv.upsert(np.arange(128, 134), rng.standard_normal((6, 8)))
+>>> event = comp.maybe_compact()
+>>> event["reason"], event["generation"], data.delta_len, data.n_segments
+('delta_full', 1, 0, 2)
+>>> int(srv.search_batch(data.segments[-1].index.x[:1], k=1).ids[0, 0]) >= 128
+True
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+import warnings
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+from repro.core import SegmentedIndex
+
+
+@dataclass(frozen=True)
+class CompactionConfig:
+    """Compaction policy knobs.
+
+    ``delta_threshold`` — live delta rows that trigger a seal;
+    ``max_segments`` — sealed segment count that triggers a full merge;
+    ``max_dead_fraction`` — tombstoned fraction of sealed rows that
+    triggers a full merge; ``poll_s`` — background thread poll interval
+    (seconds)."""
+
+    delta_threshold: int = 1024
+    max_segments: int = 4
+    max_dead_fraction: float = 0.25
+    poll_s: float = 0.05
+
+
+class Compactor:
+    """Seals/merges a :class:`~repro.core.SegmentedIndex` and hot-swaps
+    the result into live replicas.
+
+    ``servers`` is the set of replicas to prepare/adopt around each
+    commit: a single ``HarmonyServer``, a
+    :class:`repro.serve.fleet.ReplicaFleet` (its *live* servers are
+    re-resolved on every cycle, so replicas that fail or join mid-trace
+    are handled), an explicit sequence of servers, or ``None`` (replicas
+    then adopt lazily on their next batch). Use :meth:`maybe_compact`
+    from a scheduler hook (deterministic / virtual-clock harnesses) or
+    :meth:`start` for a real background thread (the live front-end).
+    ``events`` records one dict per completed compaction."""
+
+    def __init__(
+        self,
+        data: SegmentedIndex,
+        servers=None,
+        cfg: Optional[CompactionConfig] = None,
+    ):
+        self.data = data
+        self.cfg = cfg or CompactionConfig()
+        self._servers_arg = servers
+        self.events: List[Dict] = []
+        self.errors: List[str] = []         # failed background cycles
+        self._op_mu = threading.Lock()      # one compaction cycle at a time
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------- targets
+    def _servers(self) -> Sequence:
+        s = self._servers_arg
+        if s is None:
+            return ()
+        if hasattr(s, "live_servers"):          # ReplicaFleet
+            return s.live_servers()
+        if hasattr(s, "prepare_segments"):      # single HarmonyServer
+            return (s,)
+        return tuple(s)
+
+    # -------------------------------------------------------------- policy
+    def should_compact(self) -> Optional[str]:
+        """Why a compaction is due now, or None. ``"delta_full"`` seals
+        the delta; ``"too_many_segments"``/``"dead_heavy"`` full-merge."""
+        cfg = self.cfg
+        if self.data.n_segments > cfg.max_segments:
+            return "too_many_segments"
+        sealed = sum(s.nb for s in self.data.segments)
+        dead = sum(self.data.dead_count_by_segment().values())
+        if sealed and dead / sealed > cfg.max_dead_fraction:
+            return "dead_heavy"
+        if self.data.delta_len >= cfg.delta_threshold:
+            # sealing the delta would push the segment count over the
+            # bound anyway: merge instead of seal-then-merge
+            if self.data.n_segments >= cfg.max_segments:
+                return "too_many_segments"
+            return "delta_full"
+        return None
+
+    # ------------------------------------------------------------- cycles
+    def run_once(self, merge_all: bool = False, reason: str = "manual") -> Dict:
+        """One full begin → seal → prepare → commit → adopt cycle.
+        Serving is never paused; a concurrent cycle is waited out (the
+        data plane itself raises only if ``begin_compaction`` races a
+        non-Compactor caller)."""
+        with self._op_mu:
+            return self._run_once_locked(merge_all, reason)
+
+    def _run_once_locked(self, merge_all: bool, reason: str) -> Dict:
+        t0 = time.perf_counter()
+        plan = self.data.begin_compaction(merge_all=merge_all)
+        try:
+            segments = self.data.seal(plan)
+            for srv in self._servers():
+                srv.prepare_segments(segments)
+        except BaseException:
+            self.data.abort_compaction()
+            raise
+        generation = self.data.commit_compaction(plan, segments)
+        for srv in self._servers():
+            srv.adopt()
+        event = {
+            "reason": reason,
+            "generation": generation,
+            "merge_all": merge_all,
+            "sealed_rows": int(plan.ids.size),
+            "merged_segments": len(plan.merge_seg_ids),
+            "carried_segments": len(plan.carry_seg_ids),
+            "new_segments": len(segments),
+            "segments_after": self.data.n_segments,
+            "wall_s": time.perf_counter() - t0,
+        }
+        self.events.append(event)
+        return event
+
+    def maybe_compact(self) -> Optional[Dict]:
+        """Run one cycle if the policy says so (no-op otherwise). Safe to
+        call from scheduler hooks at any frequency. The policy is
+        re-evaluated *after* acquiring the cycle lock — a call that
+        queued behind another cycle must not execute that cycle's stale
+        decision (e.g. a second full merge of an already-merged plane)."""
+        if self.should_compact() is None:       # cheap pre-check, no lock
+            return None
+        with self._op_mu:
+            reason = self.should_compact()
+            if reason is None:
+                return None
+            return self._run_once_locked(
+                merge_all=(reason != "delta_full"), reason=reason
+            )
+
+    # ---------------------------------------------------------- background
+    def start(self) -> "Compactor":
+        """Start the background thread (idempotent); pair with
+        :meth:`stop` or use as a context manager."""
+        if self._thread is None or not self._thread.is_alive():
+            self._stop.clear()
+            self._thread = threading.Thread(
+                target=self._loop, name="harmony-compactor", daemon=True
+            )
+            self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                self.maybe_compact()
+            except Exception as e:      # noqa: BLE001 - must not die silently
+                # a failed cycle (seal/prepare/commit error) is recorded
+                # and surfaced, never swallowed — the loop keeps serving
+                # the compaction policy, but an operator can see why the
+                # delta is growing
+                self.errors.append(repr(e))
+                warnings.warn(f"background compaction failed: {e!r}")
+            self._stop.wait(self.cfg.poll_s)
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=30.0)
+            self._thread = None
+
+    def __enter__(self) -> "Compactor":
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.stop()

@@ -7,16 +7,32 @@ HARMONY staged engine, and returns per-request top-K. Integration points:
 
 * **load-aware re-planning**: a sliding workload sample (recent probes)
   periodically refreshes the plan via the §4.2 cost model;
-* **elastic**: node failures trigger ``replan_on_failure`` — results are
+* **elastic**: node failures trigger a survivor re-plan — results are
   unchanged, capacity shrinks;
 * **straggler hedging**: per-visit deadlines re-issue work to peers
   (``HedgingExecutor``);
 * results cache the paper's stats (pruning ratios, per-shard load) for
   the benchmark harnesses.
+
+Mutable data plane (PR 5): the server no longer owns one frozen
+``IVFIndex`` — it serves a :class:`repro.core.SegmentedIndex` (sealed
+segments + delta buffer + tombstones; a plain ``IVFIndex`` is wrapped as
+the one-sealed-segment special case). Per segment the server derives a
+cost-model plan, a host ``ShardedCorpus``, and (lazily, for the spmd
+backend) a device-resident :class:`~repro.serve.executor.SpmdExecutor`;
+a batch searches every sealed segment (tombstone-masked) plus a
+brute-force delta scan and merges the per-segment top-Ks — through the
+fused ``running_topk_update`` kernel on the spmd path. Derived state is
+keyed by segment id and adopted per data-plane *generation*: a
+compaction commit bumps the generation and the server hot-swaps to the
+new segment set on its next batch (or eagerly via
+:class:`repro.serve.compactor.Compactor`, which pre-builds the derived
+state off the serving path so the swap is O(1)).
 """
 
 from __future__ import annotations
 
+import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -26,14 +42,18 @@ import numpy as np
 
 from repro.config import HarmonyConfig
 from repro.core import (
-    IVFIndex,
-    ShardedCorpus,
+    DataSnapshot,
+    Segment,
+    SegmentedIndex,
     assign_queries,
+    delta_topk,
     harmony_search,
+    merge_topk,
     plan_search,
     preassign,
 )
-from repro.runtime import ClusterState, replan_on_failure
+from repro.core.types import SearchResult
+from repro.runtime import ClusterState
 
 
 @dataclass
@@ -56,6 +76,11 @@ class ServeStats:
     latencies_ms: List[float] = field(default_factory=list)  # per batch (ms)
 
     spmd_batches: int = 0            # batches served by the device executor
+
+    # --- mutable-data-plane accounting
+    upserts: int = 0                 # vector rows upserted
+    deletes: int = 0                 # delete calls' id rows
+    generation_swaps: int = 0        # data-plane generations adopted
 
     # --- admission-controlled scheduler accounting (repro.serve.scheduler)
     offered: int = 0                 # requests submitted to admission control
@@ -112,6 +137,9 @@ class ServeStats:
             "spmd_batches": self.spmd_batches,
             "queries": self.queries,
             "replans": self.replans,
+            "upserts": self.upserts,
+            "deletes": self.deletes,
+            "generation_swaps": self.generation_swaps,
             "offered": self.offered,
             "admitted": self.admitted,
             "shed": self.shed,
@@ -127,14 +155,42 @@ class ServeStats:
         }
 
 
+@dataclass
+class _SegmentState:
+    """Per-(server, sealed segment) derived serving state."""
+
+    segment: Segment
+    decision: object                 # PlanDecision for this segment
+    corpus: object                   # ShardedCorpus (host engine layout)
+    executor: object = None          # SpmdExecutor, built lazily (spmd)
+
+    @property
+    def int32_ids(self) -> bool:
+        """Do this segment's external ids fit the device pipeline's int32
+        id carrier? Cached — segments are immutable. A segment with
+        larger ids is served by the host engine even under the spmd
+        backend (silent id wraparound is never acceptable)."""
+        cached = self.__dict__.get("_int32_ids")
+        if cached is None:
+            ids = self.segment.index.ids
+            cached = bool(
+                np.abs(ids).max(initial=0) <= np.iinfo(np.int32).max
+            )
+            self.__dict__["_int32_ids"] = cached
+        return cached
+
+
 class HarmonyServer:
     """Single-process serving engine over the HARMONY core.
 
-    Owns one partition plan (cost-model chosen, refreshed on workload
-    drift or node failure), a simulated cluster of ``n_nodes``, and the
-    backend switch between the host numpy engine and the device-resident
-    SPMD executor. One server = one replica; stack several behind a
-    :class:`repro.serve.fleet.ReplicaFleet` to scale out.
+    Owns the shared :class:`repro.core.SegmentedIndex` data plane (a
+    plain ``IVFIndex`` is wrapped as one sealed segment), per-segment
+    plans/corpora/executors derived for its simulated cluster of
+    ``n_nodes``, and the backend switch between the host numpy engine
+    and the device-resident SPMD executor. One server = one replica;
+    stack several behind a :class:`repro.serve.fleet.ReplicaFleet` to
+    scale out — replicas then share the *same* data plane object, so an
+    ``upsert``/``delete`` on any surface is visible fleet-wide.
 
     >>> import numpy as np
     >>> from repro.config import HarmonyConfig
@@ -151,11 +207,17 @@ class HarmonyServer:
     True
     >>> srv.stats.batches, srv.stats.queries
     (1, 4)
+    >>> srv.upsert([999], x[:1] + 10.0)         # streaming write...
+    >>> n = srv.delete([0])                     # ...and a tombstone
+    >>> srv.data.delta_len, n
+    (1, 1)
+    >>> int(srv.search_batch(x[:1] + 10.0, k=1).ids[0, 0])  # reachable now
+    999
     """
 
     def __init__(
         self,
-        index: IVFIndex,
+        index,
         n_nodes: int,
         cfg: Optional[HarmonyConfig] = None,
         replan_every: int = 0,          # batches between plan refreshes (0=off)
@@ -164,63 +226,202 @@ class HarmonyServer:
         executor_cfg=None,              # ExecutorConfig for the spmd backend
     ):
         assert backend in ("host", "spmd"), backend
-        self.index = index
-        self.cfg = cfg or index.cfg
+        self.data: SegmentedIndex = (
+            index if isinstance(index, SegmentedIndex)
+            else SegmentedIndex.from_static(index)
+        )
+        self.cfg = cfg or self.data.cfg
         self.cluster = ClusterState.fresh(n_nodes)
         self.replan_every = replan_every
         self.backend = backend
         self._executor_cfg = executor_cfg
-        self._executor = None           # built lazily on first spmd batch
         self._recent_probes: Deque[np.ndarray] = deque(maxlen=workload_window)
         self.stats = ServeStats()
-        self._plan_decision, self.corpus = self._plan(None)
+        # per-segment derived state, adopted per data-plane generation
+        self._dp_mu = threading.Lock()
+        self._seg_states: Dict[int, _SegmentState] = {}
+        self._staged: Dict[int, _SegmentState] = {}
+        self._generation = -1
+        self._plan_decision = None
+        self._sync(self.data.snapshot())
+
+    # ------------------------------------------------------------- data plane
+    @property
+    def index(self) -> SegmentedIndex:
+        """The (shared) data plane — kept under the historical name so
+        ``server.index.nlist``-style call sites keep working."""
+        return self.data
+
+    @property
+    def generation(self) -> int:
+        """Data-plane generation this server has adopted."""
+        return self._generation
+
+    def upsert(self, ids, vecs) -> None:
+        """Insert-or-replace vectors under stable external ids (visible to
+        the next dispatched batch; thread-safe against in-flight ones)."""
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        self.data.upsert(ids, vecs)
+        self.stats.upserts += len(ids)
+
+    def delete(self, ids) -> int:
+        """Tombstone external ids; returns how many were live."""
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        removed = self.data.delete(ids)
+        self.stats.deletes += len(ids)
+        return removed
+
+    @staticmethod
+    def _primary(segments) -> Optional[Segment]:
+        return max(segments, key=lambda s: (s.nb, -s.seg_id), default=None)
+
+    def _build_state(self, seg: Segment,
+                     probes_sample: Optional[np.ndarray] = None) -> _SegmentState:
+        decision = plan_search(
+            seg.index, self.cluster.n_live, self.cfg.replace(
+                nlist=seg.index.nlist,
+                nprobe=min(self.cfg.nprobe, seg.index.nlist),
+            ),
+            probes_sample=probes_sample,
+        )
+        return _SegmentState(
+            segment=seg, decision=decision,
+            corpus=preassign(seg.index, decision.plan),
+        )
+
+    def _executor_for(self, st: _SegmentState):
+        if st.executor is None:
+            from repro.serve.executor import SpmdExecutor
+
+            st.executor = SpmdExecutor(st.segment.index, self._executor_cfg)
+        return st.executor
+
+    def _sync(self, snap: DataSnapshot) -> bool:
+        """Adopt a data-plane snapshot: build (or promote pre-staged)
+        derived state for new segments, drop state of retired ones. The
+        compile caches of retired segments' executors die with them —
+        the cache is effectively keyed by (segment id, generation).
+
+        Generations only move forward: a thread carrying a snapshot older
+        than the adopted generation must NOT roll the server back (it
+        would destroy the compactor's freshly prepared state mid-swap) —
+        it returns False and the caller re-snapshots."""
+        with self._dp_mu:
+            if snap.generation < self._generation:
+                return False
+            for seg in snap.segments:
+                if seg.seg_id not in self._seg_states:
+                    st = self._staged.pop(seg.seg_id, None)
+                    if st is None:
+                        st = self._build_state(seg)
+                    self._seg_states[seg.seg_id] = st
+            keep = {s.seg_id for s in snap.segments}
+            for sid in list(self._seg_states):
+                if sid not in keep:
+                    del self._seg_states[sid]
+            self._staged = {s: st for s, st in self._staged.items() if s in keep}
+            if snap.generation != self._generation:
+                if self._generation >= 0:
+                    self.stats.generation_swaps += 1
+                self._generation = snap.generation
+            primary = self._primary(snap.segments)
+            if primary is not None:
+                self._plan_decision = self._seg_states[primary.seg_id].decision
+            return True
+
+    def prepare_segments(self, segments) -> None:
+        """Pre-build derived state for segments about to be committed (the
+        compactor calls this *before* the swap, off the serving path, so
+        adoption is O(1) and read p99 stays flat through a compaction)."""
+        for seg in segments:
+            with self._dp_mu:
+                known = seg.seg_id in self._seg_states or seg.seg_id in self._staged
+            if known:
+                continue
+            st = self._build_state(seg)
+            if self.backend == "spmd" and st.int32_ids:
+                self._executor_for(st).warmup(k=self.cfg.topk)
+            with self._dp_mu:
+                self._staged[seg.seg_id] = st
+
+    def adopt(self) -> None:
+        """Hot-swap to the data plane's current generation now (otherwise
+        the next batch adopts lazily)."""
+        self._sync(self.data.snapshot())
+
+    def warmup_executors(self, k: Optional[int] = None) -> None:
+        """Pre-compile every sealed segment's device executor bucket
+        ladder (so no in-trace dispatch pays a jit compile)."""
+        snap = self.data.snapshot()
+        if snap.generation != self._generation:
+            self._sync(snap)
+        with self._dp_mu:
+            states = [self._seg_states[s.seg_id] for s in snap.segments]
+        for st in states:
+            if st.int32_ids:
+                self._executor_for(st).warmup(k=k)
 
     @property
     def executor(self):
-        """Lazily-built device-resident executor (the "spmd" backend).
-
-        Self-contained w.r.t. re-planning: the executor keeps its own
-        mesh-shaped corpus packing, so host-plan refreshes (skew drift,
-        fail_node) never force a corpus re-upload — results are
-        plan-invariant by the exactness guarantee."""
-        if self._executor is None:
-            from repro.serve.executor import SpmdExecutor
-
-            self._executor = SpmdExecutor(self.index, self._executor_cfg)
-        return self._executor
+        """Device executor of the primary (largest) sealed segment —
+        back-compat accessor for the single-segment case."""
+        with self._dp_mu:
+            primary = self._primary([st.segment for st in self._seg_states.values()])
+            if primary is None:
+                raise RuntimeError("no sealed segments (all data in delta "
+                                   "or the corpus is empty)")
+            st = self._seg_states[primary.seg_id]
+        return self._executor_for(st)
 
     # ------------------------------------------------------------- planning
-    def _plan(self, probes_sample):
-        decision = plan_search(
-            self.index, self.cluster.n_live, self.cfg, probes_sample=probes_sample
-        )
-        return decision, preassign(self.index, decision.plan)
-
-    def refresh_plan(self):
-        sample = (
+    def _window_sample(self) -> Optional[np.ndarray]:
+        return (
             np.concatenate(list(self._recent_probes), axis=0)
             if self._recent_probes
             else None
         )
-        self._plan_decision, self.corpus = self._plan(sample)
+
+    def refresh_plan(self):
+        """Re-plan every sealed segment for the current live node set (the
+        workload sample steers the primary segment's assignment; device
+        executors keep their own packing and stay resident)."""
+        sample = self._window_sample()
+        with self._dp_mu:
+            states = list(self._seg_states.values())
+            primary = self._primary([st.segment for st in states])
+            for st in states:
+                st.decision = plan_search(
+                    st.segment.index, self.cluster.n_live, self.cfg.replace(
+                        nlist=st.segment.index.nlist,
+                        nprobe=min(self.cfg.nprobe, st.segment.index.nlist),
+                    ),
+                    probes_sample=sample if st.segment is primary else None,
+                )
+                st.corpus = preassign(st.segment.index, st.decision.plan)
+                if st.segment is primary:
+                    self._plan_decision = st.decision
         self.stats.replans += 1
 
     @property
     def plan(self):
         return self._plan_decision.plan
 
+    @property
+    def corpus(self):
+        """Host-engine corpus of the primary sealed segment."""
+        with self._dp_mu:
+            primary = self._primary([st.segment for st in self._seg_states.values()])
+            if primary is None:
+                raise RuntimeError("no sealed segments (all data in delta "
+                                   "or the corpus is empty)")
+            return self._seg_states[primary.seg_id].corpus
+
     # -------------------------------------------------------------- elastic
     def fail_node(self, node: int):
         self.cluster.fail(node)
-        sample = (
-            np.concatenate(list(self._recent_probes), axis=0)
-            if self._recent_probes
-            else None
-        )
-        self._plan_decision, self.corpus = replan_on_failure(
-            self.index, self.cluster, self.cfg, sample
-        )
-        self.stats.replans += 1
+        if self.cluster.n_live == 0:
+            raise RuntimeError("no live nodes")
+        self.refresh_plan()
 
     def join_node(self):
         self.cluster.join()
@@ -235,19 +436,75 @@ class HarmonyServer:
     ):
         """One batch through the engine; records workload + stats.
 
-        ``backend="host"`` runs the staged numpy engine (the exactness
-        oracle); ``backend="spmd"`` dispatches into the device-resident
-        executor. Results are identical up to floating-point tie order."""
+        Searches every sealed segment of the current data-plane snapshot
+        (tombstone-masked, ``backend="host"`` via the staged numpy engine
+        or ``backend="spmd"`` via the device-resident executor), scans
+        the delta buffer brute-force, and merges the per-part top-Ks —
+        via the fused ``running_topk_update`` kernel on the spmd path.
+        Results are identical across backends up to floating-point tie
+        order. The snapshot is taken once per batch: a concurrent
+        upsert/delete/compaction never tears an in-flight batch."""
         backend = backend or self.backend
+        k = k or self.cfg.topk
         t0 = time.perf_counter()
-        probes = assign_queries(self.index, queries)
-        self._recent_probes.append(probes)
-        if backend == "spmd":
-            res = self.executor.search_batch(queries, k=k, probes=probes)
-            self.stats.spmd_batches += 1
+        queries = np.asarray(queries, np.float32)
+        while True:
+            snap = self.data.snapshot()
+            if snap.generation != self._generation:
+                self._sync(snap)
+            with self._dp_mu:
+                if all(s.seg_id in self._seg_states for s in snap.segments):
+                    states = [self._seg_states[s.seg_id] for s in snap.segments]
+                    break
+            # lost a race with a concurrent adopt(): our snapshot's
+            # segments were retired while we read it — generations only
+            # move forward, so a fresh snapshot converges immediately
+        primary = self._primary(snap.segments)
+        seg_results = []
+        for st in states:
+            seg = st.segment
+            probes = assign_queries(seg.index, queries)
+            if seg is primary:
+                self._recent_probes.append(probes)
+            dead = snap.dead_rows[seg.seg_id]
+            dead_arg = dead if dead.any() else None
+            if backend == "spmd" and st.int32_ids:
+                res = self._executor_for(st).search_batch(
+                    queries, k=k, probes=probes, dead_rows=dead_arg
+                )
+            else:
+                res = harmony_search(
+                    seg.index, st.corpus, queries, k=k, dead_rows=dead_arg
+                )
+            seg_results.append(res)
+        parts = [(r.scores, r.ids) for r in seg_results]
+        if snap.delta_ids.size:
+            parts.append(delta_topk(
+                snap.delta_x, snap.delta_ids, snap.delta_live,
+                queries, k, self.cfg.metric,
+            ))
+        if len(parts) == 1 and seg_results:
+            # one sealed segment, empty delta — the static special case:
+            # return the engine's result (rich stats) unmerged
+            res = seg_results[0]
+            res.ids[~np.isfinite(res.scores)] = -1
         else:
-            res = harmony_search(self.index, self.corpus, queries, k=k)
+            nq = queries.shape[0]
+            if not parts:
+                scores = np.full((nq, k), np.inf, np.float32)
+                ids = np.full((nq, k), -1, np.int64)
+            else:
+                scores, ids = merge_topk(parts, k, fused=(backend == "spmd"))
+            res = SearchResult(ids=ids, scores=scores, stats={
+                "backend": backend,
+                "segments": len(seg_results),
+                "delta_candidates": int(snap.delta_live.sum()),
+                "generation": snap.generation,
+            })
         dt = time.perf_counter() - t0
+        res.stats["wall_s"] = dt
+        if backend == "spmd":
+            self.stats.spmd_batches += 1
         self.stats.batches += 1
         self.stats.queries += queries.shape[0]
         self.stats.wall_s += dt
@@ -272,7 +529,6 @@ class HarmonyServer:
         scalar for the whole batch or a per-row sequence, non-decreasing
         across the stream). Without it every request arrives at t=0 and
         queue-wait/deadline statistics degenerate."""
-        from repro.core.types import SearchResult
         from repro.serve.scheduler import SchedulerConfig, ServingScheduler
 
         sched_cfg = sched or SchedulerConfig()   # unbounded queue by default

@@ -206,10 +206,16 @@ class SpmdExecutor:
                 return b
         return ladder[-1]
 
-    def _gather_rows(self, probes: np.ndarray):
+    def _gather_rows(self, probes: np.ndarray,
+                     dead_rows: Optional[np.ndarray] = None):
         """Per-shard union of probed clusters' resident row ranges, padded
         to the smallest cap bucket. Returns (rows [V, cap_b] i32, cap_b);
-        (None, 0) when the batch probes no resident rows."""
+        (None, 0) when the batch probes no resident rows.
+
+        ``dead_rows`` (bool [NB] over *packed* index rows — the mutable
+        data plane's tombstones) drops dead rows from the gather table, so
+        deletes cost zero device work and never inflate K: masking happens
+        in the host-side row union, the compiled step is untouched."""
         V = self._base_scfg.v_shards
         uniq = np.unique(probes) if probes.size else np.zeros(0, np.int64)
         uniq = uniq[uniq >= 0]
@@ -218,8 +224,14 @@ class SpmdExecutor:
         for c in uniq:
             v, lo, hi = self.corpus.cluster_slices[int(c)]
             if hi > lo:
-                per_shard[v].append(np.arange(lo, hi, dtype=np.int32))
-                counts[v] += hi - lo
+                r = np.arange(lo, hi, dtype=np.int32)
+                if dead_rows is not None:
+                    # shard row lo+j of cluster c is packed row plo+j
+                    plo, phi = self.index.cluster_rows(int(c))
+                    r = r[~dead_rows[plo:phi]]
+                if r.size:
+                    per_shard[v].append(r)
+                    counts[v] += r.size
         need = int(counts.max()) if len(uniq) else 0
         if need == 0:
             return None, 0
@@ -283,8 +295,13 @@ class SpmdExecutor:
         k: Optional[int] = None,
         nprobe: Optional[int] = None,
         probes: Optional[np.ndarray] = None,
+        dead_rows: Optional[np.ndarray] = None,
     ) -> SearchResult:
-        """Top-K for one batch through the device-resident pipeline."""
+        """Top-K for one batch through the device-resident pipeline.
+
+        ``dead_rows`` applies the segmented data plane's tombstones (see
+        :meth:`_gather_rows`); the τ prewarm excludes the same rows so
+        pruning stays exact over the live set."""
         k = k or self.k
         queries = np.asarray(queries, np.float32)
         if queries.ndim == 1:
@@ -297,6 +314,7 @@ class SpmdExecutor:
                 self.search_batch(
                     queries[lo : lo + max_qb], k=k, nprobe=nprobe,
                     probes=None if probes is None else probes[lo : lo + max_qb],
+                    dead_rows=dead_rows,
                 )
                 for lo in range(0, nq, max_qb)
             ]
@@ -323,7 +341,7 @@ class SpmdExecutor:
                 probes = np.zeros((nq, 0), np.int32)
             else:
                 probes = assign_queries(self.index, queries, nprobe)
-        rows, cap_b = self._gather_rows(probes)
+        rows, cap_b = self._gather_rows(probes, dead_rows)
         if cap_b == 0:
             dt = time.perf_counter() - t0
             self.dispatches += 1
@@ -340,7 +358,8 @@ class SpmdExecutor:
             )
         tau0 = (
             prewarm_tau(self.index, queries, probes, k,
-                        self.index.cfg.prewarm_samples, self.metric)
+                        self.index.cfg.prewarm_samples, self.metric,
+                        dead_rows=dead_rows)
             if self.prune
             else np.full((nq,), np.inf, np.float32)
         )

@@ -192,8 +192,18 @@ class ReplicaFleet(DispatchTarget):
             replicas = [ReplicaSpec() for _ in range(replicas)]
         if not replicas:
             raise ValueError("a fleet needs at least one replica")
-        self.index = index
-        self.cfg = cfg or index.cfg
+        # one shared mutable data plane for the whole fleet: every replica
+        # (including ones that join mid-trace) serves the same
+        # SegmentedIndex object, so upserts/deletes/compaction commits are
+        # visible fleet-wide and a joiner adopts the *current* segment
+        # generation, never the boot-time index
+        from repro.core import SegmentedIndex
+
+        self.index = (
+            index if isinstance(index, SegmentedIndex)
+            else SegmentedIndex.from_static(index)
+        )
+        self.cfg = cfg or self.index.cfg
         self.routing = routing
         self.ewma_alpha = ewma_alpha
         self.service_time_fn = service_time_fn
@@ -244,7 +254,37 @@ class ReplicaFleet(DispatchTarget):
 
     def _warmup_replica(self, rep: Replica) -> None:
         if (self._backend or rep.server.backend) == "spmd":
-            rep.server.executor.warmup(k=self._k)
+            rep.server.warmup_executors(k=self._k)
+
+    # ------------------------------------------------- mutable data plane
+    @property
+    def data(self):
+        """The fleet-shared :class:`repro.core.SegmentedIndex`."""
+        return self.index
+
+    def upsert(self, ids, vecs) -> None:
+        """Insert-or-replace vectors fleet-wide (one write to the shared
+        data plane — every replica's next batch sees it)."""
+        import numpy as _np
+
+        ids = _np.asarray(ids, _np.int64).reshape(-1)
+        self.index.upsert(ids, vecs)
+        with self._mu:
+            self.stats.upserts += len(ids)
+
+    def delete(self, ids) -> int:
+        """Tombstone external ids fleet-wide; returns how many were live."""
+        import numpy as _np
+
+        ids = _np.asarray(ids, _np.int64).reshape(-1)
+        removed = self.index.delete(ids)
+        with self._mu:
+            self.stats.deletes += len(ids)
+        return removed
+
+    def live_servers(self):
+        """Servers of the live replicas (the compactor's swap targets)."""
+        return [self.replicas[int(i)].server for i in self.cluster.live_ids()]
 
     def next_free_s(self) -> float:
         live = self.cluster.live_ids()
@@ -479,7 +519,10 @@ class ReplicaFleet(DispatchTarget):
         routable, and the routing state (replica list, hedge worker slot,
         live set) is updated atomically under the fleet lock — a
         concurrent wall-clock dispatch never sees a live replica without
-        its hedge worker."""
+        its hedge worker. The new server is constructed over the fleet's
+        *shared* data plane, so a joiner adopts the current segment
+        generation (upserts/deletes/compactions that happened mid-trace
+        included), never the boot-time index."""
         spec = spec or ReplicaSpec()
         rep = Replica(self._make_server(spec), spec)
         self._warmup_replica(rep)

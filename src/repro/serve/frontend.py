@@ -207,6 +207,19 @@ class ServingFrontend:
         (raises :class:`ShedError` if admission shed the request)."""
         return await asyncio.wrap_future(self.submit(query))
 
+    # ----------------------------------------------------------- mutation
+    def upsert(self, ids, vecs) -> None:
+        """Live streaming write: insert-or-replace vectors in the target's
+        (shared) data plane. Thread-safe against in-flight batches — a
+        dispatched batch keeps its snapshot; the write is visible to every
+        batch dispatched after this call returns."""
+        self.target.upsert(ids, vecs)
+
+    def delete(self, ids) -> int:
+        """Live streaming delete (tombstone); returns how many ids were
+        live. Same visibility contract as :meth:`upsert`."""
+        return self.target.delete(ids)
+
     # ----------------------------------------------------------- dispatcher
     def _due(self, now: float) -> Tuple[float, str]:
         """When may the queued requests dispatch, and why — the

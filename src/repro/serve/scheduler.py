@@ -170,6 +170,16 @@ class DispatchTarget:
         res, _ = self.execute(queries, k, clock.now(), batch_id)
         return res, clock.now()
 
+    # --- mutable-data-plane surface --------------------------------------
+    def upsert(self, ids, vecs) -> None:
+        """Insert-or-replace vectors in the target's data plane (visible
+        to the next dispatched batch)."""
+        raise NotImplementedError
+
+    def delete(self, ids) -> int:
+        """Tombstone external ids; returns how many were live."""
+        raise NotImplementedError
+
     # --- skew-adaptation surface -----------------------------------------
     def window_probes(self) -> Iterable[np.ndarray]:
         """Probe arrays of recently executed batches, newest first."""
@@ -233,10 +243,11 @@ class SingleServerTarget(DispatchTarget):
     def configure(self, cfg: SchedulerConfig, k: int) -> None:
         self._backend = cfg.backend
         if (cfg.backend or getattr(self.server, "backend", "host")) == "spmd":
-            # pre-compile the executor's bucket ladder so no in-trace
-            # dispatch charges a jit compile to the virtual clock (which
-            # would distort queue-wait/shed statistics by seconds)
-            self.server.executor.warmup(k=k)
+            # pre-compile the executors' bucket ladders (one per sealed
+            # segment) so no in-trace dispatch charges a jit compile to
+            # the virtual clock (which would distort queue-wait/shed
+            # statistics by seconds)
+            self.server.warmup_executors(k=k)
         if cfg.hedge_deadline_s > 0:
             self._hedge = HedgingExecutor(
                 workers=[self._exec_task] * self.server.cluster.n_nodes,
@@ -304,6 +315,13 @@ class SingleServerTarget(DispatchTarget):
             done_s = clock.now()
             self.busy_until = done_s
         return res, done_s
+
+    # --- mutable-data-plane surface --------------------------------------
+    def upsert(self, ids, vecs) -> None:
+        self.server.upsert(ids, vecs)
+
+    def delete(self, ids) -> int:
+        return self.server.delete(ids)
 
     # --- skew-adaptation surface -----------------------------------------
     def window_probes(self):

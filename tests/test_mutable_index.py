@@ -1,0 +1,393 @@
+"""Mutable segmented data plane: streaming upserts/deletes, tombstone
+masking, background compaction, zero-downtime swap, checkpoint restore.
+
+The exactness bar (ISSUE 5 acceptance): after N upserts + M deletes + a
+compaction cycle, segmented search matches a fresh ``build_ivf`` over
+the live set at equal recall settings, on both backends, with queries
+served continuously (zero shed attributable to the swap) in the
+virtual-clock harness. Brute-force comparisons use ``nprobe = nlist``
+(probe everything) so IVF search is exact and the oracle is clustering-
+independent."""
+
+import numpy as np
+import pytest
+
+from repro.config import HarmonyConfig
+from repro.core import SegmentedIndex, build_ivf
+from repro.core.pruning import exact_scores
+from repro.data import make_dataset
+from repro.serve import (
+    CompactionConfig,
+    Compactor,
+    HarmonyServer,
+    ReplicaFleet,
+    ReplicaSpec,
+    SchedulerConfig,
+    ServingScheduler,
+)
+from repro.serve.executor import ExecutorConfig
+
+DIM = 16
+TINY_EXEC = ExecutorConfig(qb_buckets=(8,), chunk=64, use_pallas=False)
+
+
+@pytest.fixture(scope="module")
+def anns():
+    ds = make_dataset(nb=600, dim=DIM, n_components=6, spread=0.6, seed=0)
+    cfg = HarmonyConfig(dim=DIM, nlist=8, nprobe=8, topk=5, kmeans_iters=3)
+    return ds, cfg
+
+
+def brute_topk(data: SegmentedIndex, q: np.ndarray, k: int):
+    """Ground truth: exact top-k over the live vector set."""
+    ids, x = data.live_vectors()
+    sc = exact_scores(x, q, data.cfg.metric)
+    order = np.argsort(sc, axis=1, kind="stable")[:, :k]
+    out_s = np.take_along_axis(sc, order, axis=1)
+    out_i = ids[order]
+    out_i[~np.isfinite(out_s)] = -1
+    return out_s, out_i
+
+
+def apply_writes(target, rng, ds, n_upsert=40, n_delete=25, id_base=10_000):
+    """A deterministic mixed write burst: fresh inserts, overwrites of
+    existing ids, and deletes (some of freshly written ids)."""
+    new_ids = np.arange(id_base, id_base + n_upsert)
+    target.upsert(new_ids, rng.standard_normal((n_upsert, DIM)).astype(np.float32))
+    overwrite = rng.choice(ds.x.shape[0], size=n_upsert // 2, replace=False)
+    target.upsert(overwrite,
+                  rng.standard_normal((len(overwrite), DIM)).astype(np.float32))
+    dele = np.concatenate([
+        rng.choice(ds.x.shape[0], size=n_delete, replace=False),
+        new_ids[:5],
+    ])
+    target.delete(dele)
+    return new_ids, dele
+
+
+# --------------------------------------------------------------- exactness
+
+
+@pytest.mark.parametrize("backend", ["host", "spmd"])
+def test_upsert_delete_compact_matches_fresh_build(anns, backend):
+    """The acceptance bar: writes + compaction, then segmented search ==
+    a from-scratch ``build_ivf`` over the live set, on both backends."""
+    ds, cfg = anns
+    rng = np.random.default_rng(42)
+    data = SegmentedIndex.build(ds.x, cfg)
+    srv = HarmonyServer(data, n_nodes=4, backend=backend,
+                        executor_cfg=TINY_EXEC)
+    q = (ds.x[:12] + 0.05 * rng.standard_normal((12, DIM))).astype(np.float32)
+
+    new_ids, dele = apply_writes(srv, rng, ds)
+
+    # pre-compaction: delta scan + tombstone masking already exact
+    res = srv.search_batch(q, k=5)
+    bs, bi = brute_topk(data, q, 5)
+    np.testing.assert_allclose(res.scores, bs, rtol=1e-3, atol=1e-3)
+    assert not np.isin(res.ids, dele).any()
+
+    # compact (seal then full merge) and compare against a fresh build
+    comp = Compactor(data, srv, CompactionConfig(delta_threshold=1))
+    ev = comp.maybe_compact()
+    assert ev is not None and data.generation >= 1
+    comp.run_once(merge_all=True, reason="test")
+    assert data.n_segments == 1 and data.delta_len == 0
+    assert srv.generation == data.generation
+
+    live_ids, live_x = data.live_vectors()
+    fresh = HarmonyServer(build_ivf(live_x, cfg), n_nodes=4, backend=backend,
+                          executor_cfg=TINY_EXEC)
+    res = srv.search_batch(q, k=5)
+    want = fresh.search_batch(q, k=5)
+    np.testing.assert_allclose(res.scores, want.scores, rtol=1e-3, atol=1e-3)
+    # fresh ids are live-set positions; map them to external ids
+    mapped = np.where(want.ids >= 0, live_ids[want.ids], -1)
+    same = (mapped == res.ids) | ~np.isfinite(res.scores)
+    assert same.mean() > 0.9          # identical modulo float tie order
+    # and both equal brute force (nprobe = nlist)
+    bs, _ = brute_topk(data, q, 5)
+    np.testing.assert_allclose(res.scores, bs, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("backend", ["host", "spmd"])
+def test_deleted_never_resurface_upserted_reachable(anns, backend):
+    ds, cfg = anns
+    rng = np.random.default_rng(7)
+    data = SegmentedIndex.build(ds.x, cfg)
+    srv = HarmonyServer(data, n_nodes=2, backend=backend,
+                        executor_cfg=TINY_EXEC)
+    new_vec = rng.standard_normal((1, DIM)).astype(np.float32)
+    srv.upsert([9999], new_vec)
+    srv.delete([0, 1, 2])
+    # across every lifecycle stage (delta, sealed, merged)...
+    comp = Compactor(data, srv, CompactionConfig())
+    for stage in ("delta", "sealed", "merged"):
+        res = srv.search_batch(np.concatenate([new_vec, ds.x[:3]]), k=5)
+        assert int(res.ids[0, 0]) == 9999          # exact hit, distance 0
+        assert res.scores[0, 0] == pytest.approx(0.0, abs=1e-5)
+        assert not np.isin(res.ids, [0, 1, 2]).any()
+        if stage == "delta":
+            comp.run_once(reason="seal")           # delta → sealed segment
+        elif stage == "sealed":
+            comp.run_once(merge_all=True, reason="merge")
+    assert data.n_segments == 1 and not data.has(0) and data.has(9999)
+
+
+def test_upsert_overwrites_old_version(anns):
+    """The newest version wins immediately — the sealed copy of an
+    overwritten id must never be returned."""
+    ds, cfg = anns
+    data = SegmentedIndex.build(ds.x, cfg)
+    srv = HarmonyServer(data, n_nodes=2)
+    old_vec = ds.x[5:6]
+    new_vec = (old_vec + 3.0).astype(np.float32)
+    srv.upsert([5], new_vec)
+    res = srv.search_batch(np.concatenate([old_vec, new_vec]), k=3)
+    # querying the OLD vector: id 5 may only appear with the NEW distance
+    hit = res.ids[0] == 5
+    if hit.any():
+        d_new = float(np.sum((old_vec - new_vec) ** 2))
+        assert res.scores[0][hit][0] == pytest.approx(d_new, rel=1e-3)
+    # querying the NEW vector: exact hit at distance 0
+    assert int(res.ids[1, 0]) == 5
+    assert res.scores[1, 0] == pytest.approx(0.0, abs=1e-5)
+
+
+# ------------------------------------------- continuous serving during swap
+
+
+def test_zero_downtime_swap_in_virtual_clock_harness(anns):
+    """Queries are served continuously through a mid-trace write burst +
+    full compaction: nothing shed, every result exact for the data state
+    its batch was dispatched against."""
+    ds, cfg = anns
+    rng = np.random.default_rng(3)
+    data = SegmentedIndex.build(ds.x, cfg)
+    srv = HarmonyServer(data, n_nodes=4)
+    comp = Compactor(data, srv, CompactionConfig(delta_threshold=1))
+    q = (ds.x[:64] + 0.05 * rng.standard_normal((64, DIM))).astype(np.float32)
+
+    pre_truth = brute_topk(data, q, 5)
+    mutated = {}
+
+    def hook(batch_idx, sched):
+        if batch_idx == 3:          # after batch 3 completes: write + swap
+            apply_writes(srv, rng, ds)
+            ev = comp.run_once(merge_all=True, reason="mid-trace")
+            assert ev["segments_after"] == 1
+            mutated["post_truth"] = brute_topk(data, q, 5)
+
+    sched = ServingScheduler(
+        srv, SchedulerConfig(max_batch=8, queue_capacity=0), k=5,
+        on_batch=hook,
+    )
+    results = sched.run_trace([(i * 1e-5, q[i]) for i in range(64)])
+    assert len(results) == 64 and srv.stats.shed == 0
+    assert srv.stats.generation_swaps >= 1
+    got = np.stack([r.scores for r in results])
+    # batches 0–3 (requests 0–31) saw the pre-write corpus; 4–7 the
+    # post-compaction one
+    np.testing.assert_allclose(got[:32], pre_truth[0][:32], rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(got[32:], mutated["post_truth"][0][32:],
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_background_compactor_thread_live_writes(anns):
+    """Real-thread compactor: writes stream in while batches are served;
+    the thread seals/merges in the background and the final state is
+    exact."""
+    ds, cfg = anns
+    rng = np.random.default_rng(11)
+    data = SegmentedIndex.build(ds.x, cfg)
+    srv = HarmonyServer(data, n_nodes=2)
+    q = ds.x[:8]
+    comp = Compactor(data, srv,
+                     CompactionConfig(delta_threshold=16, poll_s=0.005))
+    with comp:
+        for i in range(12):
+            srv.upsert(np.arange(20_000 + 8 * i, 20_000 + 8 * (i + 1)),
+                       rng.standard_normal((8, DIM)).astype(np.float32))
+            srv.delete([int(rng.integers(0, 600))])
+            srv.search_batch(q, k=5)
+    assert data.generation >= 1 and comp.events
+    res = srv.search_batch(q, k=5)
+    bs, _ = brute_topk(data, q, 5)
+    np.testing.assert_allclose(res.scores, bs, rtol=1e-3, atol=1e-3)
+
+
+# ------------------------------------------------------------- fleet churn
+
+
+def test_fleet_fail_mutate_join_gets_current_generation(anns):
+    """The membership-churn regression: a replica that joins after
+    fail → upsert/delete → compact serves the *current* generation, not
+    the boot-time index."""
+    ds, cfg = anns
+    rng = np.random.default_rng(5)
+    fleet = ReplicaFleet(build_ivf(ds.x, cfg), replicas=2, cfg=cfg,
+                         routing="least_loaded",
+                         service_time_fn=lambda r, n: n * 1e-3, seed=0)
+    comp = Compactor(fleet.data, fleet, CompactionConfig(delta_threshold=1))
+    q = ds.x[:48]
+
+    def churn(batch_idx, sched):
+        if batch_idx == 1:
+            fleet.fail_replica(1)
+            apply_writes(fleet, rng, ds)          # mutate through the fleet
+            comp.run_once(merge_all=True, reason="churn")
+        elif batch_idx == 3:
+            fleet.join_replica(ReplicaSpec())
+
+    sched = ServingScheduler(fleet, SchedulerConfig(max_batch=8), k=5,
+                             on_batch=churn)
+    results = sched.run_trace([(i * 1e-5, q[i]) for i in range(48)])
+    assert len(results) == 48 and fleet.stats.shed == 0
+    joiner = fleet.replicas[2].server
+    assert joiner.generation == fleet.data.generation >= 1
+    # the joiner serves the post-mutation corpus exactly
+    res = joiner.search_batch(q[:8], k=5)
+    bs, _ = brute_topk(fleet.data, q[:8], 5)
+    np.testing.assert_allclose(res.scores, bs, rtol=1e-3, atol=1e-3)
+    # and the post-churn trace results match the post-mutation truth
+    post = np.stack([r.scores for r in results[16:]])
+    bs_all, _ = brute_topk(fleet.data, q, 5)
+    np.testing.assert_allclose(post, bs_all[16:], rtol=1e-3, atol=1e-3)
+
+
+# ----------------------------------------------------------- checkpointing
+
+
+def test_checkpoint_roundtrip_search_identical(anns, tmp_path):
+    ds, cfg = anns
+    rng = np.random.default_rng(9)
+    from repro.checkpoint import (
+        Checkpointer,
+        load_segmented_index,
+        save_segmented_index,
+    )
+
+    data = SegmentedIndex.build(ds.x, cfg)
+    apply_writes(data, rng, ds)
+    data.compact_inline()                       # seal → 2 segments, gen 1
+    data.delete([40])                           # post-seal tombstone
+    data.upsert([31_000], rng.standard_normal((1, DIM)).astype(np.float32))
+
+    ck = Checkpointer(str(tmp_path / "ckpt"))
+    save_segmented_index(ck, data)
+    assert ck.latest_step() == data.generation  # generation-numbered
+    back = load_segmented_index(ck)
+    assert (back.generation, back.n_segments, back.nb_live) == (
+        data.generation, data.n_segments, data.nb_live)
+
+    q = ds.x[:10]
+    res_a = HarmonyServer(data, n_nodes=4).search_batch(q, k=5)
+    res_b = HarmonyServer(back, n_nodes=4).search_batch(q, k=5)
+    np.testing.assert_array_equal(res_a.ids, res_b.ids)
+    np.testing.assert_allclose(res_a.scores, res_b.scores)
+    # the restored plane is fully mutable (delta, tombstones, compaction)
+    back.delete([41])
+    back.compact_inline(merge_all=True)
+    assert back.n_segments == 1 and not back.has(41)
+
+
+# ------------------------------------------------------- bookkeeping bits
+
+
+def test_tombstone_aware_sizes_and_memory(anns):
+    ds, cfg = anns
+    data = SegmentedIndex.build(ds.x, cfg)
+    seg = data.segments[0]
+    assert data.live_sizes(seg).sum() == ds.x.shape[0]
+    mem0 = data.memory_bytes()
+    data.delete(np.arange(50))
+    assert data.live_sizes(seg).sum() == ds.x.shape[0] - 50
+    assert data.nb_live == ds.x.shape[0] - 50
+    data.upsert([99_999], np.zeros((1, DIM), np.float32))
+    assert data.memory_bytes() > mem0           # delta buffer counted
+    assert data.delta_len == 1
+    d = data.dead_count_by_segment()
+    assert d[seg.seg_id] == 50
+
+
+def test_compaction_journal_replays_concurrent_writes(anns):
+    """Writes that land between begin and commit survive the swap."""
+    ds, cfg = anns
+    rng = np.random.default_rng(13)
+    data = SegmentedIndex.build(ds.x, cfg)
+    data.upsert([50_000], rng.standard_normal((1, DIM)).astype(np.float32))
+    plan = data.begin_compaction(merge_all=True)
+    # concurrent with the (here: deferred) seal:
+    data.delete([0, 50_000])
+    v = rng.standard_normal((1, DIM)).astype(np.float32)
+    data.upsert([50_001], v)
+    data.upsert([1], v + 1.0)                   # overwrite a sealed-in-plan id
+    segs = data.seal(plan)
+    data.commit_compaction(plan, segs)
+    assert not data.has(0) and not data.has(50_000)
+    assert data.has(50_001) and data.has(1)
+    srv = HarmonyServer(data, n_nodes=2)
+    res = srv.search_batch(np.concatenate([v, v + 1.0]), k=1)
+    assert res.ids[:, 0].tolist() == [50_001, 1]
+    assert np.allclose(res.scores[:, 0], 0.0, atol=1e-5)
+
+
+def test_stale_snapshot_never_rolls_back_generation(anns):
+    """A thread carrying a pre-swap snapshot must not roll the server
+    back a generation (it would destroy the compactor's prepared state);
+    `_sync` refuses and the serving loop re-snapshots."""
+    ds, cfg = anns
+    data = SegmentedIndex.build(ds.x, cfg)
+    srv = HarmonyServer(data, n_nodes=2)
+    stale = data.snapshot()
+    data.upsert([77_000], np.ones((1, DIM), np.float32))
+    data.compact_inline()                      # gen 1: delta sealed
+    srv.adopt()
+    gen = srv.generation
+    assert gen == data.generation == 1
+    assert srv._sync(stale) is False           # stale reader refused
+    assert srv.generation == gen
+    res = srv.search_batch(ds.x[:4], k=5)      # serving unaffected
+    bs, _ = brute_topk(data, ds.x[:4], 5)
+    np.testing.assert_allclose(res.scores, bs, rtol=1e-3, atol=1e-3)
+
+
+def test_external_ids_beyond_int32_host_and_spmd_delta(anns):
+    """Ids past the int32 range survive the host path end-to-end, and
+    the spmd backend's fused cross-part merge falls back to the host
+    merge instead of silently wrapping a delta id."""
+    ds, cfg = anns
+    big = 3_000_000_000                        # > 2^31 - 1
+    vec = np.full((1, DIM), 4.0, np.float32)
+    for backend in ("host", "spmd"):
+        data = SegmentedIndex.build(ds.x, cfg)
+        srv = HarmonyServer(data, n_nodes=2, backend=backend,
+                            executor_cfg=TINY_EXEC)
+        srv.upsert([big], vec)                 # lives in the delta
+        res = srv.search_batch(vec, k=3)
+        assert int(res.ids[0, 0]) == big
+        assert res.scores[0, 0] == pytest.approx(0.0, abs=1e-5)
+        # once sealed, the segment's ids no longer fit int32: the spmd
+        # backend must serve that segment via the host engine rather
+        # than upload wrapped ids to the device
+        data.compact_inline()
+        res = srv.search_batch(vec, k=3)
+        assert int(res.ids[0, 0]) == big
+        assert res.scores[0, 0] == pytest.approx(0.0, abs=1e-5)
+
+
+def test_snapshot_is_point_in_time(anns):
+    """A snapshot taken before an upsert of a sealed id must keep that
+    id visible: the tombstone half of a later write may not leak into an
+    in-flight batch that can't see the new delta row."""
+    ds, cfg = anns
+    data = SegmentedIndex.build(ds.x, cfg)
+    snap = data.snapshot()
+    data.upsert([5], np.ones((1, DIM), np.float32))   # tombstones sealed row 5
+    data.delete([6])
+    seg = snap.segments[0]
+    assert not snap.dead_rows[seg.seg_id].any()       # snapshot unaffected
+    from repro.core import search_oracle
+    res = search_oracle(seg.index, ds.x[5:7], k=1,
+                        dead_rows=snap.dead_rows[seg.seg_id])
+    assert res.ids[:, 0].tolist() == [5, 6]           # both still visible

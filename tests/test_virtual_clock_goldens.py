@@ -68,7 +68,11 @@ def _digest(sched, target) -> dict:
         "summary": {
             k: (round(v, 9) if isinstance(v, float) else v)
             for k, v in stats.summary().items()
-            if k not in ("batches", "queries")  # execution-side counters
+            # execution-side and data-plane-side counters are not replay
+            # state (the data plane grew upsert/delete/swap counters in
+            # PR 5 — always 0 in these read-only scenarios)
+            if k not in ("batches", "queries",
+                         "upserts", "deletes", "generation_swaps")
         },
     }
     hedge = getattr(target, "_hedge", None) or getattr(
