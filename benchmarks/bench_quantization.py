@@ -1,0 +1,125 @@
+"""Two-stage int8 tier: the recall / memory / throughput frontier.
+
+Claims guarded here (the PR's acceptance bounds):
+
+* recall@10 of the int8 + fp32-re-rank path stays within 2 points of the
+  fp32 path at the same nprobe (the exact re-rank recovers everything
+  stage 1 keeps — recall only drops when a true neighbour falls outside
+  the quantized top ``k·rerank_factor``);
+* the resident stage-1 corpus is ≥4× smaller per vector than fp32;
+* QPS of the int8 executor is reported next to fp32 across a
+  rerank_factor sweep (the frontier: bigger K' → higher recall, more
+  stage-2 gather work).
+
+Results fold into ``benchmarks/serving_results.json`` under the
+``"quantization"`` key (schema in benchmarks/README.md).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import TINY, corpus, emit, query_set
+from repro.core import search_oracle, two_stage_search
+from repro.serve import ExecutorConfig, SpmdExecutor
+
+
+def _recall(ids, ref_ids):
+    k = ref_ids.shape[1]
+    return float(np.mean([
+        len(set(a.tolist()) & set(b.tolist())) / k
+        for a, b in zip(ids, ref_ids)
+    ]))
+
+
+def main():
+    print("# quantization: int8 stage-1 + exact fp32 re-rank")
+    ds, cfg, index = corpus()
+    q = query_set(ds.nb, cfg.dim, skew=0.3)
+    k = cfg.topk
+    oracle = search_oracle(index, q, k=k)
+
+    # resident bytes per vector: fp32 corpus vs int8 codes (+O(1) grid)
+    quant = index.int8_quant(cfg.quant_blocks)
+    bpv_fp32 = index.x.nbytes / index.nb
+    bpv_int8 = quant.codes.nbytes / index.nb
+    ratio = bpv_fp32 / bpv_int8
+    emit("quant.memory", 0.0,
+         f"bytes_per_vec_fp32={bpv_fp32:.0f};bytes_per_vec_int8={bpv_int8:.0f};"
+         f"ratio={ratio:.2f}")
+
+    # fp32 executor baseline at the config nprobe
+    ex_kw = dict(chunk=256, qb_buckets=(8, 32, 128), use_pallas=False)
+    reps = 1 if TINY else 3
+    ex32 = SpmdExecutor(index, ExecutorConfig(**ex_kw))
+    ex32.warmup()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r32 = ex32.search_batch(q, k=k)
+    fp32_wall = (time.perf_counter() - t0) / reps
+    fp32_recall = _recall(r32.ids, oracle.ids)
+    fp32_qps = q.shape[0] / fp32_wall
+    emit("quant.fp32_baseline", fp32_wall / q.shape[0] * 1e6,
+         f"recall={fp32_recall:.4f};qps={fp32_qps:.0f}")
+
+    # the frontier: rerank_factor sweep on the int8 executor
+    sweep = []
+    for rf in (1, 2, 4, 8):
+        ex8 = SpmdExecutor(index, ExecutorConfig(
+            precision="int8", rerank_factor=rf, **ex_kw))
+        ex8.warmup()
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            r8 = ex8.search_batch(q, k=k)
+        wall = (time.perf_counter() - t0) / reps
+        rec = _recall(r8.ids, oracle.ids)
+        qps = q.shape[0] / wall
+        sweep.append({
+            "rerank_factor": rf,
+            "recall_at_10": rec,
+            "recall_drop_vs_fp32": fp32_recall - rec,
+            "qps": qps,
+            "us_per_query": wall / q.shape[0] * 1e6,
+        })
+        emit(f"quant.int8.rf{rf}", wall / q.shape[0] * 1e6,
+             f"recall={rec:.4f};drop={fp32_recall - rec:.4f};qps={qps:.0f}")
+
+    # host two-stage path (the engine's backend="host" int8 dispatch)
+    t0 = time.perf_counter()
+    rh = two_stage_search(index, q, k=k)
+    host_wall = time.perf_counter() - t0
+    emit("quant.int8.host_two_stage", host_wall / q.shape[0] * 1e6,
+         f"recall={_recall(rh.ids, oracle.ids):.4f};"
+         f"survivors={rh.stats['stage1_survivors']}")
+
+    at_cfg = next(s for s in sweep
+                  if s["rerank_factor"] == cfg.rerank_factor)
+    ok_recall = at_cfg["recall_drop_vs_fp32"] <= 0.02
+    ok_memory = ratio >= 4.0
+    emit("quant.claim.recall_within_2pts", 0.0, f"ok={ok_recall}")
+    emit("quant.claim.memory_4x", 0.0, f"ok={ok_memory}")
+
+    report = {
+        "bytes_per_vec_fp32": bpv_fp32,
+        "bytes_per_vec_int8": bpv_int8,
+        "memory_ratio": ratio,
+        "fp32_recall_at_10": fp32_recall,
+        "fp32_qps": fp32_qps,
+        "rerank_sweep": sweep,
+        "host_two_stage_us_per_query": host_wall / q.shape[0] * 1e6,
+        "claim_recall_within_2pts": bool(ok_recall),
+        "claim_memory_4x": bool(ok_memory),
+    }
+    out = Path(__file__).resolve().parent / "serving_results.json"
+    blob = json.loads(out.read_text()) if out.exists() else {}
+    blob["quantization"] = report
+    out.write_text(json.dumps(blob, indent=2, sort_keys=True))
+    print(json.dumps({"quantization": report}, indent=2, sort_keys=True))
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,7 @@ def main() -> None:
         bench_memory,
         bench_pruning_ratio,
         bench_qps_recall,
+        bench_quantization,
         bench_scaling,
         bench_serving,
         bench_skew,
@@ -35,6 +36,7 @@ def main() -> None:
         bench_fleet,
         bench_frontend,
         bench_executor,
+        bench_quantization,
         bench_ingest,
         bench_breakdown,
         bench_ablation,

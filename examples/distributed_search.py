@@ -5,7 +5,12 @@ validates exactness against the single-node oracle, and prints tile-skip
 (pruning) statistics. This is both a runnable example and the target of
 tests/test_pipeline_spmd.py.
 
-Usage:  python examples/distributed_search.py [--pallas]
+Usage:  python examples/distributed_search.py [--pallas] [--int8]
+
+``--int8`` runs the two-stage path: the ring scores scalar-quantized
+int8 codes (stage 1 keeps K' = k·rerank_factor candidates in the
+quantized metric), then the exact fp32 re-rank reduces them to the
+final top-K — still validated against the single-node fp32 oracle.
 """
 
 # The device-count override must precede any jax import.
@@ -36,7 +41,7 @@ from repro.data import make_dataset, make_queries
 TINY = os.environ.get("HARMONY_BENCH_TINY", "") not in ("", "0")
 
 
-def main(use_pallas: bool = False) -> int:
+def main(use_pallas: bool = False, int8: bool = False) -> int:
     V, B = 4, 2
     mesh = jax.make_mesh((V, B), ("data", "model"))
 
@@ -56,25 +61,55 @@ def main(use_pallas: bool = False) -> int:
 
     chunk = 256
     cap = -(-corpus.cap // chunk) * chunk
+    kp = cfg.topk * cfg.rerank_factor if int8 else cfg.topk
     scfg = SpmdConfig(
         v_shards=V, d_blocks=B, qb=32, cap=cap, dim=cfg.dim,
-        nprobe=cfg.nprobe, k=cfg.topk, chunk=chunk, use_pallas=use_pallas,
+        nprobe=cfg.nprobe, k=kp, chunk=chunk, use_pallas=use_pallas,
+        precision="int8" if int8 else "fp32",
         tile_m=64, tile_n=64, tile_k=32,
     )
     probes = assign_queries(index, q)
-    tau0 = prewarm_tau(index, q, probes, cfg.topk, cfg.prewarm_samples)
+    # int8 stage 1 scores in the quantized metric — an fp32 τ seed is not
+    # a valid bound there, so the travelling τ starts at +inf
+    tau0 = (
+        np.full((q.shape[0],), np.inf, np.float32) if int8
+        else prewarm_tau(index, q, probes, cfg.topk, cfg.prewarm_samples)
+    )
     arrays = build_spmd_inputs(index, corpus, q, scfg, probes, tau0)
 
     shardings = input_shardings(scfg, mesh)
     placed = {k: jax.device_put(v, shardings[k]) for k, v in arrays.items()}
 
     step = make_spmd_search(scfg, mesh)
+    operands = [placed["x_blocks"], placed["xn2_blocks"],
+                placed["cluster_ids"], placed["row_ids"]]
+    if int8:
+        operands.append(placed["scale2"])
     scores, ids, stats = step(
-        placed["x_blocks"], placed["xn2_blocks"], placed["cluster_ids"],
-        placed["row_ids"], placed["queries"], placed["probes"], placed["tau0"],
+        *operands, placed["queries"], placed["probes"], placed["tau0"],
     )
     scores, ids, stats = map(np.asarray, (scores, ids, stats))
     scores, ids = scores[: q.shape[0]], ids[: q.shape[0]]  # drop qb padding
+
+    if int8:
+        # stage 2: exact fp32 re-rank of the K' quantized-metric survivors
+        order = np.argsort(index.ids, kind="stable")
+        sids = index.ids[order]
+        valid = np.isfinite(scores) & (ids >= 0)
+        rows = order[np.searchsorted(sids, np.where(valid, ids, sids[0]))]
+        d = (
+            np.sum(q * q, axis=1)[:, None]
+            - 2.0 * np.einsum("md,mkd->mk", q, index.x[rows])
+            + index.xnorm2[rows]
+        ).astype(np.float32)
+        d = np.where(valid, d, np.inf)
+        sel = np.argpartition(d, kth=cfg.topk - 1, axis=1)[:, : cfg.topk]
+        sc = np.take_along_axis(d, sel, axis=1)
+        o = np.argsort(sc, axis=1, kind="stable")
+        sel = np.take_along_axis(sel, o, axis=1)
+        scores = np.take_along_axis(sc, o, axis=1)
+        ids = np.take_along_axis(ids, sel, axis=1)
+        ids[~np.isfinite(scores)] = -1
 
     oracle = search_oracle(index, q)
     ok = True
@@ -103,4 +138,5 @@ def main(use_pallas: bool = False) -> int:
 
 
 if __name__ == "__main__":
-    sys.exit(main(use_pallas="--pallas" in sys.argv))
+    sys.exit(main(use_pallas="--pallas" in sys.argv,
+                  int8="--int8" in sys.argv))

@@ -3,7 +3,8 @@
 
 Servers no longer rebuild (train + add + pre-assign) the corpus on every
 start: ``save_segmented_index`` writes the sealed segments (centers,
-packed rows, external ids, cluster tables), the dead-row bitmaps, the
+packed rows, external ids, cluster tables, and — when present — the
+int8 quantized tier's codes/scales), the dead-row bitmaps, the
 live delta rows, and the config as one generation-numbered checkpoint
 step; ``load_segmented_index`` reconstructs a byte-equivalent
 :class:`repro.core.SegmentedIndex` that any ``HarmonyServer`` /
@@ -28,7 +29,7 @@ import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.config import HarmonyConfig
-from repro.core import IVFIndex, Segment, SegmentedIndex
+from repro.core import Int8Quant, IVFIndex, Segment, SegmentedIndex
 
 
 def _meta_array(meta: dict) -> np.ndarray:
@@ -54,10 +55,18 @@ def save_segmented_index(
             "seg_ids": [s.seg_id for s in data.segments],
             "seg_cfgs": [dataclasses.asdict(s.index.cfg) for s in data.segments],
             "cfg": dataclasses.asdict(data.cfg),
+            # which segments carry a persisted int8 tier (the canonical
+            # cfg.quant_blocks grid; mesh-granularity grids are derived
+            # state and rebuilt by the executor on adopt)
+            "quantized": [
+                s.index.cfg.quant_blocks
+                in s.index.__dict__.get("_int8_quants", {})
+                for s in data.segments
+            ],
         }
         tree = {"meta": _meta_array(meta)}
         for i, seg in enumerate(data.segments):
-            tree[f"segments/{i}"] = {
+            leaf = {
                 "centers": seg.index.centers,
                 "x": seg.index.x,
                 "ids": seg.index.ids,
@@ -65,6 +74,14 @@ def save_segmented_index(
                 "offsets": seg.index.offsets,
                 "dead_rows": data._dead_rows[seg.seg_id].copy(),
             }
+            q = seg.index.__dict__.get("_int8_quants", {}).get(
+                seg.index.cfg.quant_blocks
+            )
+            if q is not None:
+                leaf["quant_codes"] = q.codes
+                leaf["quant_scale"] = q.scale
+                leaf["quant_zero"] = q.zero
+            tree[f"segments/{i}"] = leaf
         n = data._delta_len
         live = data._delta_live[:n]
         tree["delta"] = {
@@ -83,22 +100,27 @@ def load_segmented_index(
     _, arrays = ckpt.load_arrays(step)
     meta = _meta_parse(arrays["meta"])
     cfg = HarmonyConfig(**meta["cfg"])
+    quantized = meta.get("quantized", [False] * len(meta["seg_ids"]))
     segments = []
     for i, seg_id in enumerate(meta["seg_ids"]):
         pre = f"segments/{i}/"
         seg_cfg = HarmonyConfig(**meta["seg_cfgs"][i])
-        segments.append(Segment(
-            seg_id=int(seg_id),
-            index=IVFIndex(
-                cfg=seg_cfg,
-                centers=arrays[pre + "centers"],
-                x=arrays[pre + "x"],
-                ids=arrays[pre + "ids"].astype(np.int64),
-                cluster_of=arrays[pre + "cluster_of"].astype(np.int32),
-                offsets=arrays[pre + "offsets"].astype(np.int64),
-                build_times={},
-            ),
-        ))
+        index = IVFIndex(
+            cfg=seg_cfg,
+            centers=arrays[pre + "centers"],
+            x=arrays[pre + "x"],
+            ids=arrays[pre + "ids"].astype(np.int64),
+            cluster_of=arrays[pre + "cluster_of"].astype(np.int32),
+            offsets=arrays[pre + "offsets"].astype(np.int64),
+            build_times={},
+        )
+        if quantized[i]:
+            index.attach_int8_quant(Int8Quant(
+                codes=arrays[pre + "quant_codes"].astype(np.int8),
+                scale=arrays[pre + "quant_scale"].astype(np.float32),
+                zero=arrays[pre + "quant_zero"].astype(np.float32),
+            ))
+        segments.append(Segment(seg_id=int(seg_id), index=index))
     data = SegmentedIndex(cfg, segments)
     data.generation = int(meta["generation"])
     data.op_count = int(meta["op_count"])

@@ -49,6 +49,10 @@ class HarmonyConfig:
     tile_q: int = 128               # query tile
     tile_d: int = 128               # dimension-block inner tile
 
+    # Two-stage int8 search tier (precision="int8"):
+    quant_blocks: int = 4           # dimension blocks per int8 scale/zero grid
+    rerank_factor: int = 4          # stage-1 keeps k·rerank_factor candidates
+
     # k-means training
     kmeans_iters: int = 12
     kmeans_seed: int = 0

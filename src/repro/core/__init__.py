@@ -12,6 +12,7 @@ Public API:
 from repro.core.index import (
     CompactionPlan,
     DataSnapshot,
+    Int8Quant,
     IVFIndex,
     Segment,
     SegmentedIndex,
@@ -20,19 +21,27 @@ from repro.core.index import (
     build_ivf,
     dim_block_bounds,
     preassign,
+    quantize_vectors,
 )
 from repro.core.types import PartitionPlan, SearchResult
 from repro.core.planner import plan_search, factorizations, PlanDecision
 from repro.core.cost_model import HardwareModel, WorkloadStats, plan_cost, TPU_V5E
-from repro.core.search import delta_topk, harmony_search, merge_topk, search_oracle
+from repro.core.search import (
+    delta_topk,
+    harmony_search,
+    merge_topk,
+    search_oracle,
+    two_stage_search,
+)
 from repro.core.pruning import TopKHeap, prewarm_tau, partial_scores_block
 
 __all__ = [
     "IVFIndex", "ShardedCorpus", "build_ivf", "preassign", "assign_queries",
     "dim_block_bounds", "PartitionPlan", "SearchResult",
     "Segment", "SegmentedIndex", "DataSnapshot", "CompactionPlan",
+    "Int8Quant", "quantize_vectors",
     "plan_search", "factorizations", "PlanDecision", "HardwareModel",
     "WorkloadStats", "plan_cost", "TPU_V5E", "harmony_search",
-    "search_oracle", "delta_topk", "merge_topk",
+    "search_oracle", "delta_topk", "merge_topk", "two_stage_search",
     "TopKHeap", "prewarm_tau", "partial_scores_block",
 ]

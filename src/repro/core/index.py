@@ -78,6 +78,26 @@ class IVFIndex:
             self.__dict__["_xnorm2"] = cached
         return cached
 
+    def int8_quant(self, d_blocks: Optional[int] = None) -> "Int8Quant":
+        """Scalar-quantized int8 tier of this segment's corpus, one grid
+        per dimension block. Computed once per ``d_blocks`` granularity and
+        cached (segment seal populates the config's canonical granularity
+        eagerly; the SPMD executor requests its mesh granularity lazily).
+        Checkpoint restore re-attaches persisted codes here so a reload
+        never re-derives them."""
+        d_blocks = d_blocks or self.cfg.quant_blocks
+        cache = self.__dict__.setdefault("_int8_quants", {})
+        q = cache.get(d_blocks)
+        if q is None:
+            q = quantize_vectors(self.x, d_blocks)
+            cache[d_blocks] = q
+        return q
+
+    def attach_int8_quant(self, quant: "Int8Quant") -> None:
+        """Install persisted codes (checkpoint restore path)."""
+        cache = self.__dict__.setdefault("_int8_quants", {})
+        cache[quant.d_blocks] = quant
+
     def memory_bytes(self) -> int:
         return sum(a.nbytes for a in (self.centers, self.x, self.ids, self.offsets))
 
@@ -141,6 +161,121 @@ def dim_block_bounds(dim: int, d_blocks: int) -> List[Tuple[int, int]]:
     return [(b * per, min(dim, (b + 1) * per)) for b in range(d_blocks)]
 
 
+# ---------------------------------------------------------------------------
+# Scalar-quantized int8 tier (stage 1 of the two-stage search path)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Int8Quant:
+    """Per-dimension-block affine int8 codes of one packed corpus.
+
+    Block b has one (scale, zero-point) pair fit to the block's value
+    range; a vector dimension j in block b encodes as
+    ``round((x_j − zero_b) / scale_b)`` clipped to [−127, 127]. Queries
+    are encoded on the *same* grid, so the zero-points cancel in the
+    quantized L2 difference and stage-1 scoring is a pure int8×int8
+    contraction (see ``kernels/distance_int8.py``).
+    """
+
+    codes: np.ndarray   # [NB, D] int8, packed row order of the owning index
+    scale: np.ndarray   # [B] float32
+    zero: np.ndarray    # [B] float32
+
+    @property
+    def d_blocks(self) -> int:
+        return int(self.scale.shape[0])
+
+    @property
+    def bounds(self) -> List[Tuple[int, int]]:
+        return dim_block_bounds(int(self.codes.shape[1]), self.d_blocks)
+
+    def encode(self, x: np.ndarray) -> np.ndarray:
+        """Encode fp32 vectors [..., D] on this grid → int8 codes.
+
+        Out-of-range values (queries may fall outside the corpus's value
+        range) clip; the corpus itself never clips because the grid was
+        fit to its range."""
+        x = np.asarray(x, np.float32)
+        out = np.empty(x.shape, np.int8)
+        for b, (lo, hi) in enumerate(self.bounds):
+            q = np.rint((x[..., lo:hi] - self.zero[b]) / self.scale[b])
+            out[..., lo:hi] = np.clip(q, -127, 127).astype(np.int8)
+        return out
+
+    def decode(self, codes: Optional[np.ndarray] = None) -> np.ndarray:
+        """Dequantize codes [..., D] back to fp32 (default: own corpus)."""
+        codes = self.codes if codes is None else codes
+        out = np.empty(codes.shape, np.float32)
+        for b, (lo, hi) in enumerate(self.bounds):
+            out[..., lo:hi] = (
+                codes[..., lo:hi].astype(np.float32) * self.scale[b]
+                + self.zero[b]
+            )
+        return out
+
+    def code_norms2(self, codes: Optional[np.ndarray] = None) -> np.ndarray:
+        """Σ_b s_b²·Σ_j code², the pre-scaled norm term of the quantized
+        L2 form (cached for the corpus codes)."""
+        if codes is None:
+            cached = self.__dict__.get("_cnorm2")
+            if cached is not None:
+                return cached
+            codes = self.codes
+            caching = True
+        else:
+            caching = False
+        out = np.zeros(codes.shape[:-1], np.float32)
+        for b, (lo, hi) in enumerate(self.bounds):
+            blk = codes[..., lo:hi].astype(np.int32)
+            out += (self.scale[b] ** 2) * np.sum(blk * blk, axis=-1).astype(
+                np.float32
+            )
+        if caching:
+            object.__setattr__(self, "_cnorm2", out)
+        return out
+
+    def scores(self, q_codes: np.ndarray, rows: Optional[np.ndarray] = None
+               ) -> np.ndarray:
+        """Quantized-L2 distances d̂²[m, n] between encoded queries
+        [M, D] and corpus rows (all, or the given packed rows). Host
+        oracle of the int8 kernel — int32 dot accumulation, f32 combine."""
+        p = self.codes if rows is None else self.codes[rows]
+        pn2 = self.code_norms2() if rows is None else self.code_norms2(p)
+        qn2 = self.code_norms2(q_codes)
+        acc = qn2[:, None] + pn2[None, :]
+        for b, (lo, hi) in enumerate(self.bounds):
+            dot = q_codes[:, lo:hi].astype(np.int32) @ p[:, lo:hi].astype(
+                np.int32
+            ).T
+            acc -= (2.0 * self.scale[b] ** 2) * dot.astype(np.float32)
+        return acc.astype(np.float32)
+
+    def memory_bytes(self) -> int:
+        return self.codes.nbytes + self.scale.nbytes + self.zero.nbytes
+
+
+def quantize_vectors(x: np.ndarray, d_blocks: int) -> Int8Quant:
+    """Fit one affine int8 grid per dimension block to ``x`` [NB, D] and
+    encode it. The grid covers the block's [min, max] exactly, so the
+    corpus itself never clips; scale has a floor so constant blocks stay
+    well-defined."""
+    x = np.asarray(x, np.float32)
+    bounds = dim_block_bounds(int(x.shape[1]), d_blocks)
+    scale = np.ones(d_blocks, np.float32)
+    zero = np.zeros(d_blocks, np.float32)
+    codes = np.empty(x.shape, np.int8)
+    for b, (lo, hi) in enumerate(bounds):
+        blk = x[:, lo:hi]
+        mn = float(blk.min()) if blk.size else 0.0
+        mx = float(blk.max()) if blk.size else 0.0
+        zero[b] = 0.5 * (mn + mx)
+        scale[b] = max((mx - mn) / 254.0, 1e-8)
+        q = np.rint((blk - zero[b]) / scale[b])
+        codes[:, lo:hi] = np.clip(q, -127, 127).astype(np.int8)
+    return Int8Quant(codes=codes, scale=scale, zero=zero)
+
+
 @dataclass
 class ShardedCorpus:
     """The Pre-assign product: device-grid-resident corpus.
@@ -160,11 +295,36 @@ class ShardedCorpus:
     xnorm2_blk: np.ndarray       # [V, B, cap] float32
     # host-side lookup: for each cluster, its (shard, start, stop) rows
     cluster_slices: Dict[int, Tuple[int, int, int]]
+    # packed-row → shard-layout permutation: packed row p lives at
+    # (packed_shard[p], packed_row[p]) in the shard arrays
+    packed_shard: np.ndarray     # [NB] int32
+    packed_row: np.ndarray       # [NB] int32
     preassign_time: float
 
     @property
     def cap(self) -> int:
         return int(self.x_shard.shape[1])
+
+    def dead_shard_mask(
+        self, dead_rows: np.ndarray, key: Optional[tuple] = None
+    ) -> np.ndarray:
+        """Remap packed-row tombstones [NB] to the shard layout [V, cap].
+
+        O(#dead) via the precomputed permutation — no per-cluster Python
+        loop. With ``key`` (the data plane's ``(generation,
+        dead_version)``) the result is cached single-entry: repeated
+        batches between mutations reuse the mask, and any tombstone flip
+        or generation swap changes the key, so stale masks can never be
+        served. Callers without a stable key get a fresh mask."""
+        cache = self.__dict__.get("_dead_mask_cache")
+        if key is not None and cache is not None and cache[0] == key:
+            return cache[1]
+        mask = np.zeros((self.x_shard.shape[0], self.cap), bool)
+        rows = np.nonzero(dead_rows)[0]
+        mask[self.packed_shard[rows], self.packed_row[rows]] = True
+        if key is not None:
+            self.__dict__["_dead_mask_cache"] = (key, mask)
+        return mask
 
     def memory_bytes(self) -> int:
         return sum(
@@ -200,6 +360,8 @@ def preassign(index: IVFIndex, plan: PartitionPlan, pad_to: int = 64) -> Sharded
     ids_shard = np.full((V, cap), -1, np.int64)
     cluster_shard = np.full((V, cap), -1, np.int32)
     valid = np.zeros((V, cap), bool)
+    packed_shard = np.full(index.nb, -1, np.int32)
+    packed_row = np.full(index.nb, -1, np.int32)
     for v in range(V):
         rows = np.asarray(shard_rows[v], np.int64)
         n = len(rows)
@@ -208,6 +370,8 @@ def preassign(index: IVFIndex, plan: PartitionPlan, pad_to: int = 64) -> Sharded
             ids_shard[v, :n] = index.ids[rows]
             cluster_shard[v, :n] = index.cluster_of[rows]
             valid[v, :n] = True
+            packed_shard[rows] = v
+            packed_row[rows] = np.arange(n, dtype=np.int32)
 
     bounds = dim_block_bounds(D, B)
     xnorm2_blk = np.zeros((V, B, cap), np.float32)
@@ -223,6 +387,8 @@ def preassign(index: IVFIndex, plan: PartitionPlan, pad_to: int = 64) -> Sharded
         valid=valid,
         xnorm2_blk=xnorm2_blk,
         cluster_slices=cluster_slices,
+        packed_shard=packed_shard,
+        packed_row=packed_row,
         preassign_time=time.perf_counter() - t0,
     )
 
@@ -303,6 +469,10 @@ class SegmentedIndex:
         self._mu = threading.RLock()
         self.segments: Tuple[Segment, ...] = tuple(segments)
         self.generation = 0
+        # monotone counter of sealed-row tombstone flips — deletes do NOT
+        # bump generation, so (generation, dead_version) is the cache key
+        # for anything derived from the dead bitmaps
+        self.dead_version = 0
         self._next_seg_id = 1 + max((s.seg_id for s in self.segments), default=-1)
         # sealed-row tombstones: seg_id -> bool [nb] (True = dead)
         self._dead_rows: Dict[int, np.ndarray] = {
@@ -398,6 +568,7 @@ class SegmentedIndex:
         loc = self._loc.pop(ext_id, None)
         if loc is not None:
             self._dead_rows[loc[0]][loc[1]] = True
+            self.dead_version += 1
             return True
         row = self._delta_pos.pop(ext_id, None)
         if row is not None:
@@ -470,6 +641,7 @@ class SegmentedIndex:
                 delta_ids=self._delta_ids[:n].copy(),
                 delta_x=self._delta_x[:n],          # append-only: rows ≤ n frozen
                 delta_live=self._delta_live[:n].copy(),
+                dead_version=self.dead_version,
             )
 
     def live_vectors(self) -> Tuple[np.ndarray, np.ndarray]:
@@ -546,8 +718,12 @@ class SegmentedIndex:
         with self._mu:
             seg_id = self._next_seg_id
             self._next_seg_id += 1
-        return [Segment(seg_id=seg_id,
-                        index=build_ivf(plan.x, seg_cfg, ext_ids=plan.ids))]
+        index = build_ivf(plan.x, seg_cfg, ext_ids=plan.ids)
+        # quantize at seal (off the serving path): the int8 tier of the
+        # two-stage search is part of the sealed artifact, so a precision
+        # switch or checkpoint save never recomputes it mid-serving
+        index.int8_quant(self.cfg.quant_blocks)
+        return [Segment(seg_id=seg_id, index=index)]
 
     def abort_compaction(self) -> None:
         with self._mu:
@@ -637,6 +813,7 @@ class DataSnapshot:
     delta_ids: np.ndarray               # [n] int64
     delta_x: np.ndarray                 # [n, D] float32 (frozen rows)
     delta_live: np.ndarray              # [n] bool
+    dead_version: int = 0               # tombstone-flip counter at snapshot
 
     @property
     def delta_count(self) -> int:

@@ -53,6 +53,7 @@ class SpmdConfig:
     metric: str = "l2"
     prune: bool = True
     x_dtype: str = "float32"    # bf16 halves corpus HBM traffic (accum stays f32)
+    precision: str = "fp32"     # "int8" → quantized stage-1 scoring tier
     use_pallas: bool = True     # False → pure-jnp scoring (dry-run / CPU bench)
     tile_m: int = 128
     tile_n: int = 128
@@ -76,23 +77,39 @@ class SpmdConfig:
         assert self.cap % self.chunk == 0, (self.cap, self.chunk)
         return self.cap // self.chunk
 
+    def __post_init__(self):
+        assert self.precision in ("fp32", "int8"), self.precision
+        if self.precision == "int8":
+            # the shared-grid quantized difference form is L2-only
+            assert self.metric == "l2", (self.precision, self.metric)
+
 
 # ---------------------------------------------------------------------------
 # Host-side input packaging
 # ---------------------------------------------------------------------------
 
 
-def build_corpus_arrays(corpus: ShardedCorpus, scfg: SpmdConfig):
+def build_corpus_arrays(corpus: ShardedCorpus, scfg: SpmdConfig,
+                        quant: Optional["Int8Quant"] = None):
     """Pack the sharded corpus into the step's device-resident arrays.
 
     These are the batch-invariant inputs — the serving executor uploads
     them to the mesh ONCE and reuses them across every served batch.
 
     Shapes (global, to be sharded by the step's in_shardings):
-      x_blocks   [V, cap, D_pad]      f32   (rows→data, dims→model)
+      x_blocks   [V, cap, D_pad]      f32 | int8 codes  (rows→data, dims→model)
       xn2_blocks [B, V, cap]          f32   (block norms; B→model, V→data)
       cluster_ids[V, cap]             i32
       row_ids    [V, cap]             i32
+      scale2     [B]                  f32   (int8 only: s² per dim block)
+
+    With ``precision="int8"`` the resident corpus is the 1-byte codes of a
+    per-dimension-block affine grid (4× smaller than fp32), ``xn2_blocks``
+    carries the pre-scaled s²·Σcode² norms, and the grid's (scale, zero)
+    come from ``quant`` — the segment's seal-time :class:`Int8Quant` —
+    when its blocking matches this mesh, else are fit to this layout.
+    Padded rows *and* padded dims are encoded as literal 0.0 on the same
+    grid queries use, so padding contributes exactly 0 to every distance.
     """
     V, B = scfg.v_shards, scfg.d_blocks
     cap, D = scfg.cap, scfg.dim
@@ -100,15 +117,40 @@ def build_corpus_arrays(corpus: ShardedCorpus, scfg: SpmdConfig):
     xs = corpus.x_shard
     assert xs.shape[1] <= cap, (xs.shape, cap)
 
+    cluster_ids = np.full((V, cap), -1, np.int32)
+    cluster_ids[:, : xs.shape[1]] = corpus.cluster_shard
+    row_ids = np.full((V, cap), -1, np.int32)
+    row_ids[:, : xs.shape[1]] = corpus.ids_shard.astype(np.int32)
+
+    if scfg.precision == "int8":
+        xf = np.zeros((V, cap, D), np.float32)
+        xf[:, : xs.shape[1], : xs.shape[2]] = xs
+        bounds = dim_block_bounds(D, B)
+        scale, zero = _mesh_quant_grid(xs, corpus.valid, scfg, quant)
+        codes = np.empty((V, cap, D), np.int8)
+        xn2_blocks = np.zeros((B, V, cap), np.float32)
+        for b, (lo, hi) in enumerate(bounds):
+            qb = np.rint((xf[:, :, lo:hi] - zero[b]) / scale[b])
+            cb = np.clip(qb, -127, 127).astype(np.int8)
+            codes[:, :, lo:hi] = cb
+            c32 = cb.astype(np.int32)
+            xn2_blocks[b] = (scale[b] ** 2) * np.sum(c32 * c32, axis=2)
+        return dict(
+            x_blocks=codes,
+            xn2_blocks=xn2_blocks,
+            cluster_ids=cluster_ids,
+            row_ids=row_ids,
+            scale2=(scale.astype(np.float32) ** 2),
+            # host-only: the grid queries must be encoded on (callers pop
+            # this before uploading the dict to the mesh)
+            quant_grid=(scale, zero),
+        )
+
     import ml_dtypes
 
     xdt = np.float32 if scfg.x_dtype == "float32" else ml_dtypes.bfloat16
     x_blocks = np.zeros((V, cap, D), xdt)
     x_blocks[:, : xs.shape[1], : xs.shape[2]] = xs.astype(xdt)
-    cluster_ids = np.full((V, cap), -1, np.int32)
-    cluster_ids[:, : xs.shape[1]] = corpus.cluster_shard
-    row_ids = np.full((V, cap), -1, np.int32)
-    row_ids[:, : xs.shape[1]] = corpus.ids_shard.astype(np.int32)
 
     xn2_blocks = np.zeros((B, V, cap), np.float32)
     if xdt is np.float32 and corpus.xnorm2_blk.shape[1] == B:
@@ -129,20 +171,59 @@ def build_corpus_arrays(corpus: ShardedCorpus, scfg: SpmdConfig):
     )
 
 
+def _mesh_quant_grid(xs: np.ndarray, valid: np.ndarray, scfg: SpmdConfig,
+                     quant: Optional["Int8Quant"]):
+    """(scale [B], zero [B]) for this mesh's dimension blocking.
+
+    Reuses the seal-time grid when its per-block dim ranges coincide with
+    the mesh blocking (the common case: ``quant_blocks == d_blocks`` and
+    minimal dim padding); otherwise fits a fresh grid to the shard
+    layout's valid rows — a deterministic function of the corpus, so
+    every replica derives identical codes."""
+    B, db = scfg.d_blocks, scfg.db
+    if (quant is not None and quant.d_blocks == B
+            and -(-quant.codes.shape[1] // B) == db):
+        return quant.scale.copy(), quant.zero.copy()
+    scale = np.ones(B, np.float32)
+    zero = np.zeros(B, np.float32)
+    rows = xs[valid[:, : xs.shape[1]]] if valid.size else xs.reshape(-1, xs.shape[2])
+    for b, (lo, hi) in enumerate(dim_block_bounds(scfg.dim, B)):
+        blk = rows[:, lo:min(hi, rows.shape[1])]
+        mn = float(blk.min()) if blk.size else 0.0
+        mx = float(blk.max()) if blk.size else 0.0
+        zero[b] = 0.5 * (mn + mx)
+        scale[b] = max((mx - mn) / 254.0, 1e-8)
+    return scale, zero
+
+
 def build_query_arrays(
-    q: np.ndarray, scfg: SpmdConfig, probes: np.ndarray, tau0: np.ndarray
+    q: np.ndarray, scfg: SpmdConfig, probes: np.ndarray, tau0: np.ndarray,
+    quant_grid: Optional[Tuple[np.ndarray, np.ndarray]] = None,
 ):
     """Pack one query batch into the step's per-batch arrays, padded to the
     static ``scfg.qb`` shape.
 
-      queries    [QB, D_pad]          f32   (dims→model)
+      queries    [QB, D_pad]          f32 | int8 codes   (dims→model)
       probes     [QB, P]              i32   (replicated)
       tau0       [QB]                 f32   (replicated)
-    """
+
+    With ``precision="int8"``, queries are encoded on the corpus's grid
+    (``quant_grid`` = (scale [B], zero [B]) of the resident codes) —
+    out-of-range query values clip, padded rows/dims encode literal 0.0
+    exactly like the corpus padding, so padding cancels in the quantized
+    difference."""
     qb, D = scfg.qb, scfg.dim
     queries = np.zeros((qb, D), np.float32)
     nq = min(q.shape[0], qb)
     queries[:nq, : q.shape[1]] = q[:nq]
+    if scfg.precision == "int8":
+        assert quant_grid is not None, "int8 queries need the corpus grid"
+        scale, zero = quant_grid
+        codes = np.empty((qb, D), np.int8)
+        for b, (lo, hi) in enumerate(dim_block_bounds(D, scfg.d_blocks)):
+            c = np.rint((queries[:, lo:hi] - zero[b]) / scale[b])
+            codes[:, lo:hi] = np.clip(c, -127, 127).astype(np.int8)
+        queries = codes
     probes_pad = np.zeros((qb, probes.shape[1]), np.int32)
     probes_pad[:nq] = probes[:nq]
     probes_pad[nq:] = -2                      # match nothing
@@ -156,9 +237,13 @@ def build_spmd_inputs(
     probes: np.ndarray, tau0: np.ndarray,
 ):
     """Corpus + query-batch packing in one call (one-shot example path)."""
+    quant = (index.int8_quant(scfg.d_blocks)
+             if scfg.precision == "int8" else None)
+    corpus_arrays = build_corpus_arrays(corpus, scfg, quant=quant)
+    grid = corpus_arrays.pop("quant_grid", None)
     return {
-        **build_corpus_arrays(corpus, scfg),
-        **build_query_arrays(q, scfg, probes, tau0),
+        **corpus_arrays,
+        **build_query_arrays(q, scfg, probes, tau0, quant_grid=grid),
     }
 
 
@@ -171,18 +256,22 @@ def corpus_shardings(scfg: SpmdConfig, mesh: Mesh):
         return NamedSharding(mesh, P(*spec))
 
     if scfg.n_pods > 1:
-        return dict(
+        out = dict(
             x_blocks=ns(ap, ad, None, am),
             xn2_blocks=ns(ap, am, ad, None),
             cluster_ids=ns(ap, ad, None),
             row_ids=ns(ap, ad, None),
         )
-    return dict(
-        x_blocks=ns(ad, None, am),
-        xn2_blocks=ns(am, ad, None),
-        cluster_ids=ns(ad, None),
-        row_ids=ns(ad, None),
-    )
+    else:
+        out = dict(
+            x_blocks=ns(ad, None, am),
+            xn2_blocks=ns(am, ad, None),
+            cluster_ids=ns(ad, None),
+            row_ids=ns(ad, None),
+        )
+    if scfg.precision == "int8":
+        out["scale2"] = ns(am)      # one s² per dimension block
+    return out
 
 
 def query_shardings(scfg: SpmdConfig, mesh: Mesh):
@@ -206,16 +295,20 @@ def input_specs(scfg: SpmdConfig):
     V, B, cap, D = scfg.v_shards, scfg.d_blocks, scfg.cap, scfg.dim
     lead = (scfg.n_pods,) if scfg.n_pods > 1 else ()
     f32, i32 = jnp.float32, jnp.int32
-    xdt = jnp.dtype(scfg.x_dtype)
-    return dict(
+    int8 = scfg.precision == "int8"
+    xdt = jnp.int8 if int8 else jnp.dtype(scfg.x_dtype)
+    out = dict(
         x_blocks=jax.ShapeDtypeStruct(lead + (V, cap, D), xdt),
         xn2_blocks=jax.ShapeDtypeStruct(lead + (B, V, cap), f32),
         cluster_ids=jax.ShapeDtypeStruct(lead + (V, cap), i32),
         row_ids=jax.ShapeDtypeStruct(lead + (V, cap), i32),
-        queries=jax.ShapeDtypeStruct((scfg.qb, D), f32),
+        queries=jax.ShapeDtypeStruct((scfg.qb, D), jnp.int8 if int8 else f32),
         probes=jax.ShapeDtypeStruct((scfg.qb, scfg.nprobe), i32),
         tau0=jax.ShapeDtypeStruct((scfg.qb,), f32),
     )
+    if int8:
+        out["scale2"] = jax.ShapeDtypeStruct((B,), f32)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -241,6 +334,25 @@ def _score_chunk_update(scfg: SpmdConfig, x_c, xn2_c, qrows, qn2, acc, tau):
     return out, skip.sum(), skip.size
 
 
+def _score_chunk_update_int8(scfg: SpmdConfig, x_c, xn2_c, qrows, qn2, s2,
+                             acc, tau):
+    """int8 variant: codes in, int32 MXU accumulation, f32 combine."""
+    if scfg.use_pallas:
+        out, skip = kops.int8_partial_distance_update(
+            x_c, xn2_c, qrows, qn2, s2, acc, tau,
+            prune=scfg.prune,
+            tile_m=scfg.tile_m, tile_n=scfg.tile_n, tile_k=scfg.tile_k,
+        )
+        return out, skip.sum(), skip.size
+    from repro.kernels import ref
+
+    out = ref.int8_partial_distance_update_ref(
+        x_c, xn2_c, qrows, qn2, s2, acc, tau, prune=scfg.prune
+    )
+    skip = kops._tile_skip_map(acc, scfg.tile_m, scfg.tile_n)
+    return out, skip.sum(), skip.size
+
+
 def gather_local_candidates(rows, x_blk, xn2_blk, cluster_ids, row_ids):
     """Device-side gather of probed-cluster candidates into a padded static
     buffer (the serving executor's per-batch candidate set).
@@ -260,7 +372,7 @@ def gather_local_candidates(rows, x_blk, xn2_blk, cluster_ids, row_ids):
 
 
 def ring_chunk_search(scfg: SpmdConfig, x_blk, xn2_blk, cluster_ids, row_ids,
-                      q_blk, probes, tau0):
+                      q_blk, probes, tau0, scale2=None):
     """Per-device ring search core (call under shard_map).
 
     Inputs are this device's local, already-squeezed arrays:
@@ -270,6 +382,13 @@ def ring_chunk_search(scfg: SpmdConfig, x_blk, xn2_blk, cluster_ids, row_ids,
     tile-granular early-stop, ppermute rotation, running top-K with τ
     tightening between chunks) and merges results across the mesh axes.
     Returns replicated (scores [qb, K], ids [qb, K], stats [2]).
+
+    ``precision="int8"``: x_blk/q_blk carry int8 codes, xn2_blk the
+    pre-scaled s²·Σcode² norms, and ``scale2`` this device's scalar s².
+    The ring then computes *quantized* L2 — still monotone over dimension
+    blocks, so the travelling-τ pruning and running top-K stay exact
+    within the quantized metric (the fp32 re-rank happens host-side in
+    the executor).
     """
     B, QG, K = scfg.d_blocks, scfg.qg, scfg.k
     chunk, n_chunks = scfg.chunk, scfg.n_chunks
@@ -305,10 +424,20 @@ def ring_chunk_search(scfg: SpmdConfig, x_blk, xn2_blk, cluster_ids, row_ids,
             acc, tau_g, sk, tc = rc
             g = (b_idx - t - offset) % B
             qrows = jax.lax.dynamic_slice_in_dim(q_blk, g * QG, QG, 0)
-            qn2 = jnp.sum(qrows.astype(jnp.float32) ** 2, axis=1)
-            acc, s_cnt, t_cnt = _score_chunk_update(
-                scfg, x_c, xn2_c, qrows, qn2, acc, tau_g
-            )
+            if scfg.precision == "int8":
+                s2 = scale2.reshape(())
+                # int32 code norms are exact; one f32 scale at the end
+                qn2 = s2 * jnp.sum(
+                    qrows.astype(jnp.int32) ** 2, axis=1
+                ).astype(jnp.float32)
+                acc, s_cnt, t_cnt = _score_chunk_update_int8(
+                    scfg, x_c, xn2_c, qrows, qn2, s2, acc, tau_g
+                )
+            else:
+                qn2 = jnp.sum(qrows.astype(jnp.float32) ** 2, axis=1)
+                acc, s_cnt, t_cnt = _score_chunk_update(
+                    scfg, x_c, xn2_c, qrows, qn2, acc, tau_g
+                )
             if B > 1:
                 acc = jax.lax.ppermute(acc, scfg.axis_model, perm)
                 tau_g = jax.lax.ppermute(tau_g, scfg.axis_model, perm)
@@ -382,16 +511,21 @@ def make_device_fn(scfg: SpmdConfig):
     """The per-device body, to be wrapped in shard_map: squeeze the leading
     sharded axes and run the ring search core over the full resident shard."""
 
-    def device_fn(x_blk, xn2_blk, cluster_ids, row_ids, q_blk, probes, tau0):
+    def device_fn(x_blk, xn2_blk, cluster_ids, row_ids, *rest):
         # shapes (per device):
         #   x_blk [1(,1), cap, db]  xn2_blk [1(,1)?, ...] — squeeze leading axes
+        if scfg.precision == "int8":
+            scale2, q_blk, probes, tau0 = rest
+        else:
+            scale2, (q_blk, probes, tau0) = None, rest
         x_blk = x_blk.reshape(scfg.cap, scfg.db)
         xn2_blk = xn2_blk.reshape(scfg.cap)
         cluster_ids = cluster_ids.reshape(scfg.cap)
         row_ids = row_ids.reshape(scfg.cap)
         q_blk = q_blk.reshape(scfg.qb, scfg.db)
         return ring_chunk_search(
-            scfg, x_blk, xn2_blk, cluster_ids, row_ids, q_blk, probes, tau0
+            scfg, x_blk, xn2_blk, cluster_ids, row_ids, q_blk, probes, tau0,
+            scale2=scale2,
         )
 
     return device_fn
@@ -402,25 +536,26 @@ def make_spmd_search(scfg: SpmdConfig, mesh: Mesh):
     (and the in_shardings dict for dry-run lowering)."""
     dev = make_device_fn(scfg)
     if scfg.n_pods > 1:
-        in_specs = (
+        corpus_specs = (
             P(scfg.axis_pod, scfg.axis_data, None, scfg.axis_model),
             P(scfg.axis_pod, scfg.axis_model, scfg.axis_data, None),
             P(scfg.axis_pod, scfg.axis_data, None),
             P(scfg.axis_pod, scfg.axis_data, None),
-            P(None, scfg.axis_model),
-            P(None, None),
-            P(None),
         )
     else:
-        in_specs = (
+        corpus_specs = (
             P(scfg.axis_data, None, scfg.axis_model),
             P(scfg.axis_model, scfg.axis_data, None),
             P(scfg.axis_data, None),
             P(scfg.axis_data, None),
-            P(None, scfg.axis_model),
-            P(None, None),
-            P(None),
         )
+    if scfg.precision == "int8":
+        corpus_specs = corpus_specs + (P(scfg.axis_model),)   # scale2 [B]
+    in_specs = corpus_specs + (
+        P(None, scfg.axis_model),
+        P(None, None),
+        P(None),
+    )
     out_specs = (P(), P(), P())
 
     fn = shard_map_compat(

@@ -90,6 +90,98 @@ def search_oracle(
 
 
 # ---------------------------------------------------------------------------
+# Two-stage quantized search (int8 scan → exact fp32 re-rank), host engine
+# ---------------------------------------------------------------------------
+
+
+def two_stage_search(
+    index: IVFIndex,
+    q: np.ndarray,
+    k: Optional[int] = None,
+    nprobe: Optional[int] = None,
+    probes: Optional[np.ndarray] = None,
+    rerank_factor: Optional[int] = None,
+    dead_rows: Optional[np.ndarray] = None,
+    quant_blocks: Optional[int] = None,
+    chunk: int = 128,
+) -> SearchResult:
+    """Stage 1 scores the probed, live candidate set with the segment's
+    sealed int8 codes (quantized L2, int32 dot accumulation) and keeps the
+    best ``k·rerank_factor`` rows per query; stage 2 gathers those rows'
+    fp32 vectors and rescores them exactly, so every returned score is a
+    true fp32 distance.
+
+    Exactness: stage 2 returns the true top-k *of the stage-1 survivor
+    set*. Quantization error can only demote a true top-k candidate out of
+    the survivor set, never corrupt a returned score — and once
+    ``k·rerank_factor`` covers the whole probed candidate set, the result
+    is identical to :func:`search_oracle` (asserted in tests). L2 only:
+    the shared-grid difference form has no inner-product analogue.
+    """
+    cfg = index.cfg
+    assert cfg.metric == "l2", "int8 two-stage search supports l2 only"
+    k = k or cfg.topk
+    rerank_factor = rerank_factor or cfg.rerank_factor
+    quant = index.int8_quant(quant_blocks or cfg.quant_blocks)
+    if probes is None:
+        probes = assign_queries(index, q, nprobe)
+    nq = q.shape[0]
+    kp = min(max(k, k * rerank_factor), index.nb)
+    out_s = np.full((nq, k), np.inf, np.float32)
+    out_i = np.full((nq, k), -1, np.int64)
+    t0 = time.perf_counter()
+    q_codes = quant.encode(q)
+    xn2 = index.xnorm2
+    survivors = 0
+    for lo in range(0, nq, chunk):
+        hi = min(nq, lo + chunk)
+        m = hi - lo
+        member = np.zeros((m, index.nlist), bool)
+        if probes.shape[1]:
+            member[np.arange(m)[:, None], probes[lo:hi]] = True
+        mask = member[:, index.cluster_of]                     # [m, NB]
+        if dead_rows is not None:
+            mask &= ~dead_rows[None, :]
+        # stage 1: quantized distances over the masked candidate set
+        d8 = np.where(mask, quant.scores(q_codes[lo:hi]), np.inf)
+        part = np.argpartition(d8, kth=kp - 1, axis=1)[:, :kp]  # packed rows
+        valid = np.isfinite(np.take_along_axis(d8, part, axis=1))
+        survivors += int(valid.sum())
+        # stage 2: exact fp32 re-rank of the survivors
+        qf = q[lo:hi]
+        xg = index.x[part]                                     # [m, kp, D]
+        d = (
+            np.sum(qf * qf, axis=1)[:, None]
+            - 2.0 * np.einsum("md,mkd->mk", qf, xg)
+            + xn2[part]
+        )
+        d = np.where(valid, d, np.inf).astype(np.float32)
+        if kp > k:
+            sel = np.argpartition(d, kth=k - 1, axis=1)[:, :k]
+        else:
+            sel = np.broadcast_to(np.arange(kp), (m, kp))
+        sc = np.take_along_axis(d, sel, axis=1)
+        order = np.argsort(sc, axis=1, kind="stable")
+        nk = min(k, kp)
+        out_s[lo:hi, :nk] = np.take_along_axis(sc, order, axis=1)[:, :nk]
+        rows = np.take_along_axis(part, np.take_along_axis(sel, order, axis=1),
+                                  axis=1)[:, :nk]
+        out_i[lo:hi, :nk] = index.ids[rows]
+        out_i[lo:hi][out_s[lo:hi] == np.inf] = -1
+    dt = time.perf_counter() - t0
+    return SearchResult(
+        ids=out_i,
+        scores=out_s,
+        stats={
+            "wall_s": dt,
+            "precision": "int8",
+            "rerank_k": kp,
+            "stage1_survivors": survivors,
+        },
+    )
+
+
+# ---------------------------------------------------------------------------
 # HARMONY staged engine
 # ---------------------------------------------------------------------------
 
@@ -193,6 +285,7 @@ def harmony_search(
     pipeline: bool = True,
     collect_stats: bool = True,
     dead_rows: Optional[np.ndarray] = None,
+    dead_key: Optional[tuple] = None,
 ) -> SearchResult:
     """Distributed HARMONY search (host-scheduled reproduction engine).
 
@@ -200,7 +293,12 @@ def harmony_search(
     data plane's tombstones exactly: dead rows are excluded from the τ
     prewarm sample and masked out of every candidate batch before it can
     enter a heap, so a deleted/superseded id can neither appear in results
-    nor tighten pruning below the live kth-best."""
+    nor tighten pruning below the live kth-best.
+
+    ``dead_key`` — the data plane's ``(generation, dead_version)`` at the
+    snapshot this search runs against; lets the corpus cache the
+    packed→shard tombstone remap across batches (see
+    :meth:`ShardedCorpus.dead_shard_mask`)."""
     cfg = index.cfg
     plan = corpus.plan
     k = k or cfg.topk
@@ -226,15 +324,12 @@ def harmony_search(
         if pipeline
         else [_all_visits(probes, plan)]
     )
-    # remap packed-row tombstones onto the shard layout once per search
-    # (shard row lo_r+j of cluster c is packed row offsets[c]+j)
+    # remap packed-row tombstones onto the shard layout via the corpus's
+    # precomputed permutation (cached across batches when dead_key is the
+    # snapshot's (generation, dead_version))
     dead_sh = None
     if dead_rows is not None and dead_rows.any():
-        dead_sh = np.zeros((V, corpus.cap), bool)
-        for c in range(index.nlist):
-            v, lo_r, hi_r = corpus.cluster_slices[c]
-            lo, hi = index.cluster_rows(c)
-            dead_sh[v, lo_r:hi_r] = dead_rows[lo:hi]
+        dead_sh = corpus.dead_shard_mask(dead_rows, key=dead_key)
     stats.wall_other_s += time.perf_counter() - t_host0
 
     for stage in schedule:

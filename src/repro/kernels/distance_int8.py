@@ -1,0 +1,161 @@
+"""Pallas TPU kernel: int8 partial-distance accumulate with int32 MXU
+accumulation — the quantized stage-1 of the two-stage search path.
+
+Corpus and query share one affine quantization grid per dimension block
+(scale s_b, zero-point z_b), so the zero-points cancel in the difference:
+
+    d̂²_b(p, q) = s_b² · Σ_j (P_j − Q_j)²
+               = s_b²·ΣQ² − 2·s_b²·(Q·P) + s_b²·ΣP²
+
+The norm inputs (``xn2``/``qn2``) carry the already-dequantized s²·Σcode²
+terms in f32; only the Q·P term runs on the MXU, as a pure int8×int8
+matmul with ``preferred_element_type=jnp.int32`` (no f32 casts of the
+operands — the 4× narrower codes are what the MXU reads from VMEM).
+
+Everything else mirrors ``distance.py``: same grid (m_tiles, n_tiles,
+k_chunks) with k minor-most, same +inf/−inf padding conventions, same
+tile-granular ``pl.when`` early-stop with a per-tile skip map. L2 only —
+the quantized difference form has no inner-product analogue here.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(
+    x_ref,      # [bn, bk] int8 corpus codes
+    xn2_ref,    # [1, bn]  f32, s²·ΣP² for this dimension block
+    q_ref,      # [bm, bk] int8 query codes
+    qn2_ref,    # [bm, 1]  f32, s²·ΣQ² for this dimension block
+    s2_ref,     # [1, 1]   f32, s² shared by corpus and query
+    acc_ref,    # [bm, bn]
+    tau_ref,    # [bm, 1]
+    out_ref,    # [bm, bn]
+    skip_ref,   # [1, 1] int32 per-tile skip marker
+    *,
+    nk: int,
+    prune: bool,
+):
+    k = pl.program_id(2)
+    acc_in = acc_ref[...]
+    alive = jnp.isfinite(acc_in)
+    any_alive = jnp.any(alive)
+
+    @pl.when(k == 0)
+    def _init():
+        base = acc_in + qn2_ref[...] + xn2_ref[...]
+        out_ref[...] = jnp.where(alive, base, jnp.inf)
+        skip_ref[0, 0] = jnp.where(any_alive, 0, 1).astype(jnp.int32)
+
+    @pl.when(any_alive)
+    def _matmul():
+        dot = jax.lax.dot_general(
+            q_ref[...],
+            x_ref[...],
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        out_ref[...] = out_ref[...] - (2.0 * s2_ref[0, 0]) * dot.astype(
+            jnp.float32
+        )
+
+    @pl.when(k == nk - 1)
+    def _finalize():
+        out = jnp.where(alive, out_ref[...], jnp.inf)
+        if prune:
+            out = jnp.where(out > tau_ref[...], jnp.inf, out)
+        out_ref[...] = out
+
+
+def _pad_to(a: jnp.ndarray, mult: Tuple[int, ...], value) -> jnp.ndarray:
+    pads = []
+    for dim, m in zip(a.shape, mult):
+        rem = (-dim) % m
+        pads.append((0, rem))
+    if any(p[1] for p in pads):
+        a = jnp.pad(a, pads, constant_values=value)
+    return a
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("prune", "tile_m", "tile_n", "tile_k", "interpret"),
+)
+def int8_partial_distance_update(
+    x: jnp.ndarray,       # [N, Db] int8 codes
+    xn2: jnp.ndarray,     # [N] f32, s²·ΣP²
+    q: jnp.ndarray,       # [M, Db] int8 codes
+    qn2: jnp.ndarray,     # [M] f32, s²·ΣQ²
+    scale2: jnp.ndarray,  # scalar f32, shared s² of this dimension block
+    acc: jnp.ndarray,     # [M, N] f32, +inf = pruned
+    tau: jnp.ndarray,     # [M]
+    *,
+    prune: bool = True,
+    tile_m: int = 128,
+    tile_n: int = 128,
+    tile_k: int = 128,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (acc' [M, N] f32, tile_skipped [m_tiles, n_tiles] int32).
+
+    Code pad value is 0 on both operands, so padded contraction dims add
+    (0−0)² = 0 exactly; padded rows/queries follow the fp32 kernel's
+    +inf/−inf conventions.
+
+    >>> import jax.numpy as jnp
+    >>> x8 = jnp.array([[3, -2]], jnp.int8)    # one candidate row's codes
+    >>> q8 = jnp.array([[1, 2]], jnp.int8)     # one query's codes
+    >>> s2 = jnp.float32(0.25)                 # shared grid, s = 0.5
+    >>> xn2 = s2 * jnp.array([13.0]); qn2 = s2 * jnp.array([5.0])
+    >>> acc = jnp.zeros((1, 1), jnp.float32); tau = jnp.array([jnp.inf])
+    >>> out, _ = int8_partial_distance_update(
+    ...     x8, xn2, q8, qn2, s2, acc, tau,
+    ...     tile_m=8, tile_n=8, tile_k=8, interpret=True)
+    >>> float(out[0, 0])   # 0.25 * ((3-1)² + (-2-2)²)
+    5.0
+    """
+    m, n = q.shape[0], x.shape[0]
+    xp = _pad_to(x, (tile_n, tile_k), 0)
+    qp = _pad_to(q, (tile_m, tile_k), 0)
+    xn2p = _pad_to(xn2.reshape(1, -1), (1, tile_n), 0)
+    qn2p = _pad_to(qn2.reshape(-1, 1), (tile_m, 1), 0)
+    taup = _pad_to(tau.reshape(-1, 1), (tile_m, 1), jnp.float32(-jnp.inf))
+    accp = jnp.pad(
+        acc,
+        ((0, (-m) % tile_m), (0, (-n) % tile_n)),
+        constant_values=jnp.float32(jnp.inf),
+    )
+    s2p = jnp.asarray(scale2, jnp.float32).reshape(1, 1)
+    mp, np_ = accp.shape
+    dp = xp.shape[1]
+    nm, nn, nk = mp // tile_m, np_ // tile_n, dp // tile_k
+
+    out, skip = pl.pallas_call(
+        functools.partial(_kernel, nk=nk, prune=prune),
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((tile_n, tile_k), lambda i, j, k: (j, k)),   # x codes
+            pl.BlockSpec((1, tile_n), lambda i, j, k: (0, j)),        # xn2
+            pl.BlockSpec((tile_m, tile_k), lambda i, j, k: (i, k)),   # q codes
+            pl.BlockSpec((tile_m, 1), lambda i, j, k: (i, 0)),        # qn2
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),             # s²
+            pl.BlockSpec((tile_m, tile_n), lambda i, j, k: (i, j)),   # acc
+            pl.BlockSpec((tile_m, 1), lambda i, j, k: (i, 0)),        # tau
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_m, tile_n), lambda i, j, k: (i, j)),   # out
+            pl.BlockSpec((1, 1), lambda i, j, k: (i, j)),             # skip map
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            jax.ShapeDtypeStruct((nm, nn), jnp.int32),
+        ],
+        interpret=interpret,
+    )(xp, xn2p, qp, qn2p, s2p, accp, taup)
+    return out[:m, :n], skip

@@ -15,6 +15,9 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.distance import partial_distance_update as _pallas_update
+from repro.kernels.distance_int8 import (
+    int8_partial_distance_update as _pallas_update_int8,
+)
 from repro.kernels.topk_update import running_topk_update as _pallas_topk
 
 
@@ -55,6 +58,45 @@ def partial_distance_update(
         )
     out = ref.partial_distance_update_ref(
         x, xn2, q, qn2, acc, tau, prune=prune, metric=metric
+    )
+    skip = _tile_skip_map(acc, tile_m, tile_n)
+    return out, skip
+
+
+def int8_partial_distance_update(
+    x: jnp.ndarray,
+    xn2: jnp.ndarray,
+    q: jnp.ndarray,
+    qn2: jnp.ndarray,
+    scale2: jnp.ndarray,
+    acc: jnp.ndarray,
+    tau: jnp.ndarray,
+    *,
+    prune: bool = True,
+    tile_m: int = 128,
+    tile_n: int = 128,
+    tile_k: int = 128,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantized stage-1 scoring: acc' = acc + s²·‖Q−P‖²_b, pruned vs τ.
+
+    ``x``/``q`` are int8 codes on a shared per-dimension-block grid;
+    ``xn2``/``qn2`` carry the pre-scaled s²·Σcode² norms (f32). The MXU
+    contraction accumulates in int32. L2 only. Returns
+    (acc' [M,N] f32, tile_skip_map [m_tiles, n_tiles] int32).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    if use_pallas:
+        return _pallas_update_int8(
+            x, xn2, q, qn2, scale2, acc, tau,
+            prune=prune,
+            tile_m=tile_m, tile_n=tile_n, tile_k=tile_k,
+            interpret=interpret,
+        )
+    out = ref.int8_partial_distance_update_ref(
+        x, xn2, q, qn2, scale2, acc, tau, prune=prune
     )
     skip = _tile_skip_map(acc, tile_m, tile_n)
     return out, skip

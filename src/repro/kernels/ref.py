@@ -44,6 +44,38 @@ def partial_distance_update_ref(
     return out
 
 
+def int8_partial_distance_update_ref(
+    x: jnp.ndarray,       # [N, Db]  int8 corpus codes, this dimension block
+    xn2: jnp.ndarray,     # [N]      f32, s²·Σcode² of this block
+    q: jnp.ndarray,       # [M, Db]  int8 query codes (same grid as corpus)
+    qn2: jnp.ndarray,     # [M]      f32, s²·Σcode² of this block
+    scale2: jnp.ndarray,  # scalar f32, shared s² of this block
+    acc: jnp.ndarray,     # [M, N]   running partial distances; +inf = pruned
+    tau: jnp.ndarray,     # [M]      per-query pruning threshold
+    *,
+    prune: bool = True,
+) -> jnp.ndarray:
+    """Quantized-L2 analogue of ``partial_distance_update_ref``.
+
+    The Q·P contraction accumulates in int32 (codes are ≤127 in magnitude,
+    so int32 is exact for any realistic block width); everything else is
+    f32. Zero-points cancel because corpus and query share the grid.
+    """
+    dot = jnp.matmul(
+        q.astype(jnp.int32), x.astype(jnp.int32).T
+    )
+    part = (
+        qn2.astype(jnp.float32)[:, None]
+        - 2.0 * jnp.asarray(scale2, jnp.float32) * dot.astype(jnp.float32)
+        + xn2.astype(jnp.float32)[None, :]
+    )
+    out = acc.astype(jnp.float32) + part
+    out = jnp.where(jnp.isfinite(acc), out, jnp.inf)
+    if prune:
+        out = jnp.where(out > tau.astype(jnp.float32)[:, None], jnp.inf, out)
+    return out
+
+
 def masked_topk_ref(scores: jnp.ndarray, ids: jnp.ndarray, k: int):
     """Ascending top-k of finite scores per row; +inf/invalid → (-1, +inf).
 

@@ -215,11 +215,25 @@ class Compactor:
                 warnings.warn(f"background compaction failed: {e!r}")
             self._stop.wait(self.cfg.poll_s)
 
-    def stop(self) -> None:
+    def stop(self, timeout: float = 30.0) -> bool:
+        """Signal the loop and join. Returns True once the thread is down.
+
+        On a join timeout the handle is *kept* (dropping it would leak a
+        live thread that :meth:`start` could then duplicate, and the
+        stop event it still polls could be cleared under it) and the
+        failure is recorded in ``self.errors`` — call again to re-join."""
         self._stop.set()
-        if self._thread is not None:
-            self._thread.join(timeout=30.0)
-            self._thread = None
+        t = self._thread
+        if t is None:
+            return True
+        t.join(timeout=timeout)
+        if t.is_alive():
+            self.errors.append(
+                f"stop(): compactor thread still alive after {timeout}s join"
+            )
+            return False
+        self._thread = None
+        return True
 
     def __enter__(self) -> "Compactor":
         return self.start()

@@ -51,6 +51,7 @@ from repro.core import (
     merge_topk,
     plan_search,
     preassign,
+    two_stage_search,
 )
 from repro.core.types import SearchResult
 from repro.runtime import ClusterState
@@ -224,13 +225,18 @@ class HarmonyServer:
         workload_window: int = 2048,
         backend: str = "host",          # "host" | "spmd" default for batches
         executor_cfg=None,              # ExecutorConfig for the spmd backend
+        precision: str = "fp32",        # "int8" → quantized tier + fp32 re-rank
     ):
         assert backend in ("host", "spmd"), backend
+        assert precision in ("fp32", "int8"), precision
         self.data: SegmentedIndex = (
             index if isinstance(index, SegmentedIndex)
             else SegmentedIndex.from_static(index)
         )
         self.cfg = cfg or self.data.cfg
+        self.precision = precision
+        if precision == "int8":
+            assert self.cfg.metric == "l2", "int8 tier is L2-only"
         self.cluster = ClusterState.fresh(n_nodes)
         self.replan_every = replan_every
         self.backend = backend
@@ -284,6 +290,10 @@ class HarmonyServer:
             ),
             probes_sample=probes_sample,
         )
+        if self.precision == "int8":
+            # eager: quantize off the serving path (idempotent — seal()
+            # already populated the cache for segments born in this plane)
+            seg.index.int8_quant(self.cfg.quant_blocks)
         return _SegmentState(
             segment=seg, decision=decision,
             corpus=preassign(seg.index, decision.plan),
@@ -291,9 +301,15 @@ class HarmonyServer:
 
     def _executor_for(self, st: _SegmentState):
         if st.executor is None:
-            from repro.serve.executor import SpmdExecutor
+            import dataclasses as _dc
 
-            st.executor = SpmdExecutor(st.segment.index, self._executor_cfg)
+            from repro.serve.executor import ExecutorConfig, SpmdExecutor
+
+            ecfg = self._executor_cfg or ExecutorConfig()
+            if self.precision == "int8" and ecfg.precision != "int8":
+                ecfg = _dc.replace(ecfg, precision="int8",
+                                   rerank_factor=self.cfg.rerank_factor)
+            st.executor = SpmdExecutor(st.segment.index, ecfg)
         return st.executor
 
     def _sync(self, snap: DataSnapshot) -> bool:
@@ -472,9 +488,17 @@ class HarmonyServer:
                 res = self._executor_for(st).search_batch(
                     queries, k=k, probes=probes, dead_rows=dead_arg
                 )
+            elif self.precision == "int8":
+                res = two_stage_search(
+                    seg.index, queries, k=k, probes=probes,
+                    rerank_factor=self.cfg.rerank_factor,
+                    dead_rows=dead_arg,
+                    quant_blocks=self.cfg.quant_blocks,
+                )
             else:
                 res = harmony_search(
-                    seg.index, st.corpus, queries, k=k, dead_rows=dead_arg
+                    seg.index, st.corpus, queries, k=k, dead_rows=dead_arg,
+                    dead_key=(snap.generation, snap.dead_version),
                 )
             seg_results.append(res)
         parts = [(r.scores, r.ids) for r in seg_results]

@@ -75,6 +75,8 @@ class ExecutorConfig:
     qb_buckets: Tuple[int, ...] = (8, 32, 128)
     use_pallas: Optional[bool] = None   # None → Pallas on TPU, jnp elsewhere
     x_dtype: str = "float32"
+    precision: str = "fp32"         # "int8" → quantized stage-1 + fp32 re-rank
+    rerank_factor: int = 4          # int8: stage-1 keeps k·rerank_factor rows
     tile_m: int = 128
     tile_n: int = 128
     tile_k: int = 128
@@ -111,6 +113,11 @@ class SpmdExecutor:
         V, B = self.mesh.devices.shape
         self.k = index.cfg.topk
         self.metric = index.cfg.metric
+        self.precision = self.cfg.precision
+        assert self.precision in ("fp32", "int8"), self.precision
+        if self.precision == "int8":
+            assert self.metric == "l2", "int8 tier is L2-only"
+            assert self.cfg.rerank_factor >= 1, self.cfg.rerank_factor
         prune = self.cfg.prune
         if prune is None:
             prune = index.cfg.enable_pruning
@@ -143,6 +150,7 @@ class SpmdExecutor:
             metric=self.metric,
             prune=self.prune,
             x_dtype=self.cfg.x_dtype,
+            precision=self.precision,
             use_pallas=self.use_pallas,
             tile_m=self.cfg.tile_m,
             tile_n=self.cfg.tile_n,
@@ -159,45 +167,71 @@ class SpmdExecutor:
         self.cap_buckets = tuple(caps)
 
         # corpus upload: once, at construction
-        arrays = build_corpus_arrays(self.corpus, self._base_scfg)
+        quant = index.int8_quant() if self.precision == "int8" else None
+        arrays = build_corpus_arrays(self.corpus, self._base_scfg, quant=quant)
+        self._quant_grid = arrays.pop("quant_grid", None)
         sh = corpus_shardings(self._base_scfg, self.mesh)
+        names = ("x_blocks", "xn2_blocks", "cluster_ids", "row_ids")
+        if self.precision == "int8":
+            names = names + ("scale2",)
         self._resident = tuple(
-            jax.device_put(arrays[name], sh[name])
-            for name in ("x_blocks", "xn2_blocks", "cluster_ids", "row_ids")
+            jax.device_put(arrays[name], sh[name]) for name in names
         )
+        # stage-2 re-rank lookup (ext id → packed row), built lazily
+        self._id_order: Optional[np.ndarray] = None
+        self._sorted_ids: Optional[np.ndarray] = None
 
         # compile cache: (qb, cap, k, nprobe) → jit'd step
         self._steps: Dict[Tuple[int, int, int, int], object] = {}
         self.trace_counts: Dict[Tuple[int, int, int, int], int] = {}
+        # probe-table widths a compiled step exists for (see search_batch)
+        self._probe_widths: set = set()
         self.dispatches = 0
         self.queries = 0
         self.wall_s = 0.0
         self.tile_skipped = 0
         self.tile_total = 0
 
-    def warmup(self, k: Optional[int] = None, nprobe: Optional[int] = None):
+    def warmup(self, k: Optional[int] = None, nprobe=None):
         """Pre-compile the whole (qb, cap) bucket ladder.
 
         Serving paths that charge measured walls to a clock (the
         scheduler's virtual-clock replay) call this once up front so no
-        in-trace dispatch ever pays a jit compile."""
+        in-trace dispatch ever pays a jit compile.
+
+        ``nprobe`` may be an int or an iterable of probe-table widths;
+        each width gets its own compiled steps (the compile cache keys on
+        ``probes.shape[1]``, not on the config's nprobe — warming only the
+        config default used to leave every explicit-probe dispatch cold).
+        :meth:`search_batch` pads narrower probe tables up to the nearest
+        warmed width, so a single warmed width also covers anything below
+        it."""
         k = k or self.k
-        nprobe = nprobe if nprobe is not None else self.index.cfg.nprobe
-        for qb in self.qb_buckets:
-            for cap in self.cap_buckets:
-                bscfg = dataclasses.replace(
-                    self._base_scfg, qb=qb, cap=cap, k=k, nprobe=nprobe
-                )
-                step = self._get_step(bscfg)
-                rows = np.full((bscfg.v_shards, cap), -1, np.int32)
-                rows[:, 0] = 0
-                qarr = build_query_arrays(
-                    np.zeros((1, self.index.dim), np.float32), bscfg,
-                    np.zeros((1, nprobe), np.int32),
-                    np.full((1,), np.inf, np.float32),
-                )
-                step(*self._resident, rows,
-                     qarr["queries"], qarr["probes"], qarr["tau0"])
+        k_step = min(k * self.cfg.rerank_factor, self.index.nb) \
+            if self.precision == "int8" else k
+        if nprobe is None:
+            widths = (self.index.cfg.nprobe,)
+        elif np.ndim(nprobe) == 0:
+            widths = (int(nprobe),)
+        else:
+            widths = tuple(int(w) for w in nprobe)
+        for w in widths:
+            for qb in self.qb_buckets:
+                for cap in self.cap_buckets:
+                    bscfg = dataclasses.replace(
+                        self._base_scfg, qb=qb, cap=cap, k=k_step, nprobe=w
+                    )
+                    step = self._get_step(bscfg)
+                    rows = np.full((bscfg.v_shards, cap), -1, np.int32)
+                    rows[:, 0] = 0
+                    qarr = build_query_arrays(
+                        np.zeros((1, self.index.dim), np.float32), bscfg,
+                        np.zeros((1, w), np.int32),
+                        np.full((1,), np.inf, np.float32),
+                        quant_grid=self._quant_grid,
+                    )
+                    step(*self._resident, rows,
+                         qarr["queries"], qarr["probes"], qarr["tau0"])
 
     # ----------------------------------------------------------- bucketing
     def _pick_bucket(self, ladder: Tuple[int, ...], need: int) -> int:
@@ -250,14 +284,20 @@ class SpmdExecutor:
         if step is None:
             step = self._make_step(bscfg, key)
             self._steps[key] = step
+        self._probe_widths.add(bscfg.nprobe)
         return step
 
     def _make_step(self, bscfg: SpmdConfig, key):
         cap_full, db, counts = self.cap_full, bscfg.db, self.trace_counts
+        int8 = self.precision == "int8"
 
-        def device_fn(x_res, xn2_res, cl_res, id_res, rows, q_blk, probes, tau0):
+        def device_fn(x_res, xn2_res, cl_res, id_res, *rest):
             # this Python body runs only while jit traces → counts compiles
             counts[key] = counts.get(key, 0) + 1
+            if int8:
+                scale2, rows, q_blk, probes, tau0 = rest
+            else:
+                scale2, (rows, q_blk, probes, tau0) = None, rest
             x_res = x_res.reshape(cap_full, db)
             xn2_res = xn2_res.reshape(cap_full)
             cl_res = cl_res.reshape(cap_full)
@@ -268,15 +308,20 @@ class SpmdExecutor:
                 rows, x_res, xn2_res, cl_res, id_res
             )
             return ring_chunk_search(
-                bscfg, x_c, xn2_c, cl_c, id_c, q_blk, probes, tau0
+                bscfg, x_c, xn2_c, cl_c, id_c, q_blk, probes, tau0,
+                scale2=scale2,
             )
 
         ad, am = bscfg.axis_data, bscfg.axis_model
-        in_specs = (
+        resident_specs = (
             P(ad, None, am),        # x_blocks  (resident)
             P(am, ad, None),        # xn2_blocks (resident)
             P(ad, None),            # cluster_ids (resident)
             P(ad, None),            # row_ids (resident)
+        )
+        if int8:
+            resident_specs = resident_specs + (P(am),)   # scale2 (resident)
+        in_specs = resident_specs + (
             P(ad, None),            # rows (per-batch gather table)
             P(None, am),            # queries
             P(None, None),          # probes
@@ -330,6 +375,8 @@ class SpmdExecutor:
                     "pad_queries": sum(p.stats["pad_queries"] for p in parts),
                     "compiled": any(p.stats["compiled"] for p in parts),
                     "splits": len(parts),
+                    "precision": self.precision,
+                    "rerank_k": max(p.stats.get("rerank_k", 0) for p in parts),
                 },
             )
 
@@ -354,20 +401,39 @@ class SpmdExecutor:
                     "backend": "spmd", "wall_s": dt, "buckets": [],
                     "tile_skipped": 0, "tile_total": 0, "pad_queries": 0,
                     "compiled": False, "splits": 1,
+                    "precision": self.precision, "rerank_k": 0,
                 },
             )
+        int8 = self.precision == "int8"
+        # τ prewarm runs over the *original* probe table: prewarm_tau
+        # indexes per-cluster sample rows, so pad columns (-2) must never
+        # reach it. int8 stage 1 scores in the quantized metric, where an
+        # fp32-space τ seed is not a valid upper bound — start at +inf and
+        # let the travelling τ tighten within the quantized metric instead.
         tau0 = (
             prewarm_tau(self.index, queries, probes, k,
                         self.index.cfg.prewarm_samples, self.metric,
                         dead_rows=dead_rows)
-            if self.prune
+            if self.prune and not int8
             else np.full((nq,), np.inf, np.float32)
         )
+        # compile-cache alignment: the step keys on probes.shape[1]; pad a
+        # narrower probe table (-2 columns match no cluster) up to the
+        # smallest already-compiled width so explicit-probe dispatches hit
+        # warmed steps instead of recompiling per width.
+        w = probes.shape[1]
+        if w not in self._probe_widths:
+            wider = sorted(pw for pw in self._probe_widths if pw > w)
+            if wider:
+                pad = np.full((nq, wider[0] - w), -2, np.int32)
+                probes = np.concatenate([probes.astype(np.int32), pad], axis=1)
+        k_step = min(k * self.cfg.rerank_factor, self.index.nb) if int8 else k
         qb_b = self._pick_bucket(self.qb_buckets, nq)
         bscfg = dataclasses.replace(
-            self._base_scfg, qb=qb_b, cap=cap_b, k=k, nprobe=probes.shape[1]
+            self._base_scfg, qb=qb_b, cap=cap_b, k=k_step, nprobe=probes.shape[1]
         )
-        qarr = build_query_arrays(queries, bscfg, probes, tau0)
+        qarr = build_query_arrays(queries, bscfg, probes, tau0,
+                                  quant_grid=self._quant_grid)
         compiles_before = self.compiles
         step = self._get_step(bscfg)
         gs, gi, st = step(
@@ -377,6 +443,8 @@ class SpmdExecutor:
         scores = np.asarray(gs)[:nq]
         ids = np.asarray(gi)[:nq].astype(np.int64)
         ids[~np.isfinite(scores)] = -1
+        if int8:
+            scores, ids = self._rerank(queries, scores, ids, k)
         st = np.asarray(st)
         dt = time.perf_counter() - t0
         self.dispatches += 1
@@ -396,8 +464,50 @@ class SpmdExecutor:
                 "pad_queries": qb_b - nq,
                 "compiled": self.compiles > compiles_before,
                 "splits": 1,
+                "precision": self.precision,
+                "rerank_k": k_step if int8 else 0,
             },
         )
+
+    # -------------------------------------------------------------- rerank
+    def _rerank(self, queries: np.ndarray, s1_scores: np.ndarray,
+                s1_ids: np.ndarray, k: int):
+        """Exact fp32 re-rank of int8 stage-1 survivors.
+
+        Stage 1 returns the quantized-metric top ``K' = k·rerank_factor``
+        external ids; this gathers their original fp32 vectors and returns
+        the *exact* L2 top-k of that survivor set — identical scores to
+        the fp32 path whenever the true top-k survive stage 1."""
+        nq, kp = s1_ids.shape
+        if self._id_order is None:
+            self._id_order = np.argsort(self.index.ids, kind="stable")
+            self._sorted_ids = self.index.ids[self._id_order]
+        valid = np.isfinite(s1_scores) & (s1_ids >= 0)
+        safe = np.where(valid, s1_ids, self._sorted_ids[0])
+        pos = np.searchsorted(self._sorted_ids, safe)
+        rows = self._id_order[np.clip(pos, 0, self.index.nb - 1)]
+        xg = self.index.x[rows]                      # [nq, kp, D] fp32 gather
+        d = (
+            np.sum(queries * queries, axis=1)[:, None]
+            - 2.0 * np.einsum("md,mkd->mk", queries, xg)
+            + self.index.xnorm2[rows]
+        ).astype(np.float32)
+        d = np.where(valid, d, np.inf)
+        if kp > k:
+            sel = np.argpartition(d, kth=k - 1, axis=1)[:, :k]
+        else:
+            sel = np.broadcast_to(np.arange(kp)[None, :], (nq, kp))
+        sc = np.take_along_axis(d, sel, axis=1)
+        order = np.argsort(sc, axis=1, kind="stable")
+        sel = np.take_along_axis(sel, order, axis=1)
+        sc = np.take_along_axis(sc, order, axis=1)
+        out_ids = np.take_along_axis(s1_ids, sel, axis=1)
+        out_ids[~np.isfinite(sc)] = -1
+        if sc.shape[1] < k:                          # tiny corpus: pad to k
+            pad = k - sc.shape[1]
+            sc = np.pad(sc, ((0, 0), (0, pad)), constant_values=np.inf)
+            out_ids = np.pad(out_ids, ((0, 0), (0, pad)), constant_values=-1)
+        return sc, out_ids
 
     # ----------------------------------------------------------- reporting
     @property
@@ -408,6 +518,7 @@ class SpmdExecutor:
         """JSON-friendly digest (the benchmark harness folds this into the
         serving results blob)."""
         return {
+            "precision": self.precision,
             "dispatches": self.dispatches,
             "queries": self.queries,
             "wall_s": self.wall_s,

@@ -16,7 +16,10 @@ The invariants that make HARMONY's pruning *exact* rather than heuristic:
   P7  arbitrary interleavings of upsert/delete/seal/merge on the mutable
       segmented data plane match a brute-force oracle over the live
       vector set on both serving backends — deleted ids never resurface,
-      upserted ids are always reachable.
+      upserted ids are always reachable;
+  P8  the fused-kernel ``merge_topk`` equals the host heap merge for any
+      part layout — including external ids at the int32 boundary, where
+      the fused path must fall back to the heap instead of wrapping.
 """
 
 import numpy as np
@@ -279,3 +282,61 @@ def test_p7_mutable_interleavings_match_bruteforce(data_seed, backend, ops):
     # the upserted id is reachable by its own vector (distance 0; a
     # duplicate vector may tie, but the id must be in the top-k)
     assert probe_id in res.ids[0]
+
+
+@given(
+    nq=st.integers(1, 6),
+    k=st.integers(1, 8),
+    widths=st.lists(st.integers(1, 12), min_size=1, max_size=5),
+    huge_ids=st.booleans(),
+    dup_scores=st.booleans(),
+    seed=st.integers(0, 10_000),
+)
+@settings(**SETTINGS)
+def test_p8_fused_merge_topk_equals_heap(nq, k, widths, huge_ids,
+                                         dup_scores, seed):
+    from repro.core import merge_topk
+
+    rng = np.random.default_rng(seed)
+    i32max = np.iinfo(np.int32).max
+    parts = []
+    next_id = 0
+    for w in widths:
+        sc = rng.uniform(0, 10, size=(nq, w)).astype(np.float32)
+        if dup_scores:
+            # quantize scores to force ties across and within parts
+            sc = np.round(sc).astype(np.float32)
+        ids = np.arange(next_id, next_id + w, dtype=np.int64)
+        next_id += w
+        parts.append((sc, np.broadcast_to(ids, sc.shape).copy()))
+    if huge_ids:
+        # ids straddling the int32 boundary must force the host fallback
+        # (an int32 cast would wrap them into valid-looking ids)
+        parts[-1][1][:, -1] = i32max + 1
+        if parts[-1][1].shape[1] > 1:
+            parts[-1][1][:, -2] = i32max - 1
+    fused_s, fused_i = merge_topk(parts, k, fused=True)
+    host_s, host_i = merge_topk(parts, k, fused=False)
+    np.testing.assert_allclose(fused_s, host_s, rtol=1e-6, atol=1e-7)
+    assert (fused_i[~np.isfinite(fused_s)] == -1).all()
+    assert np.abs(fused_i).max(initial=0) <= max(
+        1,  # -1 padding sentinel
+        max(np.abs(np.asarray(ids)).max() for _, ids in parts),
+    )
+    # both paths agree exactly on ids except across equal-score ties,
+    # where each id they disagree on must carry the same score
+    total = np.concatenate([s for s, _ in parts], axis=1)
+    id_cat = np.concatenate([i for _, i in parts], axis=1)
+    score_of = [
+        dict(zip(id_cat[r].tolist(), total[r].tolist())) for r in range(nq)
+    ]
+    for r in range(nq):
+        for a, b, s in zip(fused_i[r], host_i[r], host_s[r]):
+            if a != b:
+                assert np.isfinite(s)
+                np.testing.assert_allclose(score_of[r][int(a)], s, rtol=1e-6)
+                np.testing.assert_allclose(score_of[r][int(b)], s, rtol=1e-6)
+    # determinism: the same parts merge to the same result, both paths
+    f2 = merge_topk(parts, k, fused=True)
+    h2 = merge_topk(parts, k, fused=False)
+    assert np.array_equal(f2[1], fused_i) and np.array_equal(h2[1], host_i)

@@ -1,0 +1,422 @@
+"""Quantized int8 scoring tier + exact fp32 re-rank (two-stage search).
+
+Covers the full tier stack: the affine per-dimension-block grid
+(``Int8Quant``), the int8 Pallas kernel vs its jnp reference, the host
+``two_stage_search`` path, the device-resident executor with
+``precision="int8"``, the serving engine's int8 dispatch on both
+backends across the mutable-plane lifecycle (seal → compact → swap →
+checkpoint-restore), and the three serving-plane bugfix regressions
+that ride along (compactor stop, executor warmup probe widths, the
+dead-mask cache in ``harmony_search``).
+"""
+
+import os
+import subprocess
+import sys
+import tempfile
+import threading
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.config import HarmonyConfig
+from repro.core import (
+    SegmentedIndex,
+    build_ivf,
+    harmony_search,
+    plan_search,
+    preassign,
+    quantize_vectors,
+    search_oracle,
+    two_stage_search,
+)
+from repro.core.index import dim_block_bounds
+from repro.data import make_dataset, make_queries
+from repro.serve import ExecutorConfig, HarmonyServer, SpmdExecutor
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+@pytest.fixture(scope="module")
+def anns():
+    ds = make_dataset(nb=3000, dim=32, n_components=8, spread=0.6, seed=0)
+    cfg = HarmonyConfig(dim=32, nlist=32, nprobe=8, topk=10, kmeans_iters=4)
+    index = build_ivf(ds.x, cfg)
+    q = make_queries(ds, nq=48, skew=0.3, noise=0.2, seed=1)
+    return ds, cfg, index, q
+
+
+def _recall(ids, ref_ids):
+    k = ref_ids.shape[1]
+    return np.mean([
+        len(set(a.tolist()) & set(b.tolist())) / k
+        for a, b in zip(ids, ref_ids)
+    ])
+
+
+def assert_matches_oracle(res, oracle):
+    finite = np.isfinite(oracle.scores)
+    assert np.array_equal(np.isfinite(res.scores), finite)
+    np.testing.assert_allclose(
+        res.scores[finite], oracle.scores[finite], rtol=1e-3, atol=1e-3
+    )
+    diff = (res.ids != oracle.ids) & finite
+    for r in np.unique(np.nonzero(diff)[0]):
+        assert np.allclose(
+            np.sort(res.scores[r]), np.sort(oracle.scores[r]),
+            rtol=1e-3, atol=1e-3,
+        ), (res.ids[r], oracle.ids[r])
+
+
+# ------------------------------------------------------------ quantizer
+
+
+def test_quant_roundtrip_and_memory(anns):
+    _, cfg, index, _ = anns
+    quant = quantize_vectors(index.x, cfg.quant_blocks)
+    assert quant.codes.dtype == np.int8
+    dec = quant.decode()
+    # the grid is fit to the corpus range, so the corpus never clips and
+    # the decode error is bounded by half a quantization step per dim
+    for b, (lo, hi) in enumerate(dim_block_bounds(index.dim, quant.d_blocks)):
+        err = np.abs(dec[:, lo:hi] - index.x[:, lo:hi])
+        assert err.max() <= quant.scale[b] / 2 + 1e-6
+    # ≥4× lower bytes-per-vector than the fp32 corpus (the acceptance
+    # bound); the per-block grid itself is O(1), not per-vector
+    assert index.x.nbytes / quant.codes.nbytes >= 4.0
+    assert index.x.nbytes / quant.memory_bytes() >= 3.99
+
+
+def test_quant_scores_are_decoded_l2(anns):
+    """The zero-point-cancelled score formula equals plain L2 between
+    the decoded corpus and decoded queries (the quantized metric)."""
+    _, cfg, index, q = anns
+    quant = index.int8_quant(cfg.quant_blocks)
+    qc = quant.encode(q[:8])
+    got = quant.scores(qc, rows=np.arange(64))
+    bounds = dim_block_bounds(index.dim, quant.d_blocks)
+    dec_q = np.zeros_like(q[:8])
+    for b, (lo, hi) in enumerate(bounds):
+        dec_q[:, lo:hi] = qc[:, lo:hi] * quant.scale[b] + quant.zero[b]
+    dec_x = quant.decode()[:64]
+    want = (
+        np.sum(dec_q * dec_q, axis=1)[:, None]
+        - 2.0 * dec_q @ dec_x.T
+        + np.sum(dec_x * dec_x, axis=1)[None, :]
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_int8_kernel_matches_ref():
+    from repro.kernels.distance_int8 import int8_partial_distance_update
+    from repro.kernels.ref import int8_partial_distance_update_ref
+
+    rng = np.random.default_rng(2)
+    m, n, kdim = 16, 48, 24
+    x = rng.integers(-127, 128, (n, kdim)).astype(np.int8)
+    q = rng.integers(-127, 128, (m, kdim)).astype(np.int8)
+    s2 = np.float32(0.01)
+    xn2 = (s2 * (x.astype(np.int64) ** 2).sum(1)).astype(np.float32)
+    qn2 = (s2 * (q.astype(np.int64) ** 2).sum(1)).astype(np.float32)
+    acc = np.zeros((m, n), np.float32)
+    acc[3] = np.inf                       # a pruned query row stays +inf
+    tau = np.full((m,), np.inf, np.float32)
+    tau[5] = 0.5                          # a tight τ prunes row 5
+    got, skip = int8_partial_distance_update(
+        x, xn2, q, qn2, s2, acc, tau, tile_m=8, tile_n=16, tile_k=8,
+        interpret=True,
+    )
+    want = int8_partial_distance_update_ref(x, xn2, q, qn2, s2, acc, tau)
+    inf = ~np.isfinite(np.asarray(want))
+    assert np.array_equal(~np.isfinite(np.asarray(got)), inf)
+    np.testing.assert_allclose(
+        np.asarray(got)[~inf], np.asarray(want)[~inf], rtol=1e-5, atol=1e-4
+    )
+
+
+# ----------------------------------------------------- host two-stage
+
+
+def test_two_stage_recall_and_exact_scores(anns):
+    _, cfg, index, q = anns
+    oracle = search_oracle(index, q, k=cfg.topk)
+    res = two_stage_search(index, q, k=cfg.topk, nprobe=cfg.nlist)
+    assert res.stats["precision"] == "int8"
+    assert _recall(res.ids, oracle.ids) >= 0.98
+    # any id the two paths agree on carries the *exact* fp32 score
+    for i in range(q.shape[0]):
+        m = dict(zip(oracle.ids[i].tolist(), oracle.scores[i].tolist()))
+        for j, e in enumerate(res.ids[i].tolist()):
+            if e in m:
+                np.testing.assert_allclose(res.scores[i, j], m[e],
+                                           rtol=1e-4, atol=1e-5)
+
+
+def test_two_stage_full_coverage_is_oracle(anns):
+    """With every cluster probed and K' = nb, stage 1 cannot drop a true
+    neighbour — the result is the oracle, bit-for-bit in score."""
+    _, cfg, index, q = anns
+    res = two_stage_search(
+        index, q[:16], k=cfg.topk, nprobe=cfg.nlist,
+        rerank_factor=-(-index.nb // cfg.topk),
+    )
+    assert_matches_oracle(res, search_oracle(index, q[:16], k=cfg.topk))
+
+
+def test_two_stage_dead_rows(anns):
+    _, cfg, index, q = anns
+    base = two_stage_search(index, q[:4], k=cfg.topk, nprobe=cfg.nlist)
+    dead = np.zeros(index.nb, bool)
+    order = np.argsort(index.ids, kind="stable")
+    top = base.ids[0, 0]
+    dead[order[np.searchsorted(index.ids[order], top)]] = True
+    res = two_stage_search(index, q[:4], k=cfg.topk, nprobe=cfg.nlist,
+                           dead_rows=dead)
+    assert top not in res.ids[0]
+
+
+# ---------------------------------------------------- device executor
+
+
+def _executor(index, **kw):
+    kw.setdefault("chunk", 128)
+    kw.setdefault("qb_buckets", (8, 32))
+    return SpmdExecutor(index, ExecutorConfig(**kw))
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_executor_int8_recall_and_exact_scores(anns, use_pallas):
+    _, cfg, index, q = anns
+    ex32 = _executor(index, use_pallas=use_pallas)
+    ex8 = _executor(index, precision="int8", use_pallas=use_pallas)
+    r32 = ex32.search_batch(q)
+    r8 = ex8.search_batch(q)
+    assert r8.stats["precision"] == "int8"
+    assert r8.stats["rerank_k"] == cfg.topk * ex8.cfg.rerank_factor
+    assert _recall(r8.ids, r32.ids) >= 0.98
+    for i in range(q.shape[0]):
+        m = dict(zip(r32.ids[i].tolist(), r32.scores[i].tolist()))
+        for j, e in enumerate(r8.ids[i].tolist()):
+            if e in m:
+                np.testing.assert_allclose(
+                    r8.scores[i, j], m[e], rtol=1e-3, atol=1e-3
+                )
+
+
+def test_executor_int8_dead_rows_and_split(anns):
+    _, cfg, index, q = anns
+    ex = _executor(index, precision="int8", qb_buckets=(8,))
+    base = ex.search_batch(q[:1])
+    dead = np.zeros(index.nb, bool)
+    order = np.argsort(index.ids, kind="stable")
+    top = base.ids[0, 0]
+    dead[order[np.searchsorted(index.ids[order], top)]] = True
+    res = ex.search_batch(q[:1], dead_rows=dead)
+    assert top not in res.ids[0]
+    # batch > biggest bucket splits and still re-ranks each part
+    big = ex.search_batch(q)       # 48 queries through qb=8 buckets
+    assert big.stats["splits"] == 6
+    assert big.stats["precision"] == "int8"
+    assert _recall(big.ids, _executor(index).search_batch(q).ids) >= 0.98
+
+
+# ---------------------------------- engine lifecycle (both backends)
+
+
+@pytest.mark.parametrize("backend", ["host", "spmd"])
+def test_engine_int8_lifecycle(anns, backend):
+    """int8 serving through seal → compact → generation swap →
+    checkpoint-restore, with deletes masked throughout."""
+    from repro.checkpoint.checkpointer import Checkpointer
+    from repro.checkpoint.index_io import (
+        load_segmented_index,
+        save_segmented_index,
+    )
+    from repro.serve.compactor import CompactionConfig, Compactor
+
+    ds, cfg, _, q = anns
+    data = SegmentedIndex.from_static(build_ivf(ds.x, cfg))
+    srv = HarmonyServer(data, n_nodes=2, backend=backend, precision="int8")
+    ref = HarmonyServer(SegmentedIndex.from_static(build_ivf(ds.x, cfg)),
+                        n_nodes=2, backend=backend)
+
+    r0 = srv.search_batch(q, k=cfg.topk)
+    assert _recall(r0.ids, ref.search_batch(q, k=cfg.topk).ids) >= 0.98
+
+    # streaming writes + a tombstone, then a full compaction cycle
+    rng = np.random.default_rng(7)
+    new_x = rng.standard_normal((64, cfg.dim)).astype(np.float32) + 30.0
+    new_ids = np.arange(500_000, 500_064)
+    srv.upsert(new_ids, new_x)
+    killed = int(r0.ids[0, 0])
+    srv.delete([killed])
+    comp = Compactor(data, srv, CompactionConfig(delta_threshold=1))
+    assert comp.maybe_compact() is not None
+    assert srv.generation == data.generation
+
+    r1 = srv.search_batch(np.concatenate([q[:8], new_x[:4]]), k=cfg.topk)
+    assert killed not in r1.ids[:8]
+    assert all(int(r1.ids[8 + i, 0]) == 500_000 + i for i in range(4))
+    # every sealed segment of the swapped-in generation carries its tier
+    for seg in data.snapshot().segments:
+        assert cfg.quant_blocks in seg.index.__dict__.get("_int8_quants", {})
+
+    # checkpoint roundtrip: the restored plane serves int8 immediately
+    with tempfile.TemporaryDirectory() as d:
+        save_segmented_index(Checkpointer(d), data)
+        data2 = load_segmented_index(Checkpointer(d))
+    for seg in data2.snapshot().segments:
+        q2 = seg.index.__dict__.get("_int8_quants", {}).get(cfg.quant_blocks)
+        assert q2 is not None          # attached, not re-derived
+    srv2 = HarmonyServer(data2, n_nodes=2, backend=backend, precision="int8")
+    r2 = srv2.search_batch(np.concatenate([q[:8], new_x[:4]]), k=cfg.topk)
+    np.testing.assert_allclose(r2.scores, r1.scores, rtol=1e-3, atol=1e-3)
+    assert killed not in r2.ids[:8]
+
+
+def test_checkpoint_persists_quant_tier(anns):
+    from repro.checkpoint.checkpointer import Checkpointer
+    from repro.checkpoint.index_io import (
+        load_segmented_index,
+        save_segmented_index,
+    )
+
+    ds, cfg, index, _ = anns
+    data = SegmentedIndex.from_static(index)
+    want = data.segments[0].index.int8_quant(cfg.quant_blocks)
+    with tempfile.TemporaryDirectory() as d:
+        save_segmented_index(Checkpointer(d), data)
+        data2 = load_segmented_index(Checkpointer(d))
+    got = data2.segments[0].index.__dict__["_int8_quants"][cfg.quant_blocks]
+    assert np.array_equal(got.codes, want.codes)
+    assert np.array_equal(got.scale, want.scale)
+    assert np.array_equal(got.zero, want.zero)
+
+
+def test_multi_device_int8_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["HARMONY_BENCH_TINY"] = "1"
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "examples" / "distributed_search.py"),
+         "--int8"],
+        env=env, capture_output=True, text=True, timeout=540,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "EXACTNESS_OK" in proc.stdout, proc.stdout + proc.stderr
+
+
+# ------------------------------------------------- bugfix regressions
+
+
+def test_compactor_stop_keeps_handle_on_timeout(anns):
+    """stop() must not drop a still-alive thread's handle: a dropped
+    handle lets start() spawn a duplicate loop and clear the stop event
+    the zombie still polls."""
+    from repro.serve.compactor import CompactionConfig, Compactor
+
+    ds, cfg, *_ = anns
+    data = SegmentedIndex.from_static(build_ivf(ds.x, cfg))
+    comp = Compactor(data, None, CompactionConfig(poll_s=0.01))
+    comp.start()
+    assert comp.stop() is True and comp._thread is None
+    assert comp.stop() is True             # idempotent once down
+
+    release = threading.Event()
+    stuck = threading.Thread(target=release.wait, daemon=True)
+    stuck.start()
+    comp._thread = stuck
+    try:
+        assert comp.stop(timeout=0.05) is False
+        assert comp._thread is stuck       # handle kept, not leaked
+        assert any("still alive" in e for e in comp.errors)
+        # start() must refuse to double-spawn while the zombie lives
+        comp.start()
+        assert comp._thread is stuck
+    finally:
+        release.set()
+        stuck.join(timeout=5.0)
+    assert comp.stop() is True and comp._thread is None
+
+
+@pytest.mark.parametrize("precision", ["fp32", "int8"])
+def test_warmup_covers_explicit_probe_widths(anns, precision):
+    """The compile cache keys on probes.shape[1]; warmup must cover the
+    widths search_batch will see, and narrower explicit probe tables get
+    padded up to a warmed width instead of compiling a new step."""
+    from repro.core import assign_queries
+
+    _, cfg, index, q = anns
+    ex = _executor(index, precision=precision)
+    ex.warmup(nprobe=[4, cfg.nprobe])
+    warmed = ex.compiles
+    assert warmed > 0
+    # width == a warmed width: no compile
+    ex.search_batch(q, probes=assign_queries(index, q, 4))
+    assert ex.compiles == warmed
+    # width < smallest warmed width: padded up, still no compile
+    probes2 = assign_queries(index, q, 2)
+    res = ex.search_batch(q, probes=probes2)
+    assert ex.compiles == warmed
+    # padding must not change results (pad columns match no cluster, and
+    # τ prewarm ran on the unpadded table)
+    fresh = _executor(index, precision=precision)
+    want = fresh.search_batch(q, probes=probes2)
+    assert np.array_equal(res.ids, want.ids)
+    np.testing.assert_allclose(res.scores, want.scores, rtol=1e-5)
+
+
+def test_dead_mask_cache_on_sharded_corpus(anns):
+    _, cfg, index, _ = anns
+    dec = plan_search(index, n_nodes=4)
+    corpus = preassign(index, dec.plan)
+    dead = np.zeros(index.nb, bool)
+    dead[::7] = True
+    m1 = corpus.dead_shard_mask(dead, key=(0, 1))
+    m2 = corpus.dead_shard_mask(dead, key=(0, 1))
+    assert m1 is m2                        # cache hit on same key
+    # the mask maps packed rows to their (shard, slot) exactly
+    naive = np.zeros_like(m1)
+    for c in range(index.nlist):
+        v, lo, hi = corpus.cluster_slices[c]
+        plo, phi = index.cluster_rows(c)
+        naive[v, lo:hi] = dead[plo:phi]
+    assert np.array_equal(m1, naive)
+    dead2 = dead.copy()
+    dead2[1] = not dead2[1]
+    m3 = corpus.dead_shard_mask(dead2, key=(0, 2))
+    assert m3 is not m1                    # new key recomputes
+    assert not np.array_equal(m3, m1)
+
+
+def test_dead_version_bumps_only_on_sealed_tombstones(anns):
+    """(generation, dead_version) must change whenever sealed tombstones
+    change — deletes don't bump the generation, so a generation-only
+    cache key would serve stale masks."""
+    ds, cfg, index, q = anns
+    data = SegmentedIndex.from_static(build_ivf(ds.x, cfg))
+    v0 = data.snapshot().dead_version
+    # delta-only ops don't touch sealed tombstones
+    data.upsert(np.array([900_000]), np.ones((1, cfg.dim), np.float32))
+    data.delete(np.array([900_000]))
+    assert data.snapshot().dead_version == v0
+    # tombstoning a sealed row must bump it
+    data.delete(np.array([0]))             # ext id 0 = ds.x[0], sealed
+    snap = data.snapshot()
+    assert snap.dead_version == v0 + 1
+
+    # end to end: harmony_search with the snapshot key returns the
+    # post-delete result (a stale cached mask would resurrect the row)
+    seg_index = data.segments[0].index
+    dec = plan_search(seg_index, n_nodes=2)
+    corpus = preassign(seg_index, dec.plan)
+    qx = ds.x[:1]
+    r1 = harmony_search(seg_index, corpus, qx, k=1,
+                        dead_rows=None, dead_key=(snap.generation, v0))
+    assert int(r1.ids[0, 0]) == 0          # self-NN while alive
+    dead = snap.dead_rows[data.segments[0].seg_id]
+    r2 = harmony_search(seg_index, corpus, qx, k=1, dead_rows=dead,
+                        dead_key=(snap.generation, snap.dead_version))
+    assert int(r2.ids[0, 0]) != 0
