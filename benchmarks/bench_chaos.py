@@ -1,0 +1,316 @@
+"""Chaos benchmark: availability, tail latency, and acknowledged-write
+survival under deterministic injected faults (PR 7's fault harness).
+
+Every scenario replays the SAME virtual-clock trace on a modeled
+(deterministic) per-query service time, with a seeded
+:class:`repro.runtime.faults.FaultPlan` installed — so each cell is a
+reproducible experiment, not a flaky stress test, and the harness can
+assert exact re-run equality ("deterministic replay" claim).
+
+Serving-plane scenarios (3-replica fleet, bounded idempotent-read
+retries, circuit breaker + health probes):
+
+* ``baseline``       — fault-free reference availability / p99;
+* ``replica_crash``  — one replica throws on its first N batches: the
+  scheduler retries onto its siblings, the breaker ejects the replica,
+  a health probe readmits it.  Claim: availability stays 1.0 and every
+  answer matches the fault-free run bit-for-bit;
+* ``straggler``      — one replica is slowed by an injected delay on
+  every batch: answers are unchanged, only the tail pays.
+
+Write-path scenarios (WAL-journaled mutable plane, crash → recover):
+
+* ``torn_wal``       — power cut mid-append of an *unacknowledged*
+  record;
+* ``compactor.<phase>`` / ``checkpoint.<site>`` — process kill between
+  compaction phases / inside the checkpoint write or publish window.
+  Claim: acknowledged-write survival is exactly 1.0 in every cell.
+
+Results are folded into ``serving_results.json`` under the ``"chaos"``
+key (schema in benchmarks/README.md), plus the usual CSV rows.
+"""
+
+from __future__ import annotations
+
+import json
+import tempfile
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.bench_serving import bursty_trace
+from benchmarks.common import TINY, corpus, emit
+from repro.checkpoint import (
+    Checkpointer,
+    WriteAheadLog,
+    checkpoint_segmented_index,
+    recover_segmented_index,
+)
+from repro.config import HarmonyConfig
+from repro.core import SegmentedIndex
+from repro.data import make_queries
+from repro.runtime.faults import FaultPlan, FaultSpec, InjectedFault, fault_scope
+from repro.serve import (
+    ReplicaFleet,
+    ReplicaSpec,
+    SchedulerConfig,
+    ServingScheduler,
+)
+from repro.serve.compactor import Compactor
+
+N_REQ = 64 if TINY else 256
+N_REPLICAS = 3
+N_NODES = 4
+MB = 8                      # dispatch batch
+SVC_PER_QUERY_S = 1e-4      # modeled service rate (deterministic clock)
+
+WRITE_OPS = 48 if TINY else 128
+CRASHES = (
+    "torn_wal",
+    "compactor.begin", "compactor.seal",
+    "compactor.prepare", "compactor.commit",
+    "checkpoint.write", "checkpoint.publish",
+)
+
+
+# ------------------------------------------------------------- serving plane
+def _fleet(index, cfg):
+    return ReplicaFleet(
+        index,
+        replicas=[ReplicaSpec(backend="host", n_nodes=N_NODES)] * N_REPLICAS,
+        cfg=cfg,
+        # round-robin pins the batch→replica mapping, so the fault
+        # window deterministically lands 6 hits on replica 0 — enough
+        # to trip the breaker (threshold 3); the sub-millisecond
+        # cooldown lets health probes readmit it within the trace
+        routing="round_robin",
+        seed=0,
+        service_time_fn=lambda r, n: n * SVC_PER_QUERY_S,
+        breaker_threshold=3,
+        breaker_cooldown_s=5e-4,
+    )
+
+
+def _replay(index, cfg, trace, plan=None):
+    """One trace replay under an optional fault plan. Returns the report
+    cell plus the raw result ids (for answer-parity checks) and the
+    plan's fire log (the determinism witness)."""
+    fleet = _fleet(index, cfg)
+    sched = ServingScheduler(
+        fleet,
+        SchedulerConfig(max_batch=MB, max_wait_s=2e-3, max_retries=2,
+                        retry_backoff_s=1e-4, request_deadline_s=1.0),
+    )
+    if plan is not None:
+        with fault_scope(plan):
+            results = sched.run_trace(trace)
+    else:
+        results = sched.run_trace(trace)
+    st, fl = sched.stats, fleet.stats
+    total = len(trace)
+    lat = st.request_latency_ms
+    cell = {
+        "requests": total,
+        "served": total - st.failed_requests,
+        "availability": (total - st.failed_requests) / total,
+        "qps": sched.served_qps,
+        "p50_ms": float(np.percentile(lat, 50)) if lat else 0.0,
+        "p99_ms": float(np.percentile(lat, 99)) if lat else 0.0,
+        "retried_batches": st.retried_batches + fl.retried_batches,
+        "failed_requests": st.failed_requests,
+        "replica_failures": fl.replica_failures,
+        "breaker_opens": fl.breaker_opens,
+        "breaker_closes": fl.breaker_closes,
+        "health_probes": fl.health_probes,
+        "faults_fired": plan.fired if plan is not None else 0,
+    }
+    ids = np.stack([r.ids for r in results]) if results else np.zeros((0,))
+    log = list(plan.log) if plan is not None else []
+    return cell, ids, log
+
+
+def _crash_plan():
+    # replica 0 throws on its first 3 executions — exactly the breaker
+    # threshold, so the breaker opens mid-burst and the first health
+    # probe after the cooldown finds it healthy and readmits it
+    return FaultPlan(
+        FaultSpec("replica.execute", where={"replica": 0}, count=3),
+        seed=0,
+    )
+
+
+def _straggler_plan():
+    return FaultPlan(
+        FaultSpec("replica.execute", kind="delay", delay_s=20 * MB * SVC_PER_QUERY_S,
+                  where={"replica": 1}, count=1_000_000),
+        seed=0,
+    )
+
+
+# --------------------------------------------------------------- write path
+def _write_survival(crash: str) -> dict:
+    """Apply WRITE_OPS acknowledged writes to a WAL-journaled plane,
+    crash at ``crash``, recover from disk, and count survivors."""
+    dim = 16
+    nb = 128 if TINY else 256
+    cfg = HarmonyConfig(dim=dim, nlist=8, nprobe=8, topk=4,
+                        kmeans_iters=2)
+    rng = np.random.default_rng(11)
+    x = rng.standard_normal((nb, dim)).astype(np.float32)
+    with tempfile.TemporaryDirectory() as tmp:
+        root = Path(tmp)
+        data = SegmentedIndex.build(x, cfg)
+        ckpt = Checkpointer(root / "ckpt", keep=3)
+        wal = WriteAheadLog(root / "wal", sync=False)
+        data.attach_wal(wal)
+        checkpoint_segmented_index(ckpt, data, wal)
+
+        model = {i: x[i] for i in range(nb)}
+        deleted: set = set()
+        next_id = nb
+        # periodic checkpoints NOT aligned with the end of the stream:
+        # the ops after the last one are exactly what WAL-tail replay
+        # must bring back
+        for i in range(WRITE_OPS):
+            if i % 16 == 8:
+                checkpoint_segmented_index(ckpt, data, wal)
+            elif i % 4 == 2:                            # deletes
+                tid = sorted(model)[int(rng.integers(0, len(model)))]
+                data.delete(np.array([tid], np.int64))
+                del model[tid]
+                deleted.add(tid)
+            else:                                       # inserts
+                v = rng.standard_normal((1, dim)).astype(np.float32)
+                data.upsert(np.array([next_id], np.int64), v)
+                model[next_id] = v[0]
+                next_id += 1
+
+        torn = crash == "torn_wal"
+        try:
+            with fault_scope(
+                FaultSpec("wal.append", kind="torn") if torn
+                else FaultSpec(crash, kind="crash")
+            ):
+                if torn:
+                    # this append never returns: the write is torn
+                    # mid-frame and therefore never acknowledged
+                    data.upsert(
+                        np.array([next_id], np.int64),
+                        rng.standard_normal((1, dim)).astype(np.float32),
+                    )
+                elif crash.startswith("compactor."):
+                    Compactor(data).run_once(merge_all=True)
+                else:
+                    checkpoint_segmented_index(ckpt, data, wal)
+        except InjectedFault:
+            pass                                        # the "kill -9"
+        acked_seq = data.wal_seq
+        wal.close()
+
+        import warnings as _w
+
+        with _w.catch_warnings():
+            _w.simplefilter("ignore")   # interrupted-overwrite repair note
+            data2, wal2, report = recover_segmented_index(
+                ckpt, root / "wal", cfg=cfg, sync=False
+            )
+        wal2.close()
+        lost = [i for i in model if not data2.has(i)]
+        phantom = [i for i in deleted if i not in model and data2.has(i)]
+        phantom += [next_id] if torn and data2.has(next_id) else []
+        acked = len(model) + len(deleted)
+        return {
+            "acked_ops": WRITE_OPS,
+            "acked_live_ids": acked,
+            "lost": len(lost),
+            "phantom": len(phantom),
+            "survival": 1.0 - len(lost) / max(acked, 1),
+            "wal_seq_match": bool(data2.wal_seq == acked_seq),
+            "replayed": report["replayed"],
+            "torn_tail": bool(report["torn_tail"]),
+        }
+
+
+def main():
+    ds, cfg, index = corpus()
+    q = make_queries(ds, nq=N_REQ, skew=0.8, hot_fraction=0.05, noise=0.2,
+                     seed=17)
+    # bursts at ~2x one replica's modeled capacity: the fleet absorbs
+    # them fault-free, so degradation below is attributable to the plan
+    trace = bursty_trace(q, burst=2 * MB, gap_s=MB * SVC_PER_QUERY_S)
+
+    print(f"# chaos: {N_REQ} reqs x {N_REPLICAS} replicas, "
+          f"modeled {SVC_PER_QUERY_S * 1e6:.0f}us/query, "
+          f"{WRITE_OPS} write ops per crash cell")
+    report = {"scenarios": {}, "write_survival": {}}
+
+    base, base_ids, _ = _replay(index, cfg, trace)
+    report["scenarios"]["baseline"] = base
+    emit("chaos.baseline", 1e6 / max(base["qps"], 1e-9),
+         f"avail={base['availability']:.3f};p99_ms={base['p99_ms']:.2f}")
+
+    crash, crash_ids, log1 = _replay(index, cfg, trace, _crash_plan())
+    report["scenarios"]["replica_crash"] = crash
+    emit("chaos.replica_crash", 1e6 / max(crash["qps"], 1e-9),
+         f"avail={crash['availability']:.3f};p99_ms={crash['p99_ms']:.2f};"
+         f"retried={crash['retried_batches']};"
+         f"breaker={crash['breaker_opens']}/{crash['breaker_closes']};"
+         f"probes={crash['health_probes']}")
+
+    slow, slow_ids, _ = _replay(index, cfg, trace, _straggler_plan())
+    report["scenarios"]["straggler"] = slow
+    emit("chaos.straggler", 1e6 / max(slow["qps"], 1e-9),
+         f"avail={slow['availability']:.3f};p99_ms={slow['p99_ms']:.2f};"
+         f"p99_inflation={slow['p99_ms'] / max(base['p99_ms'], 1e-9):.2f}x")
+
+    # --- claim: full availability + bit-identical answers under the
+    # replica crash (reads are idempotent; retries must not change them)
+    ok_avail = (
+        crash["availability"] == 1.0
+        and crash_ids.shape == base_ids.shape
+        and bool(np.array_equal(crash_ids, base_ids))
+        and np.array_equal(slow_ids, base_ids)
+    )
+    report["claim_available_under_replica_crash"] = {
+        "availability": crash["availability"],
+        "answers_match_baseline": bool(np.array_equal(crash_ids, base_ids)),
+        "ok": bool(ok_avail),
+    }
+    emit("chaos.claim.available_under_replica_crash", 0.0,
+         f"ok={ok_avail};avail={crash['availability']:.3f}")
+
+    # --- claim: the chaos replay is deterministic — a second run of the
+    # same seeded plan fires identically and serves identical answers
+    crash2, crash2_ids, log2 = _replay(index, cfg, trace, _crash_plan())
+    ok_det = (log1 == log2 and np.array_equal(crash_ids, crash2_ids)
+              and crash == crash2)
+    report["claim_deterministic_replay"] = {
+        "fires": len(log1), "ok": bool(ok_det),
+    }
+    emit("chaos.claim.deterministic_replay", 0.0,
+         f"ok={ok_det};fires={len(log1)}")
+
+    # --- write path: acknowledged-write survival across the crash matrix
+    ok_writes = True
+    for crash_site in CRASHES:
+        cell = _write_survival(crash_site)
+        report["write_survival"][crash_site] = cell
+        ok_writes = ok_writes and (
+            cell["survival"] == 1.0 and cell["phantom"] == 0
+            and cell["wal_seq_match"]
+        )
+        emit(f"chaos.write.{crash_site}", 0.0,
+             f"survival={cell['survival']:.3f};lost={cell['lost']};"
+             f"phantom={cell['phantom']};replayed={cell['replayed']}")
+    report["claim_zero_acked_write_loss"] = {"ok": bool(ok_writes)}
+    emit("chaos.claim.zero_acked_write_loss", 0.0, f"ok={ok_writes}")
+
+    # --- fold into the serving report
+    out = Path(__file__).resolve().parent / "serving_results.json"
+    blob = json.loads(out.read_text()) if out.exists() else {}
+    blob["chaos"] = report
+    out.write_text(json.dumps(blob, indent=2, sort_keys=True))
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,7 @@ def main() -> None:
         bench_ablation,
         bench_breakdown,
         bench_build,
+        bench_chaos,
         bench_executor,
         bench_fleet,
         bench_frontend,
@@ -35,6 +36,7 @@ def main() -> None:
         bench_serving,
         bench_fleet,
         bench_frontend,
+        bench_chaos,
         bench_executor,
         bench_quantization,
         bench_ingest,

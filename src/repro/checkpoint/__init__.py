@@ -1,4 +1,20 @@
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.checkpoint.index_io import load_segmented_index, save_segmented_index
+from repro.checkpoint.wal import (
+    WriteAheadLog,
+    checkpoint_segmented_index,
+    read_wal,
+    recover_segmented_index,
+    replay_wal_into,
+)
 
-__all__ = ["Checkpointer", "save_segmented_index", "load_segmented_index"]
+__all__ = [
+    "Checkpointer",
+    "save_segmented_index",
+    "load_segmented_index",
+    "WriteAheadLog",
+    "read_wal",
+    "replay_wal_into",
+    "checkpoint_segmented_index",
+    "recover_segmented_index",
+]

@@ -18,15 +18,27 @@ leaves directly onto the (possibly different) target mesh.
 from __future__ import annotations
 
 import json
+import os
 import re
 import shutil
 import threading
 import time
+import warnings
 from pathlib import Path
 from typing import Any, Dict, Optional
 
 import jax
 import numpy as np
+
+from repro.runtime.faults import fault_point
+
+
+def _fsync_file(path: Path) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def _flatten(tree) -> Dict[str, Any]:
@@ -46,9 +58,17 @@ class Checkpointer:
         self.keep = keep
         self.async_write = async_write
         self._pending: Optional[threading.Thread] = None
+        self.errors: list = []          # failed async writes (repr strings)
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree) -> Path:
+        """Write one step crash-atomically: arrays + manifest land in a
+        hidden temp dir (invisible to ``all_steps``), are fsynced, and
+        are published by a single directory rename — an interrupted
+        write (sync or async, at any instant) can never leave a corrupt
+        ``step_*`` dir, at worst dead ``.tmp_*``/``.old_*`` litter that
+        the next save of the same step sweeps. Async-mode failures are
+        recorded in ``self.errors`` and warned, never swallowed."""
         flat = _flatten(tree)
         # np.load returns ml_dtypes (bf16) arrays as raw void — store them
         # as uint16 views and reconstruct from the manifest dtype on load.
@@ -72,15 +92,43 @@ class Checkpointer:
                 shutil.rmtree(tmp)
             tmp.mkdir(parents=True)
             np.savez(tmp / "arrays.npz", **{f"{k}@shard0": v for k, v in host.items()})
+            fault_point("checkpoint.write", step=step)
             (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+            _fsync_file(tmp / "arrays.npz")
+            _fsync_file(tmp / "manifest.json")
+            # publish: directory renames are atomic, so readers see either
+            # the complete old step or the complete new one. Overwriting
+            # an existing step moves it aside first (rename, not rmtree —
+            # a crash mid-delete would tear the only copy); a crash in
+            # the window between the two renames leaves no step_ dir for
+            # this step and load_arrays falls back to the previous one.
+            old = None
             if final.exists():
-                shutil.rmtree(final)
-            tmp.rename(final)          # atomic publish
+                old = self.dir / f".old_step_{step:09d}"
+                if old.exists():
+                    shutil.rmtree(old)
+                final.rename(old)
+            fault_point("checkpoint.publish", step=step)
+            tmp.rename(final)
+            try:
+                _fsync_file(self.dir)
+            except OSError:
+                pass
+            if old is not None:
+                shutil.rmtree(old)
             self._gc()
 
         if self.async_write:
             self.wait()
-            self._pending = threading.Thread(target=write, daemon=True)
+
+            def write_guarded():
+                try:
+                    write()
+                except BaseException as e:     # noqa: BLE001 - surfaced below
+                    self.errors.append(repr(e))
+                    warnings.warn(f"async checkpoint write failed: {e!r}")
+
+            self._pending = threading.Thread(target=write_guarded, daemon=True)
             self._pending.start()
         else:
             write()
@@ -92,9 +140,47 @@ class Checkpointer:
             self._pending = None
 
     def _gc(self):
+        # an orphaned .old_step_* is a step's only surviving copy — put
+        # it back before sweeping, or the sweep would destroy data
+        self._recover_interrupted_publish()
         steps = sorted(self.all_steps())
         for s in steps[: -self.keep] if self.keep else []:
             shutil.rmtree(self.dir / f"step_{s:09d}", ignore_errors=True)
+        # crash litter: published steps never live under these names, and
+        # only one write is in flight at a time (async waits its
+        # predecessor), so anything left here is a dead interrupted write
+        for p in list(self.dir.glob(".tmp_step_*")) + list(
+            self.dir.glob(".old_step_*")
+        ):
+            if p.is_dir():
+                shutil.rmtree(p, ignore_errors=True)
+
+    def _recover_interrupted_publish(self):
+        """Undo a crash in :meth:`save`'s publish window. Overwriting an
+        existing step moves the old copy aside (``.old_step_N``) before
+        renaming the new one in; dying between the two renames leaves no
+        ``step_N`` at all — and if N was the only step, every write the
+        WAL already pruned as checkpoint-covered would be gone with it.
+        The moved-aside copy is the previously *published* step, complete
+        and fsynced, so restoring it is always safe: rename it back
+        whenever its ``step_N`` is missing. An ``.old_step_N`` whose
+        ``step_N`` exists means the publish completed — that one really
+        is dead litter and is left for the sweep."""
+        restored = []
+        for p in self.dir.glob(".old_step_*"):
+            m = re.fullmatch(r"\.old_step_(\d+)", p.name)
+            if not m or not p.is_dir():
+                continue
+            final = self.dir / f"step_{m.group(1)}"
+            if final.exists():
+                continue
+            p.rename(final)
+            restored.append(int(m.group(1)))
+            warnings.warn(
+                f"restored checkpoint step {int(m.group(1))} from an "
+                f"interrupted overwrite under {self.dir}"
+            )
+        return restored
 
     # --------------------------------------------------------------- restore
     def all_steps(self):
@@ -109,18 +195,9 @@ class Checkpointer:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def load_arrays(self, step: Optional[int] = None):
-        """Load one step's raw (manifest, flat arrays) without needing a
-        ``target_like`` pytree — for consumers whose structure is encoded
-        in the arrays themselves (e.g. the segmented-index manifest,
-        whose segment count is data). Keys are the flattened tree paths
-        (``a/b/c``). Leaves saved as bfloat16 (stored on disk as uint16
-        views) are reconstructed from the manifest dtype, as
-        :meth:`restore` does."""
-        self.wait()
-        step = step if step is not None else self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+    def _read_step(self, step: int):
+        """Fully read one step (manifest parse + every array materialized)
+        — raises on any corruption, so callers can fall back."""
         d = self.dir / f"step_{step:09d}"
         manifest = json.loads((d / "manifest.json").read_text())
         data = np.load(d / "arrays.npz")
@@ -136,17 +213,63 @@ class Checkpointer:
             arrays[key] = arr
         return manifest, arrays
 
+    def load_arrays(self, step: Optional[int] = None):
+        """Load one step's raw (manifest, flat arrays) without needing a
+        ``target_like`` pytree — for consumers whose structure is encoded
+        in the arrays themselves (e.g. the segmented-index manifest,
+        whose segment count is data). Keys are the flattened tree paths
+        (``a/b/c``). Leaves saved as bfloat16 (stored on disk as uint16
+        views) are reconstructed from the manifest dtype, as
+        :meth:`restore` does.
+
+        With no explicit ``step``, unreadable steps (a manifest or npz
+        torn by a crash that predates the atomic-publish protocol, or
+        external corruption) are *skipped with a warning* and the newest
+        readable step is returned — a damaged latest checkpoint must
+        degrade recovery to the previous one, not block it. An explicit
+        ``step`` still raises: the caller asked for that step, silently
+        substituting another would be wrong."""
+        self.wait()
+        self._recover_interrupted_publish()
+        if step is not None:
+            return self._read_step(step)
+        steps = self.all_steps()
+        for s in reversed(steps):
+            try:
+                return self._read_step(s)
+            except Exception as e:      # noqa: BLE001 - fall back + warn
+                warnings.warn(
+                    f"skipping unreadable checkpoint step {s} "
+                    f"under {self.dir}: {e!r}"
+                )
+        raise FileNotFoundError(f"no readable checkpoints under {self.dir}")
+
     def restore(self, target_like, step: Optional[int] = None,
                 shardings=None):
         """Restore into the structure of ``target_like``. ``shardings``
         (same pytree structure, of NamedSharding) reshards onto a possibly
         different mesh — the elastic restart path."""
         self.wait()
-        step = step if step is not None else self.latest_step()
+        self._recover_interrupted_publish()
         if step is None:
-            raise FileNotFoundError(f"no checkpoints under {self.dir}")
-        d = self.dir / f"step_{step:09d}"
-        data = np.load(d / "arrays.npz")
+            # same unreadable-step fallback as load_arrays: restore from
+            # the newest step whose npz actually opens
+            for s in reversed(self.all_steps()):
+                try:
+                    data = np.load(self.dir / f"step_{s:09d}" / "arrays.npz")
+                    step = s
+                    break
+                except Exception as e:  # noqa: BLE001 - fall back + warn
+                    warnings.warn(
+                        f"skipping unreadable checkpoint step {s} "
+                        f"under {self.dir}: {e!r}"
+                    )
+            if step is None:
+                raise FileNotFoundError(
+                    f"no readable checkpoints under {self.dir}"
+                )
+        else:
+            data = np.load(self.dir / f"step_{step:09d}" / "arrays.npz")
         flat_t = _flatten(target_like)
         flat_s = _flatten(shardings) if shardings is not None else {}
         import ml_dtypes

@@ -51,6 +51,9 @@ def save_segmented_index(
         meta = {
             "generation": data.generation,
             "op_count": data.op_count,
+            # WAL watermark: the last durable log record this checkpoint
+            # already contains — recovery replays only records past it
+            "wal_seq": data.wal_seq,
             "next_seg_id": data._next_seg_id,
             "seg_ids": [s.seg_id for s in data.segments],
             "seg_cfgs": [dataclasses.asdict(s.index.cfg) for s in data.segments],
@@ -124,6 +127,7 @@ def load_segmented_index(
     data = SegmentedIndex(cfg, segments)
     data.generation = int(meta["generation"])
     data.op_count = int(meta["op_count"])
+    data.wal_seq = int(meta.get("wal_seq", 0))
     data._next_seg_id = int(meta["next_seg_id"])
     # rebuild the location map from the dead bitmaps: an external id is
     # live in exactly one (segment, row) — the one whose bit is clear.

@@ -492,6 +492,12 @@ class SegmentedIndex:
         self._delta_pos: Dict[int, int] = {}
         self._journal: Optional[List[tuple]] = None     # ops during compaction
         self.op_count = 0               # total accepted upsert/delete rows
+        # optional durability hook (repro.checkpoint.wal.WriteAheadLog):
+        # when attached, every accepted write is journaled+fsynced before
+        # the call returns; wal_seq is the watermark of the last durable
+        # record (persisted in checkpoints, the replay cut on recovery)
+        self._wal = None
+        self.wal_seq = 0
 
     # ------------------------------------------------------------- builders
     @classmethod
@@ -561,6 +567,26 @@ class SegmentedIndex:
         with self._mu:
             return int(ext_id) in self._loc or int(ext_id) in self._delta_pos
 
+    @property
+    def compaction_in_flight(self) -> bool:
+        """Is a begin→commit compaction cycle currently open? (The crash-
+        recovery path rolls an orphaned one back — see
+        :meth:`repro.serve.compactor.Compactor.recover`.)"""
+        with self._mu:
+            return self._journal is not None
+
+    # ----------------------------------------------------------- durability
+    def attach_wal(self, wal) -> None:
+        """Journal every subsequently accepted write to ``wal`` (a
+        :class:`repro.checkpoint.wal.WriteAheadLog`), inside the same
+        critical section that applies it — so WAL order is apply order
+        and a write is acknowledged only once durable. A WAL append that
+        raises (disk error, injected torn write) propagates to the
+        writer: the op was **not** acknowledged and recovery will not
+        replay it. Pass ``None`` to detach."""
+        with self._mu:
+            self._wal = wal
+
     # -------------------------------------------------------------- writes
     def _kill_locked(self, ext_id: int) -> bool:
         """Remove ``ext_id``'s current live copy (sealed tombstone or delta
@@ -613,6 +639,8 @@ class SegmentedIndex:
             self.op_count += len(ids)
             if self._journal is not None:
                 self._journal.append(("upsert", ids.copy(), vecs.copy()))
+            if self._wal is not None:
+                self.wal_seq = self._wal.append_upsert(ids, vecs)
 
     def delete(self, ids: Sequence[int]) -> int:
         """Tombstone external ids. Returns how many were actually live."""
@@ -622,6 +650,8 @@ class SegmentedIndex:
             self.op_count += len(ids)
             if self._journal is not None:
                 self._journal.append(("delete", ids.copy()))
+            if self._wal is not None:
+                self.wal_seq = self._wal.append_delete(ids)
             return removed
 
     # ------------------------------------------------------------ snapshots

@@ -1,4 +1,23 @@
 from repro.runtime.elastic import ClusterState, replan_on_failure
+from repro.runtime.faults import (
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+    fault_point,
+    fault_scope,
+    install_fault_plan,
+)
 from repro.runtime.straggler import HedgingExecutor, HedgeStats
 
-__all__ = ["ClusterState", "replan_on_failure", "HedgingExecutor", "HedgeStats"]
+__all__ = [
+    "ClusterState",
+    "replan_on_failure",
+    "HedgingExecutor",
+    "HedgeStats",
+    "FaultPlan",
+    "FaultSpec",
+    "InjectedFault",
+    "fault_point",
+    "fault_scope",
+    "install_fault_plan",
+]

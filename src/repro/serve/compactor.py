@@ -61,6 +61,7 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
 from repro.core import SegmentedIndex
+from repro.runtime.faults import fault_point
 
 
 @dataclass(frozen=True)
@@ -150,14 +151,28 @@ class Compactor:
     def _run_once_locked(self, merge_all: bool, reason: str) -> Dict:
         t0 = time.perf_counter()
         plan = self.data.begin_compaction(merge_all=merge_all)
+        # the named fault sites sit BETWEEN the phases, outside the abort
+        # handler on purpose: an InjectedFault there simulates the process
+        # dying at that boundary, so the aftermath (open journal, staged-
+        # but-uncommitted segments, committed-but-unadopted generation) is
+        # exactly a kill's — :meth:`recover` is what cleans it up. A real
+        # failure *inside* seal/prepare still aborts as before.
+        fault_point("compactor.begin", reason=reason)
         try:
             segments = self.data.seal(plan)
+        except BaseException:
+            self.data.abort_compaction()
+            raise
+        fault_point("compactor.seal", reason=reason)
+        try:
             for srv in self._servers():
                 srv.prepare_segments(segments)
         except BaseException:
             self.data.abort_compaction()
             raise
+        fault_point("compactor.prepare", reason=reason)
         generation = self.data.commit_compaction(plan, segments)
+        fault_point("compactor.commit", reason=reason)
         for srv in self._servers():
             srv.adopt()
         event = {
@@ -189,6 +204,44 @@ class Compactor:
             return self._run_once_locked(
                 merge_all=(reason != "delta_full"), reason=reason
             )
+
+    # ------------------------------------------------------ crash recovery
+    def recover(self) -> Dict:
+        """Bring the plane back to a clean compactable state after a
+        crash mid-cycle (or on any restart — a no-op when clean).
+
+        The crash matrix, by the phase boundary the cycle died at:
+
+        * **begin/seal/prepare** (journal open, nothing committed) —
+          roll back: ``abort_compaction`` closes the journal. Nothing is
+          lost — begin only *snapshots* rows, so every write is still
+          live in the delta/tombstone state, and the sealed-but-never-
+          committed segments are garbage by construction;
+        * **commit** (generation bumped, replicas not yet told) —
+          roll forward: every live server ``adopt``\\ s the committed
+          generation (they would also self-heal lazily on their next
+          batch). Adopt also prunes any staged-but-never-committed
+          segment state a prepare-phase crash parked on a server.
+
+        Returns ``{"rolled_back": bool, "adopted": [...], "generation"}``.
+        """
+        rolled_back = False
+        with self._op_mu:
+            if self.data.compaction_in_flight:
+                self.data.abort_compaction()
+                rolled_back = True
+            adopted = []
+            for srv in self._servers():
+                if srv.generation != self.data.generation:
+                    adopted.append(srv.generation)
+                srv.adopt()
+        report = {
+            "rolled_back": rolled_back,
+            "adopted": adopted,
+            "generation": self.data.generation,
+        }
+        self.events.append({"reason": "recover", **report})
+        return report
 
     # ---------------------------------------------------------- background
     def start(self) -> "Compactor":

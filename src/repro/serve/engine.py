@@ -95,6 +95,16 @@ class ServeStats:
     queue_wait_ms: List[float] = field(default_factory=list)     # per request
     request_latency_ms: List[float] = field(default_factory=list)  # arrival→done
 
+    # --- resilience accounting (fleet circuit breaker + dispatch retries)
+    replica_failures: int = 0        # replica executions that raised
+    breaker_opens: int = 0           # circuit-breaker ejections
+    breaker_closes: int = 0          # half-open probes that re-admitted
+    health_probes: int = 0           # explicit half-open health checks run
+    retried_batches: int = 0         # batch dispatch attempts after a failure
+    failed_batches: int = 0          # batches that exhausted every retry
+    failed_requests: int = 0         # requests inside those failed batches
+    shutdown_leaks: int = 0          # frontend shutdowns leaving live threads
+
     @property
     def qps(self) -> float:
         """Queries per second of *summed batch execution wall*
@@ -149,6 +159,14 @@ class ServeStats:
             "capacity_batches": self.capacity_batches,
             "skew_replans": self.skew_replans,
             "hedged_batches": self.hedged_batches,
+            "replica_failures": self.replica_failures,
+            "breaker_opens": self.breaker_opens,
+            "breaker_closes": self.breaker_closes,
+            "health_probes": self.health_probes,
+            "retried_batches": self.retried_batches,
+            "failed_batches": self.failed_batches,
+            "failed_requests": self.failed_requests,
+            "shutdown_leaks": self.shutdown_leaks,
             "p50_queue_wait_ms": self._pct_or_none(self.queue_wait_ms, 50),
             "p99_queue_wait_ms": self._pct_or_none(self.queue_wait_ms, 99),
             "p50_request_latency_ms": self._pct_or_none(self.request_latency_ms, 50),

@@ -59,6 +59,7 @@ from typing import Callable, Deque, List, Optional, Sequence, Union
 import numpy as np
 
 from repro.runtime.elastic import ClusterState
+from repro.runtime.faults import fault_point
 from repro.runtime.straggler import HedgingExecutor
 from repro.serve.clock import Clock
 from repro.serve.engine import HarmonyServer, ServeStats
@@ -103,6 +104,12 @@ class Replica:
     busy_s: float = 0.0             # total service seconds
     batches: int = 0
     queries: int = 0
+    failures: int = 0               # batches this replica raised on
+    consec_failures: int = 0        # current run of failures (resets on success)
+    # circuit breaker: None = closed (routable); a time = open until then
+    # (ejected from routing), after which the replica is *half-open* — the
+    # next health probe or trial batch decides close vs re-open
+    open_until: Optional[float] = None
     ewma_per_q_s: Optional[float] = None
     service_ms: List[float] = field(default_factory=list)
     lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
@@ -186,6 +193,8 @@ class ReplicaFleet(DispatchTarget):
         latency_fn: Optional[Callable[[int, object], float]] = None,
         workload_window: int = 2048,
         seed: int = 0,
+        breaker_threshold: int = 3,
+        breaker_cooldown_s: float = 1.0,
     ):
         assert routing in ("p2c", "least_loaded", "round_robin"), routing
         if isinstance(replicas, int):
@@ -208,6 +217,12 @@ class ReplicaFleet(DispatchTarget):
         self.ewma_alpha = ewma_alpha
         self.service_time_fn = service_time_fn
         self.latency_fn = latency_fn
+        # consecutive failures that trip a replica's circuit breaker
+        # (0 disables breakers entirely) and how long it then sits out
+        # of routing before a half-open health probe may readmit it
+        self.breaker_threshold = breaker_threshold
+        self.breaker_cooldown_s = breaker_cooldown_s
+        self._breaker_active = 0        # replicas with open_until set
         self.replicas: List[Replica] = [
             Replica(self._make_server(spec), spec) for spec in replicas
         ]
@@ -290,33 +305,48 @@ class ReplicaFleet(DispatchTarget):
         live = self.cluster.live_ids()
         if live.size == 0:
             raise RuntimeError("no live replicas")
-        return min(self.replicas[int(i)].busy_until for i in live)
+        frees = [self.replicas[int(i)].busy_until for i in live
+                 if self.replicas[int(i)].open_until is None]
+        if not frees:       # every breaker open: fail open, don't stall
+            frees = [self.replicas[int(i)].busy_until for i in live]
+        return min(frees)
 
     def execute(self, queries, k, dispatch_s, batch_id):
+        if self._breaker_active:
+            self.health_check(dispatch_s)
         ranked = self._rank_replicas(queries.shape[0], dispatch_s, batch_id)
-        if self._hedge is not None:
-            hedged_before = self._hedge.stats.hedged
-            res, served_by, _ = self._hedge.run_ranked(
-                (queries, k, dispatch_s), ranked
-            )
-            if self._hedge.stats.hedged > hedged_before:
-                self.stats.hedged_batches += 1
-                if served_by != ranked[0]:
-                    # the hedge target only received the batch when the
-                    # deadline expired — its execution cannot have started
-                    # before dispatch+deadline; charge the hedge wait to
-                    # the virtual clock (the fleet's latency_fn is the
-                    # hedge *decision* model, so unlike the single-server
-                    # target it is never added to service time — real
-                    # time lives in busy_until/service accounting)
-                    shift = (dispatch_s + self._hedge.deadline_s
-                             - self._last_start_s)
-                    if shift > 0:
-                        self.replicas[served_by].busy_until += shift
-                        self._last_done_s += shift
-        else:
-            res = self._run_on(ranked[0], queries, k, dispatch_s)
-        return res, self._last_done_s
+        last_err = None
+        for attempt, r_idx in enumerate(ranked):
+            try:
+                if attempt == 0 and self._hedge is not None:
+                    hedged_before = self._hedge.stats.hedged
+                    res, served_by, _ = self._hedge.run_ranked(
+                        (queries, k, dispatch_s), ranked
+                    )
+                    if self._hedge.stats.hedged > hedged_before:
+                        self.stats.hedged_batches += 1
+                        if served_by != ranked[0]:
+                            # the hedge target only received the batch when
+                            # the deadline expired — its execution cannot
+                            # have started before dispatch+deadline; charge
+                            # the hedge wait to the virtual clock (the
+                            # fleet's latency_fn is the hedge *decision*
+                            # model, so unlike the single-server target it
+                            # is never added to service time — real time
+                            # lives in busy_until/service accounting)
+                            shift = (dispatch_s + self._hedge.deadline_s
+                                     - self._last_start_s)
+                            if shift > 0:
+                                self.replicas[served_by].busy_until += shift
+                                self._last_done_s += shift
+                else:
+                    res = self._run_on(r_idx, queries, k, dispatch_s)
+                return res, self._last_done_s
+            except Exception as e:  # noqa: BLE001 - retried on next replica
+                last_err = e
+                if attempt + 1 < len(ranked):
+                    self.stats.retried_batches += 1
+        raise last_err
 
     def execute_wall(self, queries, k, batch_id, clock: Clock):
         """Real-clock dispatch for the live front-end: route by the same
@@ -327,29 +357,43 @@ class ReplicaFleet(DispatchTarget):
         :meth:`repro.runtime.straggler.HedgingExecutor.run_ranked_wall`:
         the primary really runs, and if it misses the deadline the batch
         is re-issued to the least-loaded other replica, first result
-        wins."""
+        wins. A replica that *raises* (crash-injected or real) records a
+        failure against its breaker and the batch is retried down the
+        ranked order — replicas serve the full corpus, so a retried
+        answer is the primary answer."""
+        if self._breaker_active:
+            self.health_check(clock.now())
         n = queries.shape[0]
         with self._mu:
             ranked = self._rank_replicas(n, clock.now(), batch_id)
-            primary = self.replicas[ranked[0]]
-            # reserve the predicted service so concurrent dispatches see
-            # this replica as loaded while the batch is in flight
-            reserve_s = self._predict_service_s(primary, n)
-            primary.inflight_s += reserve_s
-        try:
-            if self._hedge is not None and len(ranked) > 1:
-                (res, done_s), served_by, hedge_fired = (
-                    self._hedge.run_ranked_wall((queries, k, clock), ranked)
-                )
-                if hedge_fired:
-                    with self._mu:
-                        self.stats.hedged_batches += 1
-            else:
-                res, done_s = self._run_on_wall(ranked[0], queries, k, clock)
-        finally:
+        last_err = None
+        for attempt, r_idx in enumerate(ranked):
+            rep = self.replicas[r_idx]
             with self._mu:
-                primary.inflight_s = max(primary.inflight_s - reserve_s, 0.0)
-        return res, done_s
+                # reserve the predicted service so concurrent dispatches
+                # see this replica as loaded while the batch is in flight
+                reserve_s = self._predict_service_s(rep, n)
+                rep.inflight_s += reserve_s
+            try:
+                if attempt == 0 and self._hedge is not None and len(ranked) > 1:
+                    (res, done_s), served_by, hedge_fired = (
+                        self._hedge.run_ranked_wall((queries, k, clock), ranked)
+                    )
+                    if hedge_fired:
+                        with self._mu:
+                            self.stats.hedged_batches += 1
+                else:
+                    res, done_s = self._run_on_wall(r_idx, queries, k, clock)
+                return res, done_s
+            except Exception as e:  # noqa: BLE001 - retried on next replica
+                last_err = e
+                if attempt + 1 < len(ranked):
+                    with self._mu:
+                        self.stats.retried_batches += 1
+            finally:
+                with self._mu:
+                    rep.inflight_s = max(rep.inflight_s - reserve_s, 0.0)
+        raise last_err
 
     # ------------------------------------------------------------- routing
     def _predict_service_s(self, rep: Replica, n_queries: int) -> float:
@@ -389,25 +433,48 @@ class ReplicaFleet(DispatchTarget):
             raise RuntimeError("no live replicas")
         if len(live) == 1:
             return live
+        # circuit breakers: open replicas sit out routing until their
+        # cooldown elapses. Fail open — when every live breaker is open,
+        # availability beats breaker purity and the full live set routes
+        # again. With no breaker active (the fault-free path) this block
+        # is skipped entirely, so routing and its rng stream are
+        # bit-identical to the breaker-less fleet.
+        if self._breaker_active:
+            avail = [r for r in live if self._routable(self.replicas[r], now)]
+            if not avail:
+                avail = live
+        else:
+            avail = live
         loads = {r: self.load_estimate(r, now, n) for r in live}
-        if self.routing == "round_robin":
-            primary = live[self._rr % len(live)]
+        if len(avail) == 1:
+            primary = avail[0]
+        elif self.routing == "round_robin":
+            primary = avail[self._rr % len(avail)]
             self._rr += 1
         elif self.routing == "p2c":
             # capacity-weighted power-of-two-choices: heterogeneous fleets
             # sample fast replicas proportionally more often (plain p2c
             # wastes every slow-slow sample), then the load estimate picks
             # between the two
-            caps = np.array([self.replicas[r].spec.capacity for r in live])
+            caps = np.array([self.replicas[r].spec.capacity for r in avail])
             a, b = self._rng.choice(
-                len(live), size=2, replace=False, p=caps / caps.sum()
+                len(avail), size=2, replace=False, p=caps / caps.sum()
             )
-            primary = min(live[int(a)], live[int(b)], key=lambda r: loads[r])
+            primary = min(avail[int(a)], avail[int(b)], key=lambda r: loads[r])
         else:                                   # least_loaded
-            primary = min(live, key=lambda r: loads[r])
+            primary = min(avail, key=lambda r: loads[r])
+        # retry/hedge order: remaining routable replicas by load, then —
+        # last resort only — open-breaker replicas by load
+        routable = set(avail)
         rest = sorted((r for r in live if r != primary),
-                      key=lambda r: loads[r])
+                      key=lambda r: (r not in routable, loads[r]))
         return [primary] + rest
+
+    @staticmethod
+    def _routable(rep: Replica, now: float) -> bool:
+        """Closed breaker, or half-open (cooldown elapsed — the replica
+        may take a trial batch)."""
+        return rep.open_until is None or now >= rep.open_until
 
     # ----------------------------------------------------------- execution
     def _make_worker(self, r_idx: int):
@@ -425,14 +492,25 @@ class ReplicaFleet(DispatchTarget):
         start_s = max(dispatch_s, rep.busy_until)
         self._last_start_s = start_s
         t0 = time.perf_counter()
-        res = rep.server.search_batch(queries, k, backend=self._backend or None)
+        try:
+            # named fault site: an installed FaultPlan can crash this
+            # replica mid-batch (raise) or stretch its service time
+            # (delay, returned in seconds and charged below)
+            extra_s = fault_point("replica.execute", replica=r_idx)
+            res = rep.server.search_batch(
+                queries, k, backend=self._backend or None
+            )
+        except Exception:
+            self._record_failure(r_idx, dispatch_s)
+            raise
         wall = time.perf_counter() - t0
         n = queries.shape[0]
         service_s = (
             self.service_time_fn(r_idx, n)
             if self.service_time_fn
             else wall / max(rep.spec.capacity, 1e-9)
-        )
+        ) + extra_s
+        self._note_success(r_idx)
         self._record_service(rep, n, service_s, done_s=start_s + service_s)
         return res
 
@@ -455,17 +533,108 @@ class ReplicaFleet(DispatchTarget):
         rep = self.replicas[r_idx]
         with rep.lock:
             t0 = clock.now()
-            res = rep.server.search_batch(
-                queries, k, backend=self._backend or None
-            )
+            try:
+                extra_s = fault_point("replica.execute", replica=r_idx)
+                res = rep.server.search_batch(
+                    queries, k, backend=self._backend or None
+                )
+            except Exception:
+                self._record_failure(r_idx, clock.now())
+                raise
             n = queries.shape[0]
             if self.service_time_fn is not None:
                 clock.sleep(
-                    self.service_time_fn(r_idx, n) - (clock.now() - t0)
+                    self.service_time_fn(r_idx, n) + extra_s
+                    - (clock.now() - t0)
                 )
+            elif extra_s > 0.0:
+                clock.sleep(extra_s)        # injected straggler latency
             done_s = clock.now()
+        self._note_success(r_idx)
         self._record_service(rep, n, done_s - t0, done_s)
         return res, done_s
+
+    # --------------------------------------------------- circuit breakers
+    def _record_failure(self, r_idx: int, now: float) -> None:
+        rep = self.replicas[r_idx]
+        with self._mu:
+            rep.failures += 1
+            rep.consec_failures += 1
+            self.stats.replica_failures += 1
+            if rep.open_until is not None:
+                # half-open trial failed: restart the cooldown
+                rep.open_until = now + self.breaker_cooldown_s
+            elif (self.breaker_threshold > 0
+                  and rep.consec_failures >= self.breaker_threshold):
+                rep.open_until = now + self.breaker_cooldown_s
+                self._breaker_active += 1
+                self.stats.breaker_opens += 1
+
+    def _note_success(self, r_idx: int) -> None:
+        rep = self.replicas[r_idx]
+        if rep.consec_failures == 0 and rep.open_until is None:
+            return          # hot path: nothing to reset, no lock taken
+        closed = False
+        with self._mu:
+            rep.consec_failures = 0
+            if rep.open_until is not None:
+                rep.open_until = None
+                self._breaker_active -= 1
+                self.stats.breaker_closes += 1
+                closed = True
+        if closed:
+            # the replica sat out routing while its breaker cooled; adopt()
+            # (outside _mu — it takes the server's own locks) catches it up
+            # on any data-plane generation it missed. No-op when current.
+            rep.server.adopt()
+
+    def health_check(self, now: Optional[float] = None):
+        """Probe every live *half-open* replica (cooldown elapsed) with a
+        one-query search. A clean probe closes the breaker and
+        ``adopt()``\\ s the replica back onto the current data-plane
+        generation; a failing probe restarts the cooldown. Runs
+        automatically at dispatch whenever any breaker is active (cheap
+        guard: skipped entirely when none is), or call it from an
+        operator loop. Returns ``[(replica_idx, ok), ...]`` for the
+        replicas probed."""
+        checked = []
+        for r_idx in range(len(self.replicas)):
+            rep = self.replicas[r_idx]
+            with self._mu:
+                half_open = (
+                    bool(self.cluster.live[r_idx])
+                    and rep.open_until is not None
+                    and (now is None or now >= rep.open_until)
+                )
+            if not half_open:
+                continue
+            ok = True
+            try:
+                fault_point("replica.execute", replica=r_idx, probe=True)
+                rep.server.search_batch(
+                    np.zeros((1, self.cfg.dim), np.float32), 1,
+                    backend=self._backend or None,
+                )
+            except Exception:   # noqa: BLE001 - probe outcome is the point
+                ok = False
+            with self._mu:
+                self.stats.health_probes += 1
+                if ok:
+                    rep.consec_failures = 0
+                    if rep.open_until is not None:
+                        rep.open_until = None
+                        self._breaker_active -= 1
+                        self.stats.breaker_closes += 1
+                else:
+                    rep.failures += 1
+                    rep.consec_failures += 1
+                    self.stats.replica_failures += 1
+                    if now is not None:
+                        rep.open_until = now + self.breaker_cooldown_s
+            if ok:
+                rep.server.adopt()
+            checked.append((r_idx, ok))
+        return checked
 
     def _record_service(self, rep: Replica, n: int, service_s: float,
                         done_s: float):
@@ -609,6 +778,8 @@ class ReplicaFleet(DispatchTarget):
                 "backend": rep.server.backend,
                 "capacity": rep.spec.capacity,
                 "live": bool(self.cluster.live[i]),
+                "failures": rep.failures,
+                "breaker_open": rep.open_until is not None,
                 "batches": rep.batches,
                 "queries": rep.queries,
                 "busy_s": rep.busy_s,

@@ -275,14 +275,41 @@ class ServingFrontend:
         res, err = None, None
         try:
             queries = np.stack([req.query for req in batch])
-            res, done_s = self.target.execute_wall(
-                queries, self.k, bid, self.clock
-            )
+            oldest_s = min(req.arrival_s for req in batch)
+            # searches are idempotent reads: a batch whose dispatch raises
+            # (replica crash past the fleet's own failover, torn target) is
+            # re-issued with linear backoff while the oldest request's age
+            # stays inside the per-request deadline budget
+            for attempt in range(self.cfg.max_retries + 1):
+                try:
+                    res, done_s = self.target.execute_wall(
+                        queries, self.k, bid, self.clock
+                    )
+                    err = None
+                    break
+                except Exception as e:      # noqa: BLE001 - bounded retry
+                    err = e
+                    if attempt >= self.cfg.max_retries:
+                        break
+                    backoff = self.cfg.retry_backoff_s * (attempt + 1)
+                    if (self.cfg.request_deadline_s > 0
+                            and (self.clock.now() - oldest_s) + backoff
+                            > self.cfg.request_deadline_s):
+                        break   # budget spent: fail now, not later
+                    with self._mu:
+                        self.stats.retried_batches += 1
+                    self.clock.sleep(backoff)
         except BaseException as e:          # noqa: BLE001 - relayed to futures
             err = e
+        if err is not None:
             done_s = self.clock.now()
         with self._mu:
             self._inflight -= 1
+            if err is not None:
+                # the batch is answered (with an error), the front-end
+                # keeps serving — degradation, not collapse
+                self.stats.failed_batches += 1
+                self.stats.failed_requests += len(batch)
             if err is None:
                 if trigger == "full":
                     self.stats.full_batches += 1
@@ -356,14 +383,21 @@ class ServingFrontend:
                 self._mu.notify_all()
 
     def shutdown(self, wait: bool = True,
-                 timeout: Optional[float] = None) -> None:
+                 timeout: Optional[float] = None) -> bool:
         """Graceful stop: refuse new submissions, then (``wait=True``)
         drain queued and in-flight work before tearing the pool down.
         With ``wait=False``, queued requests are cancelled and in-flight
         batches finish in the background. If ``timeout`` expires while
         draining, remaining in-flight batches are likewise left to finish
         in the background rather than blocking past the timeout.
-        Idempotent."""
+        Idempotent.
+
+        Returns ``True`` once everything is down (work resolved, the
+        dispatcher thread joined) — the same contract as
+        :meth:`repro.serve.compactor.Compactor.stop`. ``False`` means
+        something was left running in the background: an unexpired drain
+        timeout, or a dispatcher thread that outlived its join (also
+        recorded in ``stats.shutdown_leaks``)."""
         drained = True
         with self._mu:
             already = self._closing
@@ -380,7 +414,12 @@ class ServingFrontend:
         elif not already:
             drained = self.drain(timeout)
         self._dispatcher.join(timeout=5.0)
+        leaked = self._dispatcher.is_alive()
+        if leaked:
+            with self._mu:
+                self.stats.shutdown_leaks += 1
         self._pool.shutdown(wait=wait and drained)
+        return drained and not leaked
 
     def __enter__(self) -> "ServingFrontend":
         return self

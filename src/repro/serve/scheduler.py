@@ -86,6 +86,17 @@ class SchedulerConfig:
     hedge_deadline_s: float = 0.0   # straggler hedging; 0 → off
     backend: str = ""               # batch execution backend: "" → server
                                     # default; "host" | "spmd" to force
+    # graceful degradation (searches are idempotent reads, so re-issuing
+    # a failed batch is always safe): a batch whose dispatch raises is
+    # retried up to max_retries times with linear backoff, as long as the
+    # oldest request's age stays inside request_deadline_s (0 → no
+    # deadline budget). With max_retries=0 (default) failures propagate
+    # exactly as before; with retries enabled, an exhausted batch
+    # *degrades* instead of raising — placeholder results (ids -1,
+    # +inf scores) and failed_batches/failed_requests counters.
+    max_retries: int = 0
+    retry_backoff_s: float = 1e-3
+    request_deadline_s: float = 0.0
 
 
 @dataclass
@@ -577,9 +588,50 @@ class ServingScheduler:
         queries = np.stack([r.query for r in batch])
         stats = self.stats
 
-        res, done_s = self.target.execute(
-            queries, self.k, dispatch_s, self._batch_id
-        )
+        # bounded retry of the (idempotent) batch: each re-issue charges
+        # its backoff to the virtual clock via a later dispatch stamp
+        eff_dispatch_s = dispatch_s
+        err: Optional[BaseException] = None
+        res = done_s = None
+        for attempt in range(self.cfg.max_retries + 1):
+            try:
+                res, done_s = self.target.execute(
+                    queries, self.k, eff_dispatch_s, self._batch_id
+                )
+                err = None
+                break
+            except Exception as e:  # noqa: BLE001 - bounded retry below
+                err = e
+                if attempt >= self.cfg.max_retries:
+                    break
+                backoff = self.cfg.retry_backoff_s * (attempt + 1)
+                if (self.cfg.request_deadline_s > 0
+                        and (eff_dispatch_s + backoff - batch[0].arrival_s)
+                        > self.cfg.request_deadline_s):
+                    break       # deadline budget spent: fail now, not later
+                stats.retried_batches += 1
+                eff_dispatch_s += backoff
+        if err is not None:
+            if self.cfg.max_retries == 0:
+                raise err       # resilience off: pre-PR-7 behaviour
+            # degrade: answer the batch with sentinel results so the
+            # trace keeps replaying (availability over completeness)
+            stats.failed_batches += 1
+            stats.failed_requests += len(batch)
+            for req in batch:
+                self.done.append(RequestResult(
+                    req_id=req.req_id,
+                    ids=np.full(self.k, -1, np.int64),
+                    scores=np.full(self.k, np.inf, np.float32),
+                    arrival_s=req.arrival_s,
+                    dispatch_s=dispatch_s,
+                    done_s=eff_dispatch_s,
+                    batch_id=self._batch_id,
+                ))
+            self._batch_id += 1
+            if self.on_batch is not None:
+                self.on_batch(self._batch_id - 1, self)
+            return
         self.busy_until = max(self.busy_until, done_s)
 
         if trigger == "full":

@@ -119,10 +119,30 @@ def test_submit_drain_shutdown_smoke():
     assert s["served"] == 10 and s["served_qps"] > 0
     assert s["full_batches"] + s["deadline_batches"] + s["capacity_batches"] \
         == len(target.executed)
-    fe.shutdown()
-    fe.shutdown()                       # idempotent
+    assert fe.shutdown() is True        # clean: drained, dispatcher down
+    assert fe.shutdown() is True        # idempotent
+    assert not fe._dispatcher.is_alive()
+    assert fe.stats.shutdown_leaks == 0
     with pytest.raises(RuntimeError):
         fe.submit(np.zeros(8, np.float32))
+
+
+def test_shutdown_reports_leaks_like_compactor_stop():
+    """shutdown() returns a bool — same contract as Compactor.stop():
+    True only when nothing was left running in the background. A drain
+    timeout with work still in flight reports False (and the batch
+    finishes in the background without being lost)."""
+    target = StubTarget(service_s=0.3)
+    fe = ServingFrontend(target, SchedulerConfig(max_batch=4, max_wait_s=1e-4))
+    futs = fe.submit_many(np.zeros((4, 8), np.float32))
+    deadline = time.monotonic() + 5.0
+    while not fe._inflight and time.monotonic() < deadline:
+        time.sleep(1e-3)                # wait for the batch to be in flight
+    assert fe.shutdown(timeout=0.01) is False   # can't drain a 0.3s batch
+    results = [f.result(timeout=10) for f in futs]
+    assert len(results) == 4            # background completion, not loss
+    assert fe.shutdown() is True        # second call finds it all down
+    assert fe.stats.shutdown_leaks == 0  # dispatcher itself never leaked
 
 
 def test_request_timeline_is_wall_ordered():

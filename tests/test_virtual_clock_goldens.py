@@ -70,9 +70,14 @@ def _digest(sched, target) -> dict:
             for k, v in stats.summary().items()
             # execution-side and data-plane-side counters are not replay
             # state (the data plane grew upsert/delete/swap counters in
-            # PR 5 — always 0 in these read-only scenarios)
+            # PR 5, and resilience counters in PR 7 — always 0 in these
+            # read-only, fault-free scenarios)
             if k not in ("batches", "queries",
-                         "upserts", "deletes", "generation_swaps")
+                         "upserts", "deletes", "generation_swaps",
+                         "replica_failures", "breaker_opens",
+                         "breaker_closes", "health_probes",
+                         "retried_batches", "failed_batches",
+                         "failed_requests", "shutdown_leaks")
         },
     }
     hedge = getattr(target, "_hedge", None) or getattr(

@@ -1,0 +1,300 @@
+"""Crash-safe write path: WAL framing/repair, checkpoint rotation, and
+recovery that loses zero acknowledged writes.
+
+The contract under test (PR 7's tentpole): every write acknowledged by
+the data plane is durable — a crash at *any* instant (mid-WAL-record,
+mid-checkpoint, between the two) recovers to exactly the acknowledged
+prefix. The only record a crash may drop is one that tore mid-write,
+which by construction was never acknowledged.
+"""
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    Checkpointer,
+    WriteAheadLog,
+    checkpoint_segmented_index,
+    read_wal,
+    recover_segmented_index,
+    replay_wal_into,
+)
+from repro.config import HarmonyConfig
+from repro.core import SegmentedIndex
+from repro.runtime.faults import FaultSpec, InjectedFault, fault_scope
+
+CFG = HarmonyConfig(dim=8, nlist=4, nprobe=4, topk=4, kmeans_iters=2)
+
+
+def _plane(seed=0, nb=64):
+    rng = np.random.default_rng(seed)
+    return SegmentedIndex.build(
+        rng.standard_normal((nb, 8)).astype(np.float32), CFG
+    ), rng
+
+
+def _assert_same_live_set(data, model: dict, deleted: set):
+    for i in model:
+        assert data.has(i), f"acknowledged id {i} lost"
+    for i in deleted:
+        if i not in model:
+            assert not data.has(i), f"deleted id {i} resurfaced"
+
+
+# ------------------------------------------------------------------ framing
+def test_wal_roundtrip(tmp_path):
+    wal = WriteAheadLog(tmp_path, sync=False)
+    v = np.arange(12, dtype=np.float32).reshape(3, 4)
+    assert wal.append_upsert(np.array([5, 6, 7]), v) == 1
+    assert wal.append_delete(np.array([6])) == 2
+    wal.close()
+    r = read_wal(wal.path)
+    assert not r.torn_tail and r.last_seq == 2
+    up, de = r.records
+    assert up.kind == "upsert" and de.kind == "delete"
+    np.testing.assert_array_equal(up.ids, [5, 6, 7])
+    np.testing.assert_array_equal(up.vecs, v)
+    np.testing.assert_array_equal(de.ids, [6])
+    assert de.vecs is None
+
+
+def test_wal_torn_tail_at_every_byte(tmp_path):
+    """Truncating the file anywhere inside the final record yields the
+    intact prefix — never garbage, never a lost *earlier* record."""
+    wal = WriteAheadLog(tmp_path, sync=False)
+    wal.append_upsert(np.array([1]), np.ones((1, 4), np.float32))
+    wal.append_delete(np.array([2, 3]))
+    wal.append_upsert(np.array([4]), np.full((1, 4), 2, np.float32))
+    wal.close()
+    blob = wal.path.read_bytes()
+    full = read_wal(wal.path)
+    assert [rec.seq for rec in full.records] == [1, 2, 3]
+    second_end = full.records[1].end_offset
+    for cut in range(second_end, len(blob)):
+        wal.path.write_bytes(blob[:cut])
+        r = read_wal(wal.path)
+        assert [rec.seq for rec in r.records] == [1, 2]
+        assert r.torn_tail == (cut > second_end)
+        assert r.valid_bytes == second_end
+
+
+def test_wal_reopen_repairs_and_continues_seq(tmp_path):
+    wal = WriteAheadLog(tmp_path, sync=False)
+    wal.append_upsert(np.array([1]), np.ones((1, 4), np.float32))
+    wal.append_upsert(np.array([2]), np.ones((1, 4), np.float32))
+    wal.close()
+    # tear the tail (crash mid-write of record 2)
+    blob = wal.path.read_bytes()
+    wal.path.write_bytes(blob[:-5])
+    wal2 = WriteAheadLog(tmp_path, sync=False)
+    assert wal2.last_seq == 1                   # torn record dropped
+    assert wal2.append_delete(np.array([9])) == 2   # seq continues
+    wal2.close()
+    r = read_wal(wal2.path)
+    assert not r.torn_tail
+    assert [(rec.seq, rec.kind) for rec in r.records] == [
+        (1, "upsert"), (2, "delete")
+    ]
+
+
+def test_wal_torn_write_injection(tmp_path):
+    """A kind="torn" fault persists a partial frame then dies — the op
+    is unacknowledged, and recovery must treat it as never written."""
+    wal = WriteAheadLog(tmp_path, sync=False)
+    wal.append_upsert(np.array([1]), np.ones((1, 4), np.float32))
+    with fault_scope(FaultSpec("wal.append", kind="torn")):
+        with pytest.raises(InjectedFault):
+            wal.append_upsert(np.array([2]), np.ones((1, 4), np.float32))
+    wal.close()
+    r = read_wal(wal.path)
+    assert r.torn_tail and [rec.seq for rec in r.records] == [1]
+    # reopening repairs the tear and the next append lands cleanly
+    wal2 = WriteAheadLog(tmp_path, sync=False)
+    assert wal2.append_delete(np.array([1])) == 2
+    wal2.close()
+    r2 = read_wal(wal2.path)
+    assert not r2.torn_tail and r2.last_seq == 2
+
+
+# ----------------------------------------------------------------- rotation
+def test_rotation_prunes_only_covered_files(tmp_path):
+    wal = WriteAheadLog(tmp_path, sync=False)
+    wal.append_upsert(np.array([1]), np.ones((1, 4), np.float32))
+    wal.append_upsert(np.array([2]), np.ones((1, 4), np.float32))
+    wal.rotate(step=1, prune_up_to_seq=1)       # record 2 NOT covered
+    assert len(wal.files()) == 2                # old file kept
+    wal.append_delete(np.array([2]))
+    wal.rotate(step=2, prune_up_to_seq=3)       # everything covered now
+    assert [p.name for p in wal.files()] == ["wal_000000002.log"]
+    wal.close()
+
+
+def test_checkpoint_and_recover_equals_oracle(tmp_path):
+    data, rng = _plane()
+    ckpt = Checkpointer(tmp_path / "ckpt", keep=3)
+    wal = WriteAheadLog(tmp_path / "wal", sync=False)
+    data.attach_wal(wal)
+
+    model = {i: None for i in range(64)}
+    deleted = set()
+
+    def upsert(ids):
+        vecs = rng.standard_normal((len(ids), 8)).astype(np.float32)
+        data.upsert(np.asarray(ids, np.int64), vecs)
+        for j, i in enumerate(ids):
+            model[i] = vecs[j]
+            deleted.discard(i)
+
+    def delete(ids):
+        data.delete(np.asarray(ids, np.int64))
+        for i in ids:
+            model.pop(i, None)
+            deleted.add(i)
+
+    upsert([100, 101])
+    delete([0, 1])
+    checkpoint_segmented_index(ckpt, data, wal)     # durable point
+    upsert([102])
+    delete([100, 2])
+    upsert([2])                                     # resurrect id 2
+    wal.close()                                     # crash here
+
+    data2, wal2, report = recover_segmented_index(
+        ckpt, tmp_path / "wal", cfg=CFG, sync=False
+    )
+    assert report["replayed"] == 3 and not report["torn_tail"]
+    assert data2.wal_seq == data.wal_seq
+    _assert_same_live_set(data2, model, deleted)
+    # recovered vectors are the acknowledged ones: the resurrected id 2
+    # answers a query for its (new) vector at distance ~0
+    from repro.serve import HarmonyServer
+
+    srv = HarmonyServer(data2, n_nodes=2)
+    res = srv.search_batch(model[2][None], k=1)
+    assert int(res.ids[0, 0]) == 2
+    assert float(res.scores[0, 0]) < 1e-6
+    # journaling continues on the recovered plane
+    data2.upsert(np.array([500]), rng.standard_normal((1, 8)).astype(np.float32))
+    assert wal2.last_seq == data2.wal_seq
+    wal2.close()
+
+
+def test_recover_without_checkpoint_cold_start(tmp_path):
+    wal = WriteAheadLog(tmp_path / "wal", sync=False)
+    wal.append_upsert(np.array([7]), np.ones((1, 8), np.float32))
+    wal.close()
+    ckpt = Checkpointer(tmp_path / "ckpt")
+    with pytest.warns(UserWarning, match="recovering from WAL alone"):
+        data, wal2, report = recover_segmented_index(
+            ckpt, tmp_path / "wal", cfg=CFG, sync=False
+        )
+    assert report["replayed"] == 1 and data.has(7)
+    wal2.close()
+    with pytest.raises(FileNotFoundError):
+        recover_segmented_index(Checkpointer(tmp_path / "ckpt2"),
+                                tmp_path / "wal")
+
+
+def test_replay_refuses_attached_wal(tmp_path):
+    data, _ = _plane()
+    wal = WriteAheadLog(tmp_path, sync=False)
+    data.attach_wal(wal)
+    with pytest.raises(RuntimeError, match="detach"):
+        replay_wal_into(data, tmp_path)
+    wal.close()
+
+
+# ----------------------------------------------------- checkpointer atomics
+def test_checkpointer_crash_atomic_write_and_publish(tmp_path):
+    """A crash inside the checkpoint write or in the publish window never
+    leaves a corrupt step dir — recovery falls back to the previous
+    step, and the next save of the same step sweeps the litter."""
+    ckpt = Checkpointer(tmp_path, keep=3)
+    tree0 = {"w": np.arange(4, dtype=np.float32)}
+    ckpt.save(0, tree0)
+
+    for site in ("checkpoint.write", "checkpoint.publish"):
+        with fault_scope(FaultSpec(site, kind="crash", where={"step": 1})):
+            with pytest.raises(InjectedFault):
+                ckpt.save(1, {"w": np.full(4, 9, np.float32)})
+        assert ckpt.all_steps() == [0], site     # no torn step published
+        _, arrays = ckpt.load_arrays()
+        np.testing.assert_array_equal(arrays["w"], tree0["w"])
+
+    # the interrupted save left .tmp litter; a clean save sweeps it
+    ckpt.save(1, {"w": np.full(4, 7, np.float32)})
+    assert ckpt.all_steps() == [0, 1]
+    assert not list(tmp_path.glob(".tmp_step_*"))
+    assert not list(tmp_path.glob(".old_step_*"))
+    _, arrays = ckpt.load_arrays()
+    np.testing.assert_array_equal(arrays["w"], np.full(4, 7, np.float32))
+
+
+def test_checkpointer_overwrite_publish_crash_keeps_old_copy(tmp_path):
+    """Re-saving an existing step crashes between the two renames: the
+    old copy was moved aside, not deleted — recovery renames it back
+    (it is the previously *published* step 1, complete and fsynced),
+    so the newest step survives its own interrupted overwrite."""
+    ckpt = Checkpointer(tmp_path, keep=3)
+    ckpt.save(0, {"w": np.zeros(2, np.float32)})
+    ckpt.save(1, {"w": np.ones(2, np.float32)})
+    with fault_scope(FaultSpec("checkpoint.publish", kind="crash",
+                               where={"step": 1})):
+        with pytest.raises(InjectedFault):
+            ckpt.save(1, {"w": np.full(2, 5, np.float32)})
+    assert ckpt.all_steps() == [0]          # step 1 is mid-publish
+    with pytest.warns(UserWarning, match="interrupted overwrite"):
+        _, arrays = ckpt.load_arrays()
+    np.testing.assert_array_equal(arrays["w"], np.ones(2, np.float32))
+    assert ckpt.all_steps() == [0, 1]       # repair is durable
+
+
+def test_checkpointer_publish_crash_on_only_step_is_recoverable(tmp_path):
+    """Found by P9: overwriting the ONLY step (step = generation, which
+    never changes without compaction) and crashing mid-publish used to
+    leave no step dir at all — unrecoverable, even though the WAL had
+    already pruned records that checkpoint covered. The moved-aside
+    copy must be restored, not swept as litter."""
+    ckpt = Checkpointer(tmp_path, keep=3)
+    ckpt.save(0, {"w": np.zeros(2, np.float32)})
+    with fault_scope(FaultSpec("checkpoint.publish", kind="crash")):
+        with pytest.raises(InjectedFault):
+            ckpt.save(0, {"w": np.ones(2, np.float32)})
+    assert ckpt.all_steps() == []           # the crash window, verbatim
+    with pytest.warns(UserWarning, match="interrupted overwrite"):
+        _, arrays = ckpt.load_arrays()
+    np.testing.assert_array_equal(arrays["w"], np.zeros(2, np.float32))
+    # a later clean save must not have its _gc destroy the restored copy
+    ckpt.save(0, {"w": np.full(2, 7, np.float32)})
+    _, arrays = ckpt.load_arrays()
+    np.testing.assert_array_equal(arrays["w"], np.full(2, 7, np.float32))
+
+
+def test_load_arrays_skips_unreadable_step_with_warning(tmp_path):
+    ckpt = Checkpointer(tmp_path, keep=3)
+    ckpt.save(0, {"w": np.zeros(2, np.float32)})
+    ckpt.save(1, {"w": np.ones(2, np.float32)})
+    # externally corrupt the newest step (models pre-atomic damage)
+    (tmp_path / "step_000000001" / "arrays.npz").write_bytes(b"garbage")
+    with pytest.warns(UserWarning, match="skipping unreadable"):
+        _, arrays = ckpt.load_arrays()
+    np.testing.assert_array_equal(arrays["w"], np.zeros(2, np.float32))
+    # an explicit step still raises — the caller asked for that one
+    with pytest.raises(Exception):
+        ckpt.load_arrays(step=1)
+    # restore() takes the same fallback
+    with pytest.warns(UserWarning, match="skipping unreadable"):
+        out = ckpt.restore({"w": np.zeros(2, np.float32)})
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.zeros(2))
+
+
+def test_async_checkpoint_crash_is_surfaced(tmp_path):
+    ckpt = Checkpointer(tmp_path, keep=3, async_write=True)
+    ckpt.save(0, {"w": np.zeros(2, np.float32)})
+    ckpt.wait()
+    with fault_scope(FaultSpec("checkpoint.write", kind="crash")):
+        with pytest.warns(UserWarning, match="async checkpoint write failed"):
+            ckpt.save(1, {"w": np.ones(2, np.float32)})
+            ckpt.wait()
+    assert ckpt.errors and "InjectedFault" in ckpt.errors[0]
+    assert ckpt.all_steps() == [0]
