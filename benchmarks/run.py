@@ -17,6 +17,7 @@ def main() -> None:
         bench_build,
         bench_chaos,
         bench_executor,
+        bench_filtered,
         bench_fleet,
         bench_frontend,
         bench_ingest,
@@ -39,6 +40,7 @@ def main() -> None:
         bench_chaos,
         bench_executor,
         bench_quantization,
+        bench_filtered,
         bench_ingest,
         bench_breakdown,
         bench_ablation,

@@ -31,7 +31,7 @@ import time
 import numpy as np
 
 from repro.config import HarmonyConfig
-from repro.core import build_ivf, search_oracle
+from repro.core import SearchRequest, TagIn, build_ivf, search_oracle
 from repro.data import make_dataset, make_queries
 from repro.serve import (
     CompactionConfig,
@@ -116,7 +116,8 @@ def main():
             ids = np.arange(next_id, next_id + write_batch)
             vecs = (50.0 + wrng.standard_normal((write_batch, dim))
                     ).astype(np.float32)
-            fe.upsert(ids, vecs)
+            # tag the writer's rows so a filtered query can isolate them
+            fe.upsert(ids, vecs, meta={"source": [7] * write_batch})
             writer_log["upserts"] += write_batch
             writer_log["deletes"] += fe.delete(ids[::4])
             next_id += write_batch
@@ -135,15 +136,26 @@ def main():
             dt = t0 + arrivals[i] - time.monotonic()
             if dt > 0:
                 time.sleep(dt)
-            futs.append(fe.submit(q[i]))
+            futs.append(fe.submit(SearchRequest(vector=q[i])))
         fe.drain(timeout=120.0)
         stop_writer.set()
         wt.join(timeout=10.0)
 
+        # a filtered query through the same live front-end: the predicate
+        # restricts the scan to the writer's tagged rows, so only
+        # streamed-in ids can come back
+        fres = fe.submit(SearchRequest(
+            vector=np.full(dim, 50.0, np.float32), k=5,
+            filter=TagIn("source", (7,)),
+        )).result(timeout=30.0)
+        fhits = fres.ids[fres.ids >= 0]
+        assert len(fhits) > 0 and (fhits >= 1_000_000).all()
+        print(f"   filtered query returned {len(fhits)} writer-tagged ids")
+
         # an asyncio client rides the same front-end
         async def aclient():
             outs = await asyncio.gather(
-                *(fe.asubmit(q[i]) for i in range(8))
+                *(fe.asubmit(SearchRequest(vector=q[i])) for i in range(8))
             )
             return [o.req_id for o in outs]
 

@@ -29,7 +29,7 @@ import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.config import HarmonyConfig
-from repro.core import Int8Quant, IVFIndex, Segment, SegmentedIndex
+from repro.core import Int8Quant, IVFIndex, MetadataStore, Segment, SegmentedIndex
 
 
 def _meta_array(meta: dict) -> np.ndarray:
@@ -66,6 +66,16 @@ def save_segmented_index(
                 in s.index.__dict__.get("_int8_quants", {})
                 for s in data.segments
             ],
+            # per-segment metadata column manifest (None = segment has no
+            # metadata — old checkpoints load unchanged via .get)
+            "meta_cols": [
+                None if s.index.meta is None else {
+                    "tags": sorted(s.index.meta.tags),
+                    "nums": sorted(s.index.meta.nums),
+                    "texts": s.index.meta.texts is not None,
+                }
+                for s in data.segments
+            ],
         }
         tree = {"meta": _meta_array(meta)}
         for i, seg in enumerate(data.segments):
@@ -84,6 +94,14 @@ def save_segmented_index(
                 leaf["quant_codes"] = q.codes
                 leaf["quant_scale"] = q.scale
                 leaf["quant_zero"] = q.zero
+            ms = seg.index.meta
+            if ms is not None:
+                for name, col in ms.tags.items():
+                    leaf[f"meta_tag_{name}"] = col
+                for name, col in ms.nums.items():
+                    leaf[f"meta_num_{name}"] = col
+                if ms.texts is not None:
+                    leaf["meta_texts"] = _meta_array({"texts": list(ms.texts)})
             tree[f"segments/{i}"] = leaf
         n = data._delta_len
         live = data._delta_live[:n]
@@ -91,6 +109,9 @@ def save_segmented_index(
             "ids": data._delta_ids[:n][live].copy(),
             "x": data._delta_x[:n][live].copy(),
         }
+        delta_meta = [data._delta_meta[r] for r in np.nonzero(live)[0]]
+        if any(r for r in delta_meta):
+            tree["delta"]["meta_rows"] = _meta_array({"rows": delta_meta})
     return ckpt.save(step, tree)
 
 
@@ -104,10 +125,22 @@ def load_segmented_index(
     meta = _meta_parse(arrays["meta"])
     cfg = HarmonyConfig(**meta["cfg"])
     quantized = meta.get("quantized", [False] * len(meta["seg_ids"]))
+    meta_cols = meta.get("meta_cols", [None] * len(meta["seg_ids"]))
     segments = []
     for i, seg_id in enumerate(meta["seg_ids"]):
         pre = f"segments/{i}/"
         seg_cfg = HarmonyConfig(**meta["seg_cfgs"][i])
+        store = None
+        if meta_cols[i] is not None:
+            mc = meta_cols[i]
+            store = MetadataStore(
+                tags={n: arrays[pre + f"meta_tag_{n}"].astype(np.int64)
+                      for n in mc["tags"]},
+                nums={n: arrays[pre + f"meta_num_{n}"].astype(np.float32)
+                      for n in mc["nums"]},
+                texts=tuple(_meta_parse(arrays[pre + "meta_texts"])["texts"])
+                if mc["texts"] else None,
+            )
         index = IVFIndex(
             cfg=seg_cfg,
             centers=arrays[pre + "centers"],
@@ -116,6 +149,7 @@ def load_segmented_index(
             cluster_of=arrays[pre + "cluster_of"].astype(np.int32),
             offsets=arrays[pre + "offsets"].astype(np.int64),
             build_times={},
+            meta=store,
         )
         if quantized[i]:
             index.attach_int8_quant(Int8Quant(
@@ -141,10 +175,13 @@ def load_segmented_index(
             data._loc[int(seg.index.ids[r])] = (seg.seg_id, int(r))
     d_ids = arrays["delta/ids"].astype(np.int64)
     d_x = arrays["delta/x"].astype(np.float32)
+    d_meta = [None] * len(d_ids)
+    if "delta/meta_rows" in arrays:
+        d_meta = _meta_parse(arrays["delta/meta_rows"])["rows"]
     with data._mu:
-        for i, v in zip(d_ids, d_x):
+        for i, v, m in zip(d_ids, d_x, d_meta):
             # saved delta rows are the live set: any sealed copy of the
             # same id was tombstoned at save time (dead_rows), so a plain
             # append reconstructs the exact live state
-            data._append_delta_locked(int(i), v)
+            data._append_delta_locked(int(i), v, m)
     return data

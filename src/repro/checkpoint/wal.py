@@ -67,6 +67,10 @@ _MAGIC = b"HWAL"
 _HEADER = struct.Struct("<4sIQI")   # magic, payload_len, seq, crc32(payload)
 _KIND_UPSERT = 0
 _KIND_DELETE = 1
+# upsert carrying per-row metadata: the plain-upsert payload followed by a
+# JSON-encoded list of per-row dicts. Meta-free upserts keep kind 0, so
+# logs written before the metadata store exist byte-identically.
+_KIND_UPSERT_META = 2
 
 
 def _fsync_dir(path: Path) -> None:
@@ -93,6 +97,7 @@ class WalRecord:
     ids: np.ndarray                 # [n] int64
     vecs: Optional[np.ndarray]      # [n, D] float32 (None for deletes)
     end_offset: int
+    meta: Optional[list] = None     # [n] per-row metadata dicts, or None
 
 
 @dataclass
@@ -111,12 +116,16 @@ class WalReadResult:
         return self.records[-1].seq if self.records else 0
 
 
-def _encode(kind: int, ids: np.ndarray, vecs: Optional[np.ndarray]) -> bytes:
+def _encode(kind: int, ids: np.ndarray, vecs: Optional[np.ndarray],
+            meta: Optional[list] = None) -> bytes:
     ids = np.ascontiguousarray(ids, np.int64)
     dim = 0 if vecs is None else int(vecs.shape[1])
     out = [struct.pack("<BII", kind, len(ids), dim), ids.tobytes()]
     if vecs is not None:
         out.append(np.ascontiguousarray(vecs, np.float32).tobytes())
+    if kind == _KIND_UPSERT_META:
+        import json
+        out.append(json.dumps(meta).encode("utf-8"))
     return b"".join(out)
 
 
@@ -141,16 +150,21 @@ def read_wal(path: Path) -> WalReadResult:
         kind, n, dim = struct.unpack_from("<BII", payload, 0)
         p = struct.calcsize("<BII")
         ids = np.frombuffer(payload, np.int64, count=n, offset=p).copy()
-        vecs = None
-        if kind == _KIND_UPSERT:
+        vecs = meta = None
+        if kind in (_KIND_UPSERT, _KIND_UPSERT_META):
             vecs = np.frombuffer(
                 payload, np.float32, count=n * dim, offset=p + ids.nbytes
             ).reshape(n, dim).copy()
+            if kind == _KIND_UPSERT_META:
+                import json
+                meta = json.loads(
+                    payload[p + ids.nbytes + vecs.nbytes:].decode("utf-8")
+                )
         off = start + plen
         res.records.append(WalRecord(
             seq=int(seq),
-            kind="upsert" if kind == _KIND_UPSERT else "delete",
-            ids=ids, vecs=vecs, end_offset=off,
+            kind="delete" if kind == _KIND_DELETE else "upsert",
+            ids=ids, vecs=vecs, end_offset=off, meta=meta,
         ))
     res.valid_bytes = off
     res.torn_tail = off < len(buf)
@@ -222,8 +236,10 @@ class WriteAheadLog:
             _fsync_dir(self.dir)
 
     # ------------------------------------------------------------ append
-    def _append(self, kind: int, ids, vecs) -> int:
-        payload = _encode(kind, np.asarray(ids, np.int64).reshape(-1), vecs)
+    def _append(self, kind: int, ids, vecs, meta=None) -> int:
+        payload = _encode(
+            kind, np.asarray(ids, np.int64).reshape(-1), vecs, meta
+        )
         with self._mu:
             seq = self._next_seq
             frame = _HEADER.pack(
@@ -247,11 +263,17 @@ class WriteAheadLog:
             self._next_seq = seq + 1
             return seq
 
-    def append_upsert(self, ids, vecs) -> int:
-        """Journal one acknowledged upsert batch; returns its seq."""
+    def append_upsert(self, ids, vecs, meta=None) -> int:
+        """Journal one acknowledged upsert batch (``meta``: per-row
+        metadata dicts, or None); returns its seq."""
         vecs = np.asarray(vecs, np.float32)
         if vecs.ndim == 1:
             vecs = vecs[None]
+        if meta is not None and any(r for r in meta):
+            return self._append(
+                _KIND_UPSERT_META, ids, vecs,
+                [r or None for r in meta],
+            )
         return self._append(_KIND_UPSERT, ids, vecs)
 
     def append_delete(self, ids) -> int:
@@ -330,7 +352,7 @@ def replay_wal_into(data, directory, min_seq: int = 0) -> dict:
                 skipped += 1
                 continue
             if rec.kind == "upsert":
-                data.upsert(rec.ids, rec.vecs)
+                data.upsert(rec.ids, rec.vecs, meta=rec.meta)
             else:
                 data.delete(rec.ids)
             data.wal_seq = rec.seq

@@ -14,34 +14,54 @@ from repro.core.index import (
     DataSnapshot,
     Int8Quant,
     IVFIndex,
+    MetadataStore,
     Segment,
     SegmentedIndex,
     ShardedCorpus,
+    TAG_MISSING,
     assign_queries,
     build_ivf,
     dim_block_bounds,
     preassign,
     quantize_vectors,
 )
-from repro.core.types import PartitionPlan, SearchResult
+from repro.core.types import (
+    And,
+    DataPlane,
+    Filter,
+    NumRange,
+    Or,
+    PartitionPlan,
+    SearchRequest,
+    SearchResult,
+    TagIn,
+)
 from repro.core.planner import plan_search, factorizations, PlanDecision
 from repro.core.cost_model import HardwareModel, WorkloadStats, plan_cost, TPU_V5E
 from repro.core.search import (
     delta_topk,
+    filter_bitmap,
+    filter_excluded_rows,
+    filtered_assign_queries,
     harmony_search,
     merge_topk,
     search_oracle,
     two_stage_search,
 )
+from repro.core.fusion import BM25Index, reciprocal_rank_fusion
 from repro.core.pruning import TopKHeap, prewarm_tau, partial_scores_block
 
 __all__ = [
     "IVFIndex", "ShardedCorpus", "build_ivf", "preassign", "assign_queries",
-    "dim_block_bounds", "PartitionPlan", "SearchResult",
+    "dim_block_bounds", "PartitionPlan", "SearchResult", "SearchRequest",
+    "Filter", "TagIn", "NumRange", "And", "Or", "DataPlane",
+    "MetadataStore", "TAG_MISSING",
     "Segment", "SegmentedIndex", "DataSnapshot", "CompactionPlan",
     "Int8Quant", "quantize_vectors",
     "plan_search", "factorizations", "PlanDecision", "HardwareModel",
     "WorkloadStats", "plan_cost", "TPU_V5E", "harmony_search",
     "search_oracle", "delta_topk", "merge_topk", "two_stage_search",
+    "filter_bitmap", "filter_excluded_rows", "filtered_assign_queries",
+    "BM25Index", "reciprocal_rank_fusion",
     "TopKHeap", "prewarm_tau", "partial_scores_block",
 ]

@@ -1,0 +1,146 @@
+"""Hybrid retrieval: per-segment BM25 lexical scoring fused with vector
+top-k by reciprocal-rank fusion (RRF).
+
+The lexical tier mirrors the vector tier's shape: each sealed segment
+lazily builds one immutable :class:`BM25Index` over its metadata text
+column (packed-row order, so the same ``dead_rows``/filter bitmaps mask
+it), the delta buffer is brute-scored per query, and the per-segment
+lexical top-k lists merge by score like vector partials do. Fusion is
+rank-based (RRF), so the two tiers never need commensurable scores —
+the standard recipe for combining BM25 with dense retrieval.
+
+>>> import numpy as np
+>>> bm = BM25Index(["red shoes", "blue shoes", None, "red hat"])
+>>> s = bm.scores("red shoes")
+>>> bool(s[0] > s[1] > 0), bool(s[2] == 0.0)
+(True, True)
+>>> v_ids = np.array([[10, 11, 12]])
+>>> l_ids = np.array([[12, 13, -1]])
+>>> sc, ids = reciprocal_rank_fusion([v_ids, l_ids], k=3)
+>>> int(ids[0, 0])     # ranked by both tiers → fused to the top
+12
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+_TOKEN = re.compile(r"[a-z0-9]+")
+
+
+def tokenize(text: Optional[str]) -> List[str]:
+    """Lowercase alphanumeric tokens ('' / None → no tokens)."""
+    return _TOKEN.findall(text.lower()) if text else []
+
+
+class BM25Index:
+    """Okapi BM25 over one row-aligned text column.
+
+    Rows follow the owning corpus's packed order; ``scores`` returns a
+    dense [n] array so callers apply the same excluded-row masks they
+    already hold for the vector tier. Built once per sealed segment
+    (see :func:`segment_bm25`); delta rows are small enough to rebuild
+    per search.
+    """
+
+    def __init__(self, texts: Sequence[Optional[str]],
+                 k1: float = 1.5, b: float = 0.75):
+        self.k1, self.b = float(k1), float(b)
+        self.n = len(texts)
+        self.doc_len = np.zeros(self.n, np.float32)
+        postings: Dict[str, Dict[int, int]] = {}
+        for r, text in enumerate(texts):
+            toks = tokenize(text)
+            self.doc_len[r] = len(toks)
+            for t in toks:
+                tf = postings.setdefault(t, {})
+                tf[r] = tf.get(r, 0) + 1
+        self.avg_len = float(self.doc_len.mean()) if self.n else 0.0
+        # term -> (rows int64[m], tf float32[m])
+        self.postings: Dict[str, Tuple[np.ndarray, np.ndarray]] = {
+            t: (np.fromiter(tf.keys(), np.int64, len(tf)),
+                np.fromiter(tf.values(), np.float32, len(tf)))
+            for t, tf in postings.items()
+        }
+
+    def scores(self, text: str) -> np.ndarray:
+        """BM25 scores [n] (higher = better, 0 = no term match)."""
+        out = np.zeros(self.n, np.float32)
+        if self.n == 0 or self.avg_len == 0.0:
+            return out
+        norm = 1.0 - self.b + self.b * self.doc_len / self.avg_len
+        for t in tokenize(text):
+            post = self.postings.get(t)
+            if post is None:
+                continue
+            rows, tf = post
+            df = len(rows)
+            idf = np.log(1.0 + (self.n - df + 0.5) / (df + 0.5))
+            out[rows] += idf * tf * (self.k1 + 1.0) / (
+                tf + self.k1 * norm[rows]
+            )
+        return out
+
+    def topk(self, text: str, k: int,
+             excluded: Optional[np.ndarray] = None
+             ) -> Tuple[np.ndarray, np.ndarray]:
+        """(scores desc [≤k], rows [≤k]) of matching, non-excluded rows."""
+        sc = self.scores(text)
+        if excluded is not None:
+            sc = np.where(excluded[: self.n], 0.0, sc)
+        rows = np.nonzero(sc > 0.0)[0]
+        if rows.size > k:
+            part = np.argpartition(-sc[rows], kth=k - 1)[:k]
+            rows = rows[part]
+        order = np.argsort(-sc[rows], kind="stable")
+        rows = rows[order]
+        return sc[rows], rows
+
+
+def segment_bm25(index) -> Optional[BM25Index]:
+    """The sealed segment's lexical tier, built lazily from its metadata
+    text column and cached on the immutable index (like the int8 tier
+    and the filter bitmaps). None when the segment carries no texts."""
+    meta = index.meta
+    if meta is None or meta.texts is None:
+        return None
+    bm = index.__dict__.get("_bm25")
+    if bm is None:
+        bm = BM25Index(meta.texts)
+        index.__dict__["_bm25"] = bm
+    return bm
+
+
+def reciprocal_rank_fusion(
+    ranked_id_lists: Sequence[np.ndarray],
+    k: int,
+    k_rrf: float = 60.0,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Fuse per-tier ranked id lists into one top-k by RRF.
+
+    Each input is [NQ, K_t] int64, best-first, -1-padded. A document's
+    fused score is Σ_tiers 1/(k_rrf + rank) over the tiers that ranked
+    it; ties break toward the lower id (deterministic). Returns
+    (scores [NQ, k] float32 *ascending* — negated RRF, so the serving
+    convention "smaller is better, +inf pad" holds — and
+    ids [NQ, k] int64, -1-padded).
+    """
+    nq = ranked_id_lists[0].shape[0]
+    out_s = np.full((nq, k), np.inf, np.float32)
+    out_i = np.full((nq, k), -1, np.int64)
+    for qi in range(nq):
+        fused: Dict[int, float] = {}
+        for ids in ranked_id_lists:
+            for rank, doc in enumerate(ids[qi]):
+                doc = int(doc)
+                if doc < 0:
+                    continue
+                fused[doc] = fused.get(doc, 0.0) + 1.0 / (k_rrf + rank)
+        top = sorted(fused.items(), key=lambda kv: (-kv[1], kv[0]))[:k]
+        for j, (doc, s) in enumerate(top):
+            out_i[qi, j] = doc
+            out_s[qi, j] = -s
+    return out_s, out_i

@@ -48,6 +48,8 @@ class IVFIndex:
     cluster_of: np.ndarray       # [NB] cluster id per packed row (non-decreasing)
     offsets: np.ndarray          # [nlist + 1] row offsets per cluster
     build_times: Dict[str, float]
+    # per-row metadata (packed order), None when the corpus carries none
+    meta: Optional["MetadataStore"] = None
 
     @property
     def nb(self) -> int:
@@ -103,7 +105,8 @@ class IVFIndex:
 
 
 def build_ivf(
-    x: np.ndarray, cfg: HarmonyConfig, ext_ids: Optional[np.ndarray] = None
+    x: np.ndarray, cfg: HarmonyConfig, ext_ids: Optional[np.ndarray] = None,
+    meta=None,
 ) -> IVFIndex:
     """Train + Add stages.
 
@@ -111,6 +114,11 @@ def build_ivf(
     id (the ids returned by search); default is the row position —
     exactly the seed behaviour. Segment seals pass the surviving
     external ids through here, so ids stay stable across compactions.
+
+    ``meta`` optionally attaches per-row metadata (any form
+    :func:`meta_rows_from_batch` accepts, in *input* row order); it is
+    permuted by the same cluster sort as the vectors, so metadata stays
+    row-aligned with the packed corpus.
     """
     t0 = time.perf_counter()
     centers, assign = kmeans_fit_np(
@@ -128,6 +136,15 @@ def build_ivf(
     t_add = time.perf_counter() - t0
 
     ids = order if ext_ids is None else np.asarray(ext_ids, np.int64)[order]
+    store = None
+    if meta is not None:
+        if isinstance(meta, MetadataStore):
+            store = meta.select(order)
+        else:
+            rows = meta_rows_from_batch(meta, len(x))
+            store = meta_rows_to_store(
+                None if rows is None else [rows[i] for i in order]
+            )
     return IVFIndex(
         cfg=cfg,
         centers=centers.astype(np.float32),
@@ -136,6 +153,7 @@ def build_ivf(
         cluster_of=cluster_sorted.astype(np.int32),
         offsets=offsets,
         build_times={"train": t_train, "add": t_add},
+        meta=store,
     )
 
 
@@ -394,6 +412,134 @@ def preassign(index: IVFIndex, plan: PartitionPlan, pad_to: int = 64) -> Sharded
 
 
 # ---------------------------------------------------------------------------
+# Per-row metadata (filtered / hybrid search)
+# ---------------------------------------------------------------------------
+
+# fill value for tag columns a row never carried (a merged segment unions
+# the columns of its sources) — a predicate only matches it if the caller
+# filters for this exact sentinel
+TAG_MISSING = np.iinfo(np.int64).min
+
+
+@dataclass(frozen=True)
+class MetadataStore:
+    """Columnar per-row metadata aligned with one packed corpus.
+
+    ``tags[name][r]`` / ``nums[name][r]`` are row r's int tag / float
+    numeric attributes; ``texts[r]`` is its lexical document (or None).
+    Rows follow the owning index's packed order, so a
+    :class:`repro.core.types.Filter` evaluates straight to a packed-row
+    bitmap that plugs into the ``dead_rows`` masking path. Missing values
+    are :data:`TAG_MISSING` / NaN / None — none of which satisfy a
+    ``TagIn`` / ``NumRange`` predicate on the column.
+    """
+
+    tags: Dict[str, np.ndarray]                 # name -> [NB] int64
+    nums: Dict[str, np.ndarray]                 # name -> [NB] float32
+    texts: Optional[Tuple[Optional[str], ...]] = None   # [NB] or None
+
+    @property
+    def n(self) -> int:
+        for col in self.tags.values():
+            return int(col.shape[0])
+        for col in self.nums.values():
+            return int(col.shape[0])
+        return 0 if self.texts is None else len(self.texts)
+
+    def row(self, r: int) -> dict:
+        """Row r as a plain per-row dict (python-native values)."""
+        out = {}
+        for k, col in self.tags.items():
+            if col[r] != TAG_MISSING:
+                out[k] = int(col[r])
+        for k, col in self.nums.items():
+            if not np.isnan(col[r]):
+                out[k] = float(col[r])
+        if self.texts is not None and self.texts[r] is not None:
+            out["text"] = self.texts[r]
+        return out
+
+    def select(self, rows: np.ndarray) -> "MetadataStore":
+        """Sub-store of the given packed rows (gather/permutation)."""
+        return MetadataStore(
+            tags={k: col[rows] for k, col in self.tags.items()},
+            nums={k: col[rows] for k, col in self.nums.items()},
+            texts=None if self.texts is None
+            else tuple(self.texts[int(r)] for r in rows),
+        )
+
+    def memory_bytes(self) -> int:
+        out = sum(c.nbytes for c in self.tags.values())
+        out += sum(c.nbytes for c in self.nums.values())
+        if self.texts is not None:
+            out += sum(len(t) for t in self.texts if t)
+        return out
+
+
+def meta_rows_from_batch(meta, n: int) -> Optional[List[Optional[dict]]]:
+    """Normalize a batch ``meta`` argument to per-row dicts.
+
+    Accepts a dict of columns (each an [n] array/list; a ``"text"``
+    column of strings feeds the lexical scorer), a list of per-row
+    dicts, or None. Values become python natives so rows can be
+    journaled / JSON-encoded verbatim."""
+    if meta is None:
+        return None
+    if isinstance(meta, dict):
+        rows: List[Optional[dict]] = [{} for _ in range(n)]
+        for name, col in meta.items():
+            vals = list(col)
+            assert len(vals) == n, (name, len(vals), n)
+            for i, v in enumerate(vals):
+                if v is None:
+                    continue
+                if isinstance(v, str):
+                    rows[i][name] = v
+                elif isinstance(v, (bool, int, np.integer)):
+                    rows[i][name] = int(v)
+                else:
+                    rows[i][name] = float(v)
+        return rows
+    rows = [None if r is None else dict(r) for r in meta]
+    assert len(rows) == n, (len(rows), n)
+    return rows
+
+
+def meta_rows_to_store(
+    rows: Optional[Sequence[Optional[dict]]],
+) -> Optional[MetadataStore]:
+    """Per-row dicts → columnar store (None when no row carries any).
+
+    Column typing is by value: all-integral → tag column, otherwise
+    numeric; the ``"text"`` column (strings) becomes ``texts``."""
+    if rows is None or not any(r for r in rows):
+        return None
+    n = len(rows)
+    cols: Dict[str, list] = {}
+    for i, r in enumerate(rows):
+        if not r:
+            continue
+        for k, v in r.items():
+            cols.setdefault(k, [None] * n)[i] = v
+    tags, nums, texts = {}, {}, None
+    for name, vals in cols.items():
+        if any(isinstance(v, str) for v in vals if v is not None):
+            assert name == "text", f"string column must be named 'text': {name}"
+            texts = tuple(vals)
+            continue
+        if all(isinstance(v, (bool, int, np.integer))
+               for v in vals if v is not None):
+            tags[name] = np.asarray(
+                [TAG_MISSING if v is None else int(v) for v in vals], np.int64
+            )
+        else:
+            nums[name] = np.asarray(
+                [np.nan if v is None else float(v) for v in vals], np.float32
+            )
+    return MetadataStore(tags=tags, nums=nums, texts=texts)
+
+
+# ---------------------------------------------------------------------------
 # Mutable segmented data plane
 # ---------------------------------------------------------------------------
 
@@ -427,6 +573,8 @@ class CompactionPlan:
     carry_seg_ids: Tuple[int, ...]
     ids: np.ndarray                 # [n] int64, sorted ascending
     x: np.ndarray                   # [n, D] float32
+    # per-row metadata dicts aligned with ids/x (None when no row has any)
+    meta: Optional[Tuple[Optional[dict], ...]] = None
 
 
 class SegmentedIndex:
@@ -488,6 +636,7 @@ class SegmentedIndex:
         self._delta_x = np.zeros((0, cfg.dim), np.float32)
         self._delta_ids = np.zeros((0,), np.int64)
         self._delta_live = np.zeros((0,), bool)
+        self._delta_meta: List[Optional[dict]] = []   # row n -> meta dict
         self._delta_len = 0
         self._delta_pos: Dict[int, int] = {}
         self._journal: Optional[List[tuple]] = None     # ops during compaction
@@ -602,7 +751,8 @@ class SegmentedIndex:
             return True
         return False
 
-    def _append_delta_locked(self, ext_id: int, vec: np.ndarray) -> None:
+    def _append_delta_locked(self, ext_id: int, vec: np.ndarray,
+                             meta_row: Optional[dict] = None) -> None:
         n = self._delta_len
         if n == len(self._delta_x):
             cap = max(64, 2 * len(self._delta_x))
@@ -615,13 +765,18 @@ class SegmentedIndex:
         self._delta_x[n] = vec
         self._delta_ids[n] = ext_id
         self._delta_live[n] = True
+        self._delta_meta.append(meta_row or None)
         self._delta_len = n + 1
         self._delta_pos[ext_id] = n
 
-    def upsert(self, ids: Sequence[int], vecs: np.ndarray) -> None:
+    def upsert(self, ids: Sequence[int], vecs: np.ndarray, meta=None) -> None:
         """Insert-or-replace vectors under stable external ids. The newest
         version wins immediately: any older copy (sealed or delta) is
         tombstoned in the same critical section.
+
+        ``meta`` optionally attaches per-row metadata (any form
+        :func:`meta_rows_from_batch` accepts); replacing a row replaces
+        its metadata wholesale (omitting ``meta`` clears it).
 
         Ids are int64 end-to-end on the host backend; the device
         (``spmd``) pipeline carries ids as int32, so keep external ids
@@ -631,16 +786,21 @@ class SegmentedIndex:
             vecs = vecs[None]
         ids = np.asarray(ids, np.int64).reshape(-1)
         assert vecs.shape == (len(ids), self.dim), (vecs.shape, len(ids))
+        meta_rows = meta_rows_from_batch(meta, len(ids))
         with self._mu:
-            for i, v in zip(ids, vecs):
+            for r, (i, v) in enumerate(zip(ids, vecs)):
                 i = int(i)
                 self._kill_locked(i)
-                self._append_delta_locked(i, v)
+                self._append_delta_locked(
+                    i, v, None if meta_rows is None else meta_rows[r]
+                )
             self.op_count += len(ids)
             if self._journal is not None:
-                self._journal.append(("upsert", ids.copy(), vecs.copy()))
+                self._journal.append(
+                    ("upsert", ids.copy(), vecs.copy(), meta_rows)
+                )
             if self._wal is not None:
-                self.wal_seq = self._wal.append_upsert(ids, vecs)
+                self.wal_seq = self._wal.append_upsert(ids, vecs, meta_rows)
 
     def delete(self, ids: Sequence[int]) -> int:
         """Tombstone external ids. Returns how many were actually live."""
@@ -672,6 +832,7 @@ class SegmentedIndex:
                 delta_x=self._delta_x[:n],          # append-only: rows ≤ n frozen
                 delta_live=self._delta_live[:n].copy(),
                 dead_version=self.dead_version,
+                delta_meta=tuple(self._delta_meta[:n]),
             )
 
     def live_vectors(self) -> Tuple[np.ndarray, np.ndarray]:
@@ -709,17 +870,23 @@ class SegmentedIndex:
             merge_seg_ids = tuple(int(s) for s in merge_seg_ids)
             carry = tuple(s.seg_id for s in self.segments
                           if s.seg_id not in merge_seg_ids)
-            parts_i, parts_x = [], []
+            parts_i, parts_x, meta_rows = [], [], []
             for s in self.segments:
                 if s.seg_id not in merge_seg_ids:
                     continue
                 alive = ~self._dead_rows[s.seg_id]
                 parts_i.append(s.index.ids[alive])
                 parts_x.append(s.index.x[alive].copy())
+                if s.index.meta is not None:
+                    store = s.index.meta.select(np.nonzero(alive)[0])
+                    meta_rows.extend(store.row(r) for r in range(store.n))
+                else:
+                    meta_rows.extend([None] * int(alive.sum()))
             n = self._delta_len
             live = self._delta_live[:n]
             parts_i.append(self._delta_ids[:n][live].copy())
             parts_x.append(self._delta_x[:n][live].copy())
+            meta_rows.extend(self._delta_meta[r] for r in np.nonzero(live)[0])
             ids = np.concatenate(parts_i)
             x = (np.concatenate(parts_x) if ids.size
                  else np.zeros((0, self.dim), np.float32))
@@ -731,6 +898,8 @@ class SegmentedIndex:
                 carry_seg_ids=carry,
                 ids=ids[order],
                 x=np.ascontiguousarray(x[order]),
+                meta=(tuple(meta_rows[i] for i in order)
+                      if any(r for r in meta_rows) else None),
             )
 
     def seal(self, plan: CompactionPlan) -> List[Segment]:
@@ -748,7 +917,7 @@ class SegmentedIndex:
         with self._mu:
             seg_id = self._next_seg_id
             self._next_seg_id += 1
-        index = build_ivf(plan.x, seg_cfg, ext_ids=plan.ids)
+        index = build_ivf(plan.x, seg_cfg, ext_ids=plan.ids, meta=plan.meta)
         # quantize at seal (off the serving path): the int8 tier of the
         # two-stage search is part of the sealed artifact, so a precision
         # switch or checkpoint save never recomputes it mid-serving
@@ -803,6 +972,7 @@ class SegmentedIndex:
             self._delta_x = np.zeros((0, self.cfg.dim), np.float32)
             self._delta_ids = np.zeros((0,), np.int64)
             self._delta_live = np.zeros((0,), bool)
+            self._delta_meta = []
             self._delta_len = 0
             self._delta_pos = {}
             ops, self._journal = self._journal, None
@@ -811,10 +981,13 @@ class SegmentedIndex:
             # + fresh delta appends — ops were counted when first applied)
             for op in ops:
                 if op[0] == "upsert":
-                    _, ids, vecs = op
-                    for i, v in zip(ids, vecs):
+                    _, ids, vecs, meta_rows = op
+                    for r, (i, v) in enumerate(zip(ids, vecs)):
                         self._kill_locked(int(i))
-                        self._append_delta_locked(int(i), v)
+                        self._append_delta_locked(
+                            int(i), v,
+                            None if meta_rows is None else meta_rows[r],
+                        )
                 else:
                     for i in op[1]:
                         self._kill_locked(int(i))
@@ -844,6 +1017,7 @@ class DataSnapshot:
     delta_x: np.ndarray                 # [n, D] float32 (frozen rows)
     delta_live: np.ndarray              # [n] bool
     dead_version: int = 0               # tombstone-flip counter at snapshot
+    delta_meta: Tuple[Optional[dict], ...] = ()   # [n] per-row meta dicts
 
     @property
     def delta_count(self) -> int:

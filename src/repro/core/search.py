@@ -32,7 +32,88 @@ import numpy as np
 from repro.config import HarmonyConfig
 from repro.core.index import IVFIndex, ShardedCorpus, assign_queries, dim_block_bounds
 from repro.core.pruning import TopKHeap, partial_scores_block, prewarm_tau
-from repro.core.types import PartitionPlan, SearchResult
+from repro.core.types import Filter, PartitionPlan, SearchResult
+
+
+# ---------------------------------------------------------------------------
+# Filter compilation: predicate → packed-row bitmap → probe pushdown
+# ---------------------------------------------------------------------------
+
+
+def filter_bitmap(index: IVFIndex, flt: Filter) -> np.ndarray:
+    """Compile a :class:`Filter` to this segment's *allowed* bitmap
+    (bool [NB], packed-row order).
+
+    Cached on the immutable segment index keyed by the (hashable) filter
+    value, so re-serving the same predicate re-uses the bitmap — the
+    filtered analogue of the ``dead_shard_mask`` cache. A corpus without
+    metadata allows nothing (absent attributes can't satisfy a
+    predicate), matching :meth:`Filter.evaluate` on a missing column."""
+    cache = index.__dict__.setdefault("_filter_bitmaps", {})
+    bm = cache.get(flt)
+    if bm is None:
+        if len(cache) >= 64:        # bound the per-segment bitmap cache
+            cache.clear()
+        if index.meta is None:
+            bm = np.zeros(index.nb, bool)
+        else:
+            bm = flt.evaluate(index.meta.tags, index.meta.nums, index.nb)
+        cache[flt] = bm
+    return bm
+
+
+def filter_excluded_rows(
+    index: IVFIndex, flt: Optional[Filter],
+    dead_rows: Optional[np.ndarray],
+) -> Optional[np.ndarray]:
+    """Merge a filter's allowed bitmap with the tombstones into one
+    *excluded* mask (bool [NB]) — a filter is just a per-query tombstone
+    set, so the whole dead-row masking path (oracle member mask, host
+    engine's shard remap, executor's host-side gather) applies verbatim.
+    Returns None when nothing is excluded (the unfiltered fast path)."""
+    if flt is None:
+        return dead_rows if dead_rows is not None and dead_rows.any() else None
+    excluded = ~filter_bitmap(index, flt)
+    if dead_rows is not None:
+        excluded = excluded | dead_rows
+    return excluded
+
+
+def filtered_assign_queries(
+    index: IVFIndex,
+    q: np.ndarray,
+    excluded: Optional[np.ndarray],
+    nprobe: Optional[int] = None,
+) -> np.ndarray:
+    """Probe selection with predicate pushdown: clusters whose every row
+    is excluded (by the filter and/or tombstones) are dropped from the
+    centroid ranking, so low-selectivity filters spend their probe budget
+    on clusters that can actually produce candidates.
+
+    Slots that would land on a fully-excluded cluster (fewer live
+    clusters than ``nprobe``) are *duplicate-filled* with the query's
+    best live cluster instead of a sentinel: every downstream consumer
+    (member-set assignment, τ prewarm's per-cluster sampling, the visit
+    schedule's ``np.unique``, the executor's row gather) treats
+    duplicates as one probe, while a negative sentinel would wrap or
+    crash them. Row-level masking stays the source of truth, so this is
+    pure work avoidance — never a correctness dependency."""
+    nprobe = nprobe or index.cfg.nprobe
+    if excluded is None or not excluded.any():
+        return assign_queries(index, q, nprobe)
+    live_cluster = np.bincount(
+        index.cluster_of[~excluded], minlength=index.nlist
+    ) > 0
+    qn = np.sum(q * q, axis=1)[:, None]
+    cn = np.sum(index.centers * index.centers, axis=1)[None, :]
+    d = qn - 2.0 * (q @ index.centers.T) + cn
+    d = np.where(live_cluster[None, :], d, np.inf)
+    probes = np.argsort(d, axis=1)[:, :nprobe].astype(np.int32)
+    picked = np.take_along_axis(d, probes.astype(np.int64), axis=1)
+    bad = ~np.isfinite(picked)
+    if bad.any():
+        probes = np.where(bad, probes[:, :1], probes)
+    return probes
 
 
 # ---------------------------------------------------------------------------
@@ -47,14 +128,19 @@ def search_oracle(
     nprobe: Optional[int] = None,
     chunk: int = 128,
     dead_rows: Optional[np.ndarray] = None,
+    flt: Optional[Filter] = None,
 ) -> SearchResult:
     """Exact top-k over probed clusters (masked full scan, chunked).
 
     ``dead_rows`` (bool [NB], packed-row tombstones) excludes deleted /
     superseded rows from the candidate set — the sealed-segment masking
-    of the mutable data plane."""
+    of the mutable data plane. ``flt`` additionally restricts candidates
+    to rows matching the metadata predicate (the filtered ground truth:
+    at ``nprobe=nlist`` this is the exact brute-force filtered top-k)."""
     cfg = index.cfg
     k = k or cfg.topk
+    if flt is not None:
+        dead_rows = filter_excluded_rows(index, flt, dead_rows)
     probes = assign_queries(index, q, nprobe)
     nq = q.shape[0]
     out_s = np.full((nq, k), np.inf, np.float32)

@@ -69,6 +69,16 @@ each bucket at most once. Batches beyond the biggest qb bucket are split
 and merged host-side.
 """
 
+from repro.core.types import (
+    And,
+    DataPlane,
+    Filter,
+    NumRange,
+    Or,
+    SearchRequest,
+    SearchResult,
+    TagIn,
+)
 from repro.serve.clock import Clock, MonotonicClock, VirtualClock
 from repro.serve.compactor import CompactionConfig, Compactor
 from repro.serve.engine import HarmonyServer, ServeStats
@@ -88,6 +98,14 @@ from repro.serve.scheduler import (
 __all__ = [
     "HarmonyServer",
     "ServeStats",
+    "SearchRequest",
+    "SearchResult",
+    "Filter",
+    "TagIn",
+    "NumRange",
+    "And",
+    "Or",
+    "DataPlane",
     "Compactor",
     "CompactionConfig",
     "ExecutorConfig",

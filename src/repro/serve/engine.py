@@ -36,7 +36,7 @@ import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -47,13 +47,17 @@ from repro.core import (
     SegmentedIndex,
     assign_queries,
     delta_topk,
+    filter_excluded_rows,
+    filtered_assign_queries,
     harmony_search,
     merge_topk,
     plan_search,
     preassign,
     two_stage_search,
 )
-from repro.core.types import SearchResult
+from repro.core.fusion import BM25Index, reciprocal_rank_fusion, segment_bm25
+from repro.core.index import meta_rows_to_store
+from repro.core.types import DataPlane, Filter, SearchRequest, SearchResult
 from repro.runtime import ClusterState
 
 
@@ -199,7 +203,7 @@ class _SegmentState:
         return cached
 
 
-class HarmonyServer:
+class HarmonyServer(DataPlane):
     """Single-process serving engine over the HARMONY core.
 
     Owns the shared :class:`repro.core.SegmentedIndex` data plane (a
@@ -232,6 +236,12 @@ class HarmonyServer:
     (1, 1)
     >>> int(srv.search_batch(x[:1] + 10.0, k=1).ids[0, 0])  # reachable now
     999
+    >>> from repro.core import SearchRequest, TagIn
+    >>> srv.upsert([1000, 1001], x[:2] + 20.0, meta={"color": [1, 2]})
+    >>> req = SearchRequest(vector=x[0] + 20.0, k=1,
+    ...                     filter=TagIn("color", (2,)))
+    >>> int(srv.search_batch(req).ids[0, 0])    # only color=2 is allowed
+    1001
     """
 
     def __init__(
@@ -281,19 +291,16 @@ class HarmonyServer:
         """Data-plane generation this server has adopted."""
         return self._generation
 
-    def upsert(self, ids, vecs) -> None:
-        """Insert-or-replace vectors under stable external ids (visible to
-        the next dispatched batch; thread-safe against in-flight ones)."""
-        ids = np.asarray(ids, np.int64).reshape(-1)
-        self.data.upsert(ids, vecs)
-        self.stats.upserts += len(ids)
+    # upsert()/delete() come from the DataPlane mixin; the server's whole
+    # contribution is where writes go and which counters they bump
+    def _data_plane(self) -> SegmentedIndex:
+        return self.data
 
-    def delete(self, ids) -> int:
-        """Tombstone external ids; returns how many were live."""
-        ids = np.asarray(ids, np.int64).reshape(-1)
-        removed = self.data.delete(ids)
-        self.stats.deletes += len(ids)
-        return removed
+    def _note_write(self, kind: str, n: int) -> None:
+        if kind == "upsert":
+            self.stats.upserts += n
+        else:
+            self.stats.deletes += n
 
     @staticmethod
     def _primary(segments) -> Optional[Segment]:
@@ -462,24 +469,93 @@ class HarmonyServer:
         self.refresh_plan()
 
     # -------------------------------------------------------------- serving
+    def _delta_allowed(self, snap: DataSnapshot, flt: Filter) -> np.ndarray:
+        """Allowed-mask [delta rows] of the snapshot's delta buffer under
+        ``flt`` (the delta's per-row metadata dicts, columnarized on the
+        fly — the buffer is small by construction)."""
+        n = snap.delta_ids.size
+        store = meta_rows_to_store(list(snap.delta_meta))
+        if store is None:
+            return np.zeros(n, bool)
+        return flt.evaluate(store.tags, store.nums, n)
+
+    def _lexical_topk(self, snap, states, text, k, flt, delta_live):
+        """Global BM25 top-k external ids for ``text`` — the lexical tier
+        of a hybrid search (query-independent within a batch: the batch
+        shares one ``hybrid_text``). Per sealed segment the cached
+        posting index scores under the *same* excluded-row mask the
+        vector tier used; the delta buffer is brute-scored; candidates
+        merge by score (ties toward the lower id, deterministic)."""
+        cands = []                          # (score, ext_id)
+        for st in states:
+            seg = st.segment
+            bm = segment_bm25(seg.index)
+            if bm is None:
+                continue
+            excluded = filter_excluded_rows(
+                seg.index, flt, snap.dead_rows[seg.seg_id]
+            )
+            sc, rows = bm.topk(text, k, excluded=excluded)
+            ext = seg.index.ids[rows]
+            cands += [(float(s), int(e)) for s, e in zip(sc, ext)]
+        if snap.delta_ids.size:
+            texts = [(m or {}).get("text") for m in snap.delta_meta]
+            if any(texts):
+                sc, rows = BM25Index(texts).topk(text, k, excluded=~delta_live)
+                cands += [(float(s), int(snap.delta_ids[r]))
+                          for s, r in zip(sc, rows)]
+        cands.sort(key=lambda c: (-c[0], c[1]))
+        return np.array([e for _, e in cands[:k]], np.int64)
+
     def search_batch(
         self,
-        queries: np.ndarray,
+        queries,
         k: Optional[int] = None,
         backend: Optional[str] = None,
+        flt: Optional[Filter] = None,
+        hybrid_text: Optional[str] = None,
+        precision: Optional[str] = None,
     ):
         """One batch through the engine; records workload + stats.
 
-        Searches every sealed segment of the current data-plane snapshot
-        (tombstone-masked, ``backend="host"`` via the staged numpy engine
-        or ``backend="spmd"`` via the device-resident executor), scans
-        the delta buffer brute-force, and merges the per-part top-Ks —
-        via the fused ``running_topk_update`` kernel on the spmd path.
-        Results are identical across backends up to floating-point tie
-        order. The snapshot is taken once per batch: a concurrent
-        upsert/delete/compaction never tears an in-flight batch."""
+        ``queries`` is a [NQ, D] array or a :class:`SearchRequest` (whose
+        vector/k/filter/hybrid_text/precision fields fill the matching
+        parameters). Searches every sealed segment of the current
+        data-plane snapshot (tombstone-masked, ``backend="host"`` via the
+        staged numpy engine or ``backend="spmd"`` via the device-resident
+        executor), scans the delta buffer brute-force, and merges the
+        per-part top-Ks — via the fused ``running_topk_update`` kernel on
+        the spmd path. Results are identical across backends up to
+        floating-point tie order. The snapshot is taken once per batch: a
+        concurrent upsert/delete/compaction never tears an in-flight
+        batch.
+
+        A ``flt`` predicate is compiled to per-segment bitmaps and merged
+        into the tombstone masking path end-to-end (a filter is just a
+        per-query tombstone set): probe selection drops fully-excluded
+        clusters (:func:`repro.core.search.filtered_assign_queries`), the
+        engines mask filtered rows exactly like dead ones — on the spmd
+        backend inside the host-side gather, so the device work and the
+        (qb, cap) compile-cache keys are unchanged — and K never
+        inflates. ``hybrid_text`` adds the BM25 lexical tier, fused with
+        the vector top-k by reciprocal-rank fusion (scores then are
+        negated RRF, ``stats["fused"]=True``). ``precision`` overrides
+        the server's tier per batch; an override that differs from the
+        executor's compiled precision is served by the host engine."""
+        if isinstance(queries, SearchRequest):
+            req = queries
+            queries = np.atleast_2d(np.asarray(req.vector, np.float32))
+            k = k if k is not None else req.k
+            flt = flt if flt is not None else req.filter
+            hybrid_text = (hybrid_text if hybrid_text is not None
+                           else req.hybrid_text)
+            precision = precision if precision is not None else req.precision
         backend = backend or self.backend
         k = k or self.cfg.topk
+        prec = precision or self.precision
+        assert prec in ("fp32", "int8"), prec
+        if prec == "int8":
+            assert self.cfg.metric == "l2", "int8 tier is L2-only"
         t0 = time.perf_counter()
         queries = np.asarray(queries, np.float32)
         while True:
@@ -497,16 +573,21 @@ class HarmonyServer:
         seg_results = []
         for st in states:
             seg = st.segment
-            probes = assign_queries(seg.index, queries)
+            dead = snap.dead_rows[seg.seg_id]
+            dead_arg = filter_excluded_rows(seg.index, flt, dead)
+            if flt is None:
+                probes = assign_queries(seg.index, queries)
+            else:
+                # predicate pushdown: clusters with no allowed live row
+                # drop out of probe selection entirely
+                probes = filtered_assign_queries(seg.index, queries, dead_arg)
             if seg is primary:
                 self._recent_probes.append(probes)
-            dead = snap.dead_rows[seg.seg_id]
-            dead_arg = dead if dead.any() else None
-            if backend == "spmd" and st.int32_ids:
+            if backend == "spmd" and st.int32_ids and prec == self.precision:
                 res = self._executor_for(st).search_batch(
                     queries, k=k, probes=probes, dead_rows=dead_arg
                 )
-            elif self.precision == "int8":
+            elif prec == "int8":
                 res = two_stage_search(
                     seg.index, queries, k=k, probes=probes,
                     rerank_factor=self.cfg.rerank_factor,
@@ -516,13 +597,20 @@ class HarmonyServer:
             else:
                 res = harmony_search(
                     seg.index, st.corpus, queries, k=k, dead_rows=dead_arg,
-                    dead_key=(snap.generation, snap.dead_version),
+                    # the dead-mask device cache is keyed by (generation,
+                    # dead_version) only — a filter changes the mask under
+                    # the same key, so it must bypass the cache
+                    dead_key=None if flt is not None
+                    else (snap.generation, snap.dead_version),
                 )
             seg_results.append(res)
         parts = [(r.scores, r.ids) for r in seg_results]
+        delta_live = snap.delta_live
+        if flt is not None and snap.delta_ids.size:
+            delta_live = delta_live & self._delta_allowed(snap, flt)
         if snap.delta_ids.size:
             parts.append(delta_topk(
-                snap.delta_x, snap.delta_ids, snap.delta_live,
+                snap.delta_x, snap.delta_ids, delta_live,
                 queries, k, self.cfg.metric,
             ))
         if len(parts) == 1 and seg_results:
@@ -540,9 +628,21 @@ class HarmonyServer:
             res = SearchResult(ids=ids, scores=scores, stats={
                 "backend": backend,
                 "segments": len(seg_results),
-                "delta_candidates": int(snap.delta_live.sum()),
+                "delta_candidates": int(delta_live.sum()),
                 "generation": snap.generation,
             })
+        if hybrid_text is not None:
+            lex = self._lexical_topk(
+                snap, states, hybrid_text, k, flt, delta_live
+            )
+            ranked = [res.ids]
+            if lex.size:
+                ranked.append(
+                    np.broadcast_to(lex, (queries.shape[0], lex.size))
+                )
+            f_scores, f_ids = reciprocal_rank_fusion(ranked, k)
+            res = SearchResult(ids=f_ids, scores=f_scores,
+                               stats={**res.stats, "fused": True})
         dt = time.perf_counter() - t0
         res.stats["wall_s"] = dt
         if backend == "spmd":
@@ -570,18 +670,26 @@ class HarmonyServer:
         replayed traces (aligned with ``request_stream``; each entry is a
         scalar for the whole batch or a per-row sequence, non-decreasing
         across the stream). Without it every request arrives at t=0 and
-        queue-wait/deadline statistics degenerate."""
+        queue-wait/deadline statistics degenerate.
+
+        Stream entries may also be :class:`SearchRequest` objects (vector
+        [D] or [NQ, D]); their filter/hybrid/precision/k ride along with
+        every row of that entry."""
         from repro.serve.scheduler import SchedulerConfig, ServingScheduler
 
         sched_cfg = sched or SchedulerConfig()   # unbounded queue by default
         k = k or self.cfg.topk
         scheduler = ServingScheduler(self, sched_cfg, k=k)
         owners: Dict[int, tuple] = {}            # req_id → (batch_idx, row)
-        shapes: List[int] = []
+        shapes: List[Tuple[int, int]] = []       # (rows, k) per input batch
         arr_iter = iter(arrivals) if arrivals is not None else None
         for bi, qb in enumerate(request_stream):
-            qb = np.asarray(qb)
-            shapes.append(qb.shape[0])
+            breq = qb if isinstance(qb, SearchRequest) else None
+            qb = np.atleast_2d(
+                np.asarray(breq.vector if breq is not None else qb)
+            )
+            k_b = (breq.k or k) if breq is not None else k
+            shapes.append((qb.shape[0], k_b))
             if arr_iter is None:
                 t_b = 0.0
             else:
@@ -595,7 +703,14 @@ class HarmonyServer:
                     ) from None
             for r in range(qb.shape[0]):
                 t_r = float(t_b) if np.ndim(t_b) == 0 else float(t_b[r])
-                rid = scheduler.submit(qb[r], arrival_s=t_r)
+                row_req = (
+                    SearchRequest(vector=qb[r], k=breq.k, filter=breq.filter,
+                                  hybrid_text=breq.hybrid_text,
+                                  precision=breq.precision,
+                                  deadline=breq.deadline)
+                    if breq is not None else qb[r]
+                )
+                rid = scheduler.submit(row_req, arrival_s=t_r, _warn=False)
                 if rid >= 0:
                     owners[rid] = (bi, r)
                 # shed requests (bounded sched config) keep their -1/inf
@@ -604,11 +719,11 @@ class HarmonyServer:
 
         out = [
             SearchResult(
-                ids=np.full((n, k), -1, np.int64),
-                scores=np.full((n, k), np.inf, np.float32),
+                ids=np.full((n, k_b), -1, np.int64),
+                scores=np.full((n, k_b), np.inf, np.float32),
                 stats={"scheduled": True, "wall_s": 0.0, "queue_wait_ms": []},
             )
-            for n in shapes
+            for n, k_b in shapes
         ]
         for rr in done:
             bi, r = owners.get(rr.req_id, (None, None))

@@ -63,7 +63,7 @@ from repro.runtime.faults import fault_point
 from repro.runtime.straggler import HedgingExecutor
 from repro.serve.clock import Clock
 from repro.serve.engine import HarmonyServer, ServeStats
-from repro.serve.scheduler import DispatchTarget, SchedulerConfig
+from repro.serve.scheduler import DispatchTarget, SchedulerConfig, options_kwargs
 
 
 def gini(x: Sequence[float]) -> float:
@@ -277,25 +277,17 @@ class ReplicaFleet(DispatchTarget):
         """The fleet-shared :class:`repro.core.SegmentedIndex`."""
         return self.index
 
-    def upsert(self, ids, vecs) -> None:
-        """Insert-or-replace vectors fleet-wide (one write to the shared
-        data plane — every replica's next batch sees it)."""
-        import numpy as _np
+    # upsert()/delete() come from the DataPlane mixin: one write to the
+    # shared data plane — every replica's next batch sees it
+    def _data_plane(self):
+        return self.index
 
-        ids = _np.asarray(ids, _np.int64).reshape(-1)
-        self.index.upsert(ids, vecs)
+    def _note_write(self, kind: str, n: int) -> None:
         with self._mu:
-            self.stats.upserts += len(ids)
-
-    def delete(self, ids) -> int:
-        """Tombstone external ids fleet-wide; returns how many were live."""
-        import numpy as _np
-
-        ids = _np.asarray(ids, _np.int64).reshape(-1)
-        removed = self.index.delete(ids)
-        with self._mu:
-            self.stats.deletes += len(ids)
-        return removed
+            if kind == "upsert":
+                self.stats.upserts += n
+            else:
+                self.stats.deletes += n
 
     def live_servers(self):
         """Servers of the live replicas (the compactor's swap targets)."""
@@ -311,7 +303,7 @@ class ReplicaFleet(DispatchTarget):
             frees = [self.replicas[int(i)].busy_until for i in live]
         return min(frees)
 
-    def execute(self, queries, k, dispatch_s, batch_id):
+    def execute(self, queries, k, dispatch_s, batch_id, options=None):
         if self._breaker_active:
             self.health_check(dispatch_s)
         ranked = self._rank_replicas(queries.shape[0], dispatch_s, batch_id)
@@ -321,7 +313,7 @@ class ReplicaFleet(DispatchTarget):
                 if attempt == 0 and self._hedge is not None:
                     hedged_before = self._hedge.stats.hedged
                     res, served_by, _ = self._hedge.run_ranked(
-                        (queries, k, dispatch_s), ranked
+                        (queries, k, dispatch_s, options), ranked
                     )
                     if self._hedge.stats.hedged > hedged_before:
                         self.stats.hedged_batches += 1
@@ -340,7 +332,7 @@ class ReplicaFleet(DispatchTarget):
                                 self.replicas[served_by].busy_until += shift
                                 self._last_done_s += shift
                 else:
-                    res = self._run_on(r_idx, queries, k, dispatch_s)
+                    res = self._run_on(r_idx, queries, k, dispatch_s, options)
                 return res, self._last_done_s
             except Exception as e:  # noqa: BLE001 - retried on next replica
                 last_err = e
@@ -348,7 +340,7 @@ class ReplicaFleet(DispatchTarget):
                     self.stats.retried_batches += 1
         raise last_err
 
-    def execute_wall(self, queries, k, batch_id, clock: Clock):
+    def execute_wall(self, queries, k, batch_id, clock: Clock, options=None):
         """Real-clock dispatch for the live front-end: route by the same
         load estimates (``clock.now()`` as "now"), then actually run the
         batch on the chosen replica — concurrently with batches other
@@ -377,13 +369,17 @@ class ReplicaFleet(DispatchTarget):
             try:
                 if attempt == 0 and self._hedge is not None and len(ranked) > 1:
                     (res, done_s), served_by, hedge_fired = (
-                        self._hedge.run_ranked_wall((queries, k, clock), ranked)
+                        self._hedge.run_ranked_wall(
+                            (queries, k, clock, options), ranked
+                        )
                     )
                     if hedge_fired:
                         with self._mu:
                             self.stats.hedged_batches += 1
                 else:
-                    res, done_s = self._run_on_wall(r_idx, queries, k, clock)
+                    res, done_s = self._run_on_wall(
+                        r_idx, queries, k, clock, options
+                    )
                 return res, done_s
             except Exception as e:  # noqa: BLE001 - retried on next replica
                 last_err = e
@@ -420,7 +416,7 @@ class ReplicaFleet(DispatchTarget):
         )
 
     def _estimate_latency(self, r_idx: int, task) -> float:
-        queries, _, dispatch_s = task
+        queries, _, dispatch_s = task[:3]
         return self.load_estimate(r_idx, dispatch_s, queries.shape[0])
 
     def _rank_replicas(self, n: int, now: float, batch_id: int) -> List[int]:
@@ -479,15 +475,18 @@ class ReplicaFleet(DispatchTarget):
     # ----------------------------------------------------------- execution
     def _make_worker(self, r_idx: int):
         def run(task):
-            # task is (queries, k, dispatch_s) on the virtual clock, or
-            # (queries, k, clock) from the real-clock front-end
-            queries, k, when = task
+            # task is (queries, k, dispatch_s[, options]) on the virtual
+            # clock, or (queries, k, clock[, options]) from the real-clock
+            # front-end
+            queries, k, when = task[:3]
+            options = task[3] if len(task) > 3 else None
             if isinstance(when, Clock):
-                return self._run_on_wall(r_idx, queries, k, when)
-            return self._run_on(r_idx, queries, k, when)
+                return self._run_on_wall(r_idx, queries, k, when, options)
+            return self._run_on(r_idx, queries, k, when, options)
         return run
 
-    def _run_on(self, r_idx: int, queries, k, dispatch_s: float):
+    def _run_on(self, r_idx: int, queries, k, dispatch_s: float,
+                options=None):
         rep = self.replicas[r_idx]
         start_s = max(dispatch_s, rep.busy_until)
         self._last_start_s = start_s
@@ -498,7 +497,8 @@ class ReplicaFleet(DispatchTarget):
             # (delay, returned in seconds and charged below)
             extra_s = fault_point("replica.execute", replica=r_idx)
             res = rep.server.search_batch(
-                queries, k, backend=self._backend or None
+                queries, k, backend=self._backend or None,
+                **options_kwargs(options),
             )
         except Exception:
             self._record_failure(r_idx, dispatch_s)
@@ -514,7 +514,8 @@ class ReplicaFleet(DispatchTarget):
         self._record_service(rep, n, service_s, done_s=start_s + service_s)
         return res
 
-    def _run_on_wall(self, r_idx: int, queries, k, clock: Clock):
+    def _run_on_wall(self, r_idx: int, queries, k, clock: Clock,
+                     options=None):
         """Wall-clock execution on one replica: ``rep.lock`` serializes
         batches routed to the *same* replica (they queue, as a real
         replica's dispatch queue would) while other replicas run
@@ -536,7 +537,8 @@ class ReplicaFleet(DispatchTarget):
             try:
                 extra_s = fault_point("replica.execute", replica=r_idx)
                 res = rep.server.search_batch(
-                    queries, k, backend=self._backend or None
+                    queries, k, backend=self._backend or None,
+                    **options_kwargs(options),
                 )
             except Exception:
                 self._record_failure(r_idx, clock.now())

@@ -53,13 +53,14 @@ import asyncio
 import threading
 from collections import deque
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Deque, List, Optional, Sequence, Tuple
+from typing import Deque, List, Optional, Tuple
 
 import numpy as np
 
 import time
 import warnings
 
+from repro.core.types import DataPlane, SearchRequest
 from repro.serve.clock import Clock, MonotonicClock
 from repro.serve.scheduler import (
     DispatchTarget,
@@ -80,7 +81,7 @@ class ShedError(RuntimeError):
     ``stats.shed`` and never queued."""
 
 
-class ServingFrontend:
+class ServingFrontend(DataPlane):
     """Live (wall-clock) admission-controlled serving front-end.
 
     Parameters mirror :class:`~repro.serve.scheduler.ServingScheduler`:
@@ -162,12 +163,22 @@ class ServingFrontend:
         self._dispatcher.start()
 
     # ---------------------------------------------------------------- admit
-    def submit(self, query: np.ndarray) -> "Future[RequestResult]":
-        """Offer one request at the current wall time. Returns a future
-        that resolves to its :class:`RequestResult` — or raises
+    def submit(self, query) -> "Future[RequestResult]":
+        """Offer one request at the current wall time. ``query`` is a
+        :class:`repro.core.SearchRequest` (the canonical shape — its
+        filter/hybrid/precision/k ride with the request) or a bare [D]
+        array, auto-wrapped with a ``DeprecationWarning``. Returns a
+        future that resolves to its :class:`RequestResult` — or raises
         :class:`ShedError` from the future if backpressure shed it.
         Raises ``RuntimeError`` immediately if the front-end is shut
         down."""
+        if not isinstance(query, SearchRequest):
+            warnings.warn(
+                "submitting a bare ndarray is deprecated; pass a "
+                "repro.core.SearchRequest",
+                DeprecationWarning, stacklevel=2,
+            )
+            query = SearchRequest(vector=np.asarray(query))
         fut: "Future[RequestResult]" = Future()
         with self._mu:
             if self._closing:
@@ -186,7 +197,11 @@ class ServingFrontend:
                     f"{self.cfg.queue_capacity}"
                 )
             else:
-                self.queue.append(Request(rid, np.asarray(query), arrival_s))
+                self.queue.append(Request(
+                    rid, np.asarray(query.vector), arrival_s,
+                    k=query.k, filter=query.filter,
+                    hybrid_text=query.hybrid_text, precision=query.precision,
+                ))
                 self._futures[rid] = fut
                 self.stats.admitted += 1
                 shed_exc = None
@@ -195,30 +210,24 @@ class ServingFrontend:
             fut.set_exception(shed_exc)
         return fut
 
-    def submit_many(
-        self, queries: Sequence[np.ndarray]
-    ) -> List["Future[RequestResult]"]:
-        """Submit a sequence of single-query requests; one future each
-        (shed requests come back as already-failed futures)."""
+    def submit_many(self, queries) -> List["Future[RequestResult]"]:
+        """Submit a sequence of single-query requests (arrays or
+        :class:`SearchRequest`); one future each (shed requests come back
+        as already-failed futures)."""
         return [self.submit(q) for q in queries]
 
-    async def asubmit(self, query: np.ndarray) -> RequestResult:
+    async def asubmit(self, query) -> RequestResult:
         """asyncio twin of :meth:`submit`: ``await`` the result directly
         (raises :class:`ShedError` if admission shed the request)."""
         return await asyncio.wrap_future(self.submit(query))
 
     # ----------------------------------------------------------- mutation
-    def upsert(self, ids, vecs) -> None:
-        """Live streaming write: insert-or-replace vectors in the target's
-        (shared) data plane. Thread-safe against in-flight batches — a
-        dispatched batch keeps its snapshot; the write is visible to every
-        batch dispatched after this call returns."""
-        self.target.upsert(ids, vecs)
-
-    def delete(self, ids) -> int:
-        """Live streaming delete (tombstone); returns how many ids were
-        live. Same visibility contract as :meth:`upsert`."""
-        return self.target.delete(ids)
+    # upsert()/delete() come from the DataPlane mixin and forward to the
+    # dispatch target. Thread-safe against in-flight batches — a
+    # dispatched batch keeps its snapshot; the write is visible to every
+    # batch dispatched after the call returns.
+    def _data_plane(self):
+        return self.target
 
     # ----------------------------------------------------------- dispatcher
     def _due(self, now: float) -> Tuple[float, str]:
@@ -272,19 +281,46 @@ class ServingFrontend:
 
     def _run_batch(self, batch, futs, dispatch_s: float, trigger: str,
                    bid: int):
-        res, err = None, None
+        row_ids = row_scores = None
+        err = None
         try:
-            queries = np.stack([req.query for req in batch])
             oldest_s = min(req.arrival_s for req in batch)
+            # partition by request options (filter/hybrid/precision/k):
+            # each group shares one execution context; the knob-free batch
+            # is one group and one positional execute_wall call — the
+            # pre-request-API behaviour
+            groups = {}
+            for row, req in enumerate(batch):
+                groups.setdefault(req.options_key(), []).append(row)
+
+            def _run_all():
+                ids_out = [None] * len(batch)
+                scores_out = [None] * len(batch)
+                d_max = self.clock.now()
+                for key, rows in groups.items():
+                    queries = np.stack([batch[r].query for r in rows])
+                    if key is None:
+                        res, g_done = self.target.execute_wall(
+                            queries, self.k, bid, self.clock
+                        )
+                    else:
+                        res, g_done = self.target.execute_wall(
+                            queries, key[0] or self.k, bid, self.clock,
+                            key[1:],
+                        )
+                    d_max = max(d_max, g_done)
+                    for i, r in enumerate(rows):
+                        ids_out[r] = res.ids[i]
+                        scores_out[r] = res.scores[i]
+                return ids_out, scores_out, d_max
+
             # searches are idempotent reads: a batch whose dispatch raises
             # (replica crash past the fleet's own failover, torn target) is
             # re-issued with linear backoff while the oldest request's age
             # stays inside the per-request deadline budget
             for attempt in range(self.cfg.max_retries + 1):
                 try:
-                    res, done_s = self.target.execute_wall(
-                        queries, self.k, bid, self.clock
-                    )
+                    row_ids, row_scores, done_s = _run_all()
                     err = None
                     break
                 except Exception as e:      # noqa: BLE001 - bounded retry
@@ -336,8 +372,8 @@ class ServingFrontend:
                 fut.set_result(
                     RequestResult(
                         req_id=req.req_id,
-                        ids=res.ids[row],
-                        scores=res.scores[row],
+                        ids=row_ids[row],
+                        scores=row_scores[row],
                         arrival_s=req.arrival_s,
                         dispatch_s=dispatch_s,
                         done_s=done_s,

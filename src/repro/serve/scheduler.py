@@ -45,9 +45,10 @@ from __future__ import annotations
 import math
 import threading
 import time
+import warnings
 from collections import deque
 from dataclasses import dataclass
-from typing import Callable, Deque, Iterable, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -56,8 +57,19 @@ from repro.core.router import (
     estimate_cluster_hits,
     workload_concentration,
 )
+from repro.core.types import DataPlane, Filter, SearchRequest
 from repro.runtime.straggler import HedgingExecutor
 from repro.serve.clock import Clock, VirtualClock
+
+
+def options_kwargs(options) -> dict:
+    """Expand a request-options tuple (``SearchRequest.options_key()``:
+    filter, hybrid_text, precision) into ``search_batch`` keywords. None
+    (the no-options fast path) expands to nothing."""
+    if options is None:
+        return {}
+    flt, hybrid_text, precision = options
+    return {"flt": flt, "hybrid_text": hybrid_text, "precision": precision}
 
 
 @dataclass(frozen=True)
@@ -101,11 +113,27 @@ class SchedulerConfig:
 
 @dataclass
 class Request:
-    """One admitted query with its arrival timestamp (seconds)."""
+    """One admitted query with its arrival timestamp (seconds) and the
+    per-request knobs carried in from its :class:`SearchRequest` (all
+    None for pre-request-API submissions — the zero-overhead default)."""
 
     req_id: int
     query: np.ndarray               # [D]
     arrival_s: float
+    k: Optional[int] = None
+    filter: Optional[Filter] = None
+    hybrid_text: Optional[str] = None
+    precision: Optional[str] = None
+
+    def options_key(self):
+        """Grouping key for batch execution (see
+        :meth:`repro.core.types.SearchRequest.options_key`), with the
+        per-request ``k`` folded in. ``None`` for a knob-free request —
+        the batch path that stays byte-identical to the pre-filter API."""
+        if (self.k is None and self.filter is None
+                and self.hybrid_text is None and self.precision is None):
+            return None
+        return (self.k, self.filter, self.hybrid_text, self.precision)
 
 
 @dataclass
@@ -132,7 +160,7 @@ class RequestResult:
         return self.done_s - self.arrival_s
 
 
-class DispatchTarget:
+class DispatchTarget(DataPlane):
     """Execution side of the scheduler: where formed batches go.
 
     The scheduler owns admission, batch formation, and the clock;
@@ -140,6 +168,10 @@ class DispatchTarget:
     hedge policy) and reports the completion time back. Implementations:
     :class:`SingleServerTarget` here and
     :class:`repro.serve.fleet.ReplicaFleet`.
+
+    The write surface (``upsert``/``delete``) is the shared
+    :class:`repro.core.types.DataPlane` mixin — implementations point
+    ``_data_plane()`` at the next layer down.
 
     The target also exposes the thin server-shaped surface the
     scheduler's skew adaptation needs (``stats`` for accounting,
@@ -160,14 +192,21 @@ class DispatchTarget:
         raise NotImplementedError
 
     def execute(
-        self, queries: np.ndarray, k: int, dispatch_s: float, batch_id: int
+        self, queries: np.ndarray, k: int, dispatch_s: float, batch_id: int,
+        options=None,
     ):
         """Run one formed batch; returns ``(result, done_s)`` where
-        ``done_s`` is the completion time on the virtual clock."""
+        ``done_s`` is the completion time on the virtual clock.
+        ``options`` is a request-options tuple (filter, hybrid_text,
+        precision) shared by the whole batch, or None (see
+        :func:`options_kwargs`) — the scheduler only passes it when a
+        batch actually carries options, so positional implementations
+        predating the request API keep working."""
         raise NotImplementedError
 
     def execute_wall(
-        self, queries: np.ndarray, k: int, batch_id: int, clock: Clock
+        self, queries: np.ndarray, k: int, batch_id: int, clock: Clock,
+        options=None,
     ):
         """Real-clock batch execution for the live front-end: run the
         batch NOW and return ``(result, done_s)`` with ``done_s`` read
@@ -178,18 +217,11 @@ class DispatchTarget:
         correct for stub/virtual targets whose ``execute`` is synchronous;
         real targets override for thread-safe accounting and wall-enforced
         service models."""
-        res, _ = self.execute(queries, k, clock.now(), batch_id)
+        if options is None:
+            res, _ = self.execute(queries, k, clock.now(), batch_id)
+        else:
+            res, _ = self.execute(queries, k, clock.now(), batch_id, options)
         return res, clock.now()
-
-    # --- mutable-data-plane surface --------------------------------------
-    def upsert(self, ids, vecs) -> None:
-        """Insert-or-replace vectors in the target's data plane (visible
-        to the next dispatched batch)."""
-        raise NotImplementedError
-
-    def delete(self, ids) -> int:
-        """Tombstone external ids; returns how many were live."""
-        raise NotImplementedError
 
     # --- skew-adaptation surface -----------------------------------------
     def window_probes(self) -> Iterable[np.ndarray]:
@@ -270,12 +302,14 @@ class SingleServerTarget(DispatchTarget):
         return self.busy_until
 
     def _exec_task(self, task):
-        queries, k = task
+        queries, k = task[:2]
+        options = task[2] if len(task) > 2 else None
         return self.server.search_batch(
-            queries, k, backend=self._backend or None
+            queries, k, backend=self._backend or None,
+            **options_kwargs(options),
         )
 
-    def execute(self, queries, k, dispatch_s, batch_id):
+    def execute(self, queries, k, dispatch_s, batch_id, options=None):
         stats = self.server.stats
         t0 = time.perf_counter()
         sim_lat = 0.0
@@ -290,12 +324,14 @@ class SingleServerTarget(DispatchTarget):
                 int(live[(batch_id + 1) % len(live)]) if len(live) > 1 else None
             )
             hedged_before = self._hedge.stats.hedged
-            res, _, sim_lat = self._hedge.run_timed((queries, k), primary, replica)
+            task = (queries, k) if options is None else (queries, k, options)
+            res, _, sim_lat = self._hedge.run_timed(task, primary, replica)
             if self._hedge.stats.hedged > hedged_before:
                 stats.hedged_batches += 1
         else:
             res = self.server.search_batch(
-                queries, k, backend=self._backend or None
+                queries, k, backend=self._backend or None,
+                **options_kwargs(options),
             )
         wall = time.perf_counter() - t0
         service_s = (
@@ -306,7 +342,7 @@ class SingleServerTarget(DispatchTarget):
         self.busy_until = dispatch_s + service_s
         return res, self.busy_until
 
-    def execute_wall(self, queries, k, batch_id, clock: Clock):
+    def execute_wall(self, queries, k, batch_id, clock: Clock, options=None):
         """Wall-clock execution: one batch at a time on the server (the
         lock keeps ``ServeStats`` counters exact when the front-end is
         configured with in-flight > 1). With an injected
@@ -316,7 +352,8 @@ class SingleServerTarget(DispatchTarget):
         with self._wall_mu:
             t0 = clock.now()
             res = self.server.search_batch(
-                queries, k, backend=self._backend or None
+                queries, k, backend=self._backend or None,
+                **options_kwargs(options),
             )
             if self.service_time_fn is not None:
                 clock.sleep(
@@ -327,12 +364,10 @@ class SingleServerTarget(DispatchTarget):
             self.busy_until = done_s
         return res, done_s
 
-    # --- mutable-data-plane surface --------------------------------------
-    def upsert(self, ids, vecs) -> None:
-        self.server.upsert(ids, vecs)
-
-    def delete(self, ids) -> int:
-        return self.server.delete(ids)
+    # --- mutable-data-plane surface (DataPlane mixin): writes forward to
+    # the server, whose own _note_write does the counting
+    def _data_plane(self):
+        return self.server
 
     # --- skew-adaptation surface -----------------------------------------
     def window_probes(self):
@@ -534,14 +569,33 @@ class ServingScheduler:
         return getattr(self.target, "_hedge", None)
 
     # ---------------------------------------------------------------- admit
-    def submit(self, query: np.ndarray, arrival_s: Optional[float] = None) -> int:
+    def submit(self, query, arrival_s: Optional[float] = None,
+               _warn: bool = True) -> int:
         """Offer one request at virtual time ``arrival_s`` (default: the
         clock's current time). Returns its req_id, or -1 if shed by
         backpressure. Fires any batches due before ``arrival_s`` first.
 
+        ``query`` is a :class:`repro.core.SearchRequest` (the canonical
+        shape — its filter/hybrid/precision/k ride with the request) or a
+        bare [D] array, which is auto-wrapped with a
+        ``DeprecationWarning`` (``_warn=False`` silences the shim for
+        internal wrappers that already own the old surface).
+
         req_ids are consumed by shed requests too, so a served request's
         req_id is always its submission (trace) position — results map
         back to the trace even after shedding."""
+        if isinstance(query, SearchRequest):
+            req_k, req_flt = query.k, query.filter
+            req_text, req_prec = query.hybrid_text, query.precision
+            query = query.vector
+        else:
+            if _warn:
+                warnings.warn(
+                    "submitting a bare ndarray is deprecated; pass a "
+                    "repro.core.SearchRequest",
+                    DeprecationWarning, stacklevel=2,
+                )
+            req_k = req_flt = req_text = req_prec = None
         if arrival_s is None:
             arrival_s = self.clock.now()
         self.advance(arrival_s)
@@ -554,7 +608,10 @@ class ServingScheduler:
         if self.cfg.queue_capacity and len(self.queue) >= self.cfg.queue_capacity:
             stats.shed += 1
             return -1
-        self.queue.append(Request(rid, np.asarray(query), arrival_s))
+        self.queue.append(Request(
+            rid, np.asarray(query), arrival_s,
+            k=req_k, filter=req_flt, hybrid_text=req_text, precision=req_prec,
+        ))
         stats.admitted += 1
         return rid
 
@@ -585,19 +642,45 @@ class ServingScheduler:
     def _dispatch(self, dispatch_s: float, trigger: str):
         batch = [self.queue.popleft()
                  for _ in range(min(len(self.queue), self.max_batch))]
-        queries = np.stack([r.query for r in batch])
         stats = self.stats
+        # partition the formed batch by request options: each group shares
+        # one (k, filter, hybrid_text, precision) execution context. A
+        # knob-free batch is exactly one group with key None and one
+        # positional target.execute call — byte-identical to the
+        # pre-request-API scheduler (the virtual-clock goldens pin this).
+        groups: Dict[Optional[tuple], List[int]] = {}
+        for row, req in enumerate(batch):
+            groups.setdefault(req.options_key(), []).append(row)
+
+        def _run(eff_dispatch_s):
+            row_ids = [None] * len(batch)
+            row_scores = [None] * len(batch)
+            g_done_max = eff_dispatch_s
+            for key, rows in groups.items():
+                queries = np.stack([batch[r].query for r in rows])
+                if key is None:
+                    res, g_done = self.target.execute(
+                        queries, self.k, eff_dispatch_s, self._batch_id
+                    )
+                else:
+                    res, g_done = self.target.execute(
+                        queries, key[0] or self.k, eff_dispatch_s,
+                        self._batch_id, key[1:],
+                    )
+                g_done_max = max(g_done_max, g_done)
+                for i, r in enumerate(rows):
+                    row_ids[r] = res.ids[i]
+                    row_scores[r] = res.scores[i]
+            return row_ids, row_scores, g_done_max
 
         # bounded retry of the (idempotent) batch: each re-issue charges
         # its backoff to the virtual clock via a later dispatch stamp
         eff_dispatch_s = dispatch_s
         err: Optional[BaseException] = None
-        res = done_s = None
+        row_ids = row_scores = done_s = None
         for attempt in range(self.cfg.max_retries + 1):
             try:
-                res, done_s = self.target.execute(
-                    queries, self.k, eff_dispatch_s, self._batch_id
-                )
+                row_ids, row_scores, done_s = _run(eff_dispatch_s)
                 err = None
                 break
             except Exception as e:  # noqa: BLE001 - bounded retry below
@@ -619,10 +702,11 @@ class ServingScheduler:
             stats.failed_batches += 1
             stats.failed_requests += len(batch)
             for req in batch:
+                k_r = req.k or self.k
                 self.done.append(RequestResult(
                     req_id=req.req_id,
-                    ids=np.full(self.k, -1, np.int64),
-                    scores=np.full(self.k, np.inf, np.float32),
+                    ids=np.full(k_r, -1, np.int64),
+                    scores=np.full(k_r, np.inf, np.float32),
                     arrival_s=req.arrival_s,
                     dispatch_s=dispatch_s,
                     done_s=eff_dispatch_s,
@@ -646,8 +730,8 @@ class ServingScheduler:
             self.done.append(
                 RequestResult(
                     req_id=req.req_id,
-                    ids=res.ids[row],
-                    scores=res.scores[row],
+                    ids=row_ids[row],
+                    scores=row_scores[row],
                     arrival_s=req.arrival_s,
                     dispatch_s=dispatch_s,
                     done_s=done_s,
@@ -663,9 +747,11 @@ class ServingScheduler:
     def run_trace(
         self, trace: Sequence[Tuple[float, np.ndarray]]
     ) -> List[RequestResult]:
-        """Replay a whole (arrival_s, query)-trace and drain. Returns served
-        results ordered by req_id; shed requests have no result (compare
-        ``stats.shed``)."""
+        """Replay a whole (arrival_s, query)-trace and drain. Trace
+        queries are :class:`repro.core.SearchRequest` objects or bare [D]
+        arrays (deprecated — auto-wrapped, see :meth:`submit`). Returns
+        served results ordered by req_id; shed requests have no result
+        (compare ``stats.shed``)."""
         for arrival_s, q in trace:
             self.submit(q, arrival_s)
         return self.flush()

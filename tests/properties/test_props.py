@@ -25,7 +25,14 @@ The invariants that make HARMONY's pruning *exact* rather than heuristic:
       compaction phase, then recovering (checkpoint + WAL-tail replay),
       reproduces exactly the brute-force oracle of *acknowledged*
       upserts/deletes on both serving backends — acknowledged writes
-      never lost, unacknowledged (torn) writes never resurrected.
+      never lost, unacknowledged (torn) writes never resurrected;
+  P10 filtered search is exact: for random per-row metadata and random
+      filter expression trees (TagIn/NumRange under And/Or), serving at
+      full coverage equals the brute-force oracle restricted to the
+      filter's allowed set — on both backends, under both precisions
+      (the int8 two-stage re-rank included), across seal/merge, and
+      interacting correctly with tombstones; rows without metadata and
+      disallowed/deleted ids never appear.
 """
 
 import numpy as np
@@ -488,3 +495,122 @@ def test_p9_crash_recovery_equals_acknowledged_oracle(data_seed, backend,
             assert not np.isin(res.ids, list(deleted) or [-999]).any()
         finally:
             wal2.close()
+
+
+def _random_filter(r: np.random.Generator):
+    """A small random expression tree over the "color" tag column and
+    the "price" numeric column (the shapes the engine compiles to
+    per-segment bitmaps)."""
+    from repro.core import NumRange, TagIn
+
+    def leaf():
+        if r.integers(2):
+            n_vals = int(r.integers(1, 4))
+            vals = tuple(int(v) for v in r.integers(0, 5, size=n_vals))
+            return TagIn("color", vals)
+        lo, hi = sorted(float(v) for v in r.uniform(0.0, 1.0, size=2))
+        return NumRange("price", lo, hi)
+
+    flt = leaf()
+    for _ in range(int(r.integers(0, 3))):
+        flt = (flt & leaf()) if r.integers(2) else (flt | leaf())
+    return flt
+
+
+@given(
+    data_seed=st.integers(0, 50),
+    backend=st.sampled_from(["host", "spmd"]),
+    precision=st.sampled_from(["fp32", "int8"]),
+    flt_seed=st.integers(0, 10_000),
+    n_delete=st.integers(0, 8),
+    lifecycle=st.sampled_from(["delta", "seal", "merge"]),
+)
+@settings(max_examples=8, deadline=None)
+def test_p10_filtered_search_matches_filtered_bruteforce(
+        data_seed, backend, precision, flt_seed, n_delete, lifecycle):
+    from repro.core import TAG_MISSING, SearchRequest, SegmentedIndex
+    from repro.core.pruning import exact_scores
+    from repro.serve import HarmonyServer
+    from repro.serve.executor import ExecutorConfig
+
+    nb, dim, k = 96, 8, 4
+    rng0 = np.random.default_rng(data_seed)
+    x = rng0.standard_normal((nb, dim)).astype(np.float32)
+    colors = rng0.integers(0, 5, size=nb)
+    prices = rng0.uniform(0.0, 1.0, size=nb).astype(np.float32)
+    # nprobe = nlist (exact IVF) and rerank_factor large enough that the
+    # int8 stage 1 keeps every probed candidate — both tiers are exact,
+    # so the clustering-independent filtered brute force is the oracle
+    cfg = HarmonyConfig(dim=dim, nlist=4, nprobe=4, topk=k, kmeans_iters=2,
+                        rerank_factor=32)
+    data = SegmentedIndex.build(x, cfg)
+    srv = HarmonyServer(
+        data, n_nodes=2, backend=backend,
+        executor_cfg=ExecutorConfig(qb_buckets=(8,), chunk=64,
+                                    use_pallas=False),
+    )
+    # overwrite every row with itself + metadata (replacement attaches
+    # meta to the delta copy and tombstones the sealed original)
+    srv.upsert(np.arange(nb), x, meta={"color": colors, "price": prices})
+    # a few rows with *no* metadata: a predicate can never admit them
+    rng1 = np.random.default_rng(data_seed + 1)
+    xe = rng1.standard_normal((4, dim)).astype(np.float32)
+    bare_ids = np.arange(200, 204)
+    srv.upsert(bare_ids, xe)
+    if lifecycle == "seal":
+        data.compact_inline(merge_all=False)
+    elif lifecycle == "merge":
+        data.compact_inline(merge_all=True)
+
+    model = {int(i): x[i].copy() for i in range(nb)}
+    meta = {int(i): (int(colors[i]), float(prices[i])) for i in range(nb)}
+    for j, i in enumerate(bare_ids):
+        model[int(i)] = xe[j]
+    rng2 = np.random.default_rng(flt_seed)
+    deleted = sorted(model)
+    rng2.shuffle(deleted)
+    deleted = deleted[:n_delete]
+    if deleted:
+        srv.delete(deleted)
+        for i in deleted:
+            del model[i]
+    flt = _random_filter(rng2)
+
+    # oracle allowed set: evaluate the same filter over columnarized
+    # model metadata (TAG_MISSING / NaN for rows upserted without meta)
+    ids_m = np.array(sorted(model), np.int64)
+    tag_col = np.array([meta.get(int(i), (TAG_MISSING, np.nan))[0]
+                        for i in ids_m], np.int64)
+    num_col = np.array([meta.get(int(i), (TAG_MISSING, np.nan))[1]
+                        for i in ids_m], np.float32)
+    allowed = flt.evaluate({"color": tag_col}, {"price": num_col},
+                           len(ids_m))
+    live = ids_m[allowed]
+
+    q = rng0.standard_normal((4, dim)).astype(np.float32)
+    probe_id = None
+    if live.size:
+        # a filtered row is reachable by its own vector
+        probe_id = int(live[-1])
+        q[0] = model[probe_id]
+    res = srv.search_batch(
+        SearchRequest(vector=q, k=k, filter=flt, precision=precision))
+    if not live.size:
+        assert (res.ids == -1).all()
+        return
+    xs = np.stack([model[int(i)] for i in live])
+    sc = exact_scores(xs, q, cfg.metric)
+    order = np.argsort(sc, axis=1, kind="stable")[:, :k]
+    want_s = np.full((4, k), np.inf, np.float32)
+    kk = min(k, live.size)
+    want_s[:, :kk] = np.take_along_axis(sc, order, axis=1)[:, :kk]
+    finite = np.isfinite(want_s)
+    np.testing.assert_allclose(res.scores[finite], want_s[finite],
+                               rtol=1e-3, atol=1e-3)
+    assert (res.ids[~finite] == -1).all()
+    # every returned id satisfies the filter; deleted/bare never leak
+    got = res.ids[res.ids >= 0]
+    assert np.isin(got, live).all()
+    assert not np.isin(got, deleted or [-999]).any()
+    assert not np.isin(got, bare_ids).any()
+    assert probe_id in res.ids[0]

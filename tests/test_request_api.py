@@ -1,0 +1,179 @@
+"""Request-API regression tests.
+
+The SearchRequest/SearchResult redesign must be a strict superset of the
+old surface: every pre-existing call shape — positional
+``search_batch(q, k)``, bare-ndarray ``submit``/``run_trace``, dispatch
+targets written against the old positional ``execute`` signature — still
+runs and returns bit-identical results (the virtual-clock goldens pin
+the same contract end-to-end). The deprecation shim must warn on bare
+arrays at the public admission points and stay silent on the canonical
+:class:`SearchRequest` path."""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.config import HarmonyConfig
+from repro.core import SegmentedIndex, TagIn, build_ivf, search_oracle
+from repro.data import make_dataset, make_queries
+from repro.serve import (
+    DispatchTarget,
+    HarmonyServer,
+    SchedulerConfig,
+    SearchRequest,
+    ServeStats,
+    ServingScheduler,
+)
+
+
+@pytest.fixture(scope="module")
+def anns():
+    ds = make_dataset(nb=1500, dim=16, n_components=6, spread=0.6, seed=0)
+    cfg = HarmonyConfig(dim=16, nlist=8, nprobe=8, topk=5, kmeans_iters=3)
+    index = build_ivf(ds.x, cfg)
+    q = make_queries(ds, nq=32, skew=0.3, noise=0.2, seed=1)
+    return ds, cfg, index, q
+
+
+# ------------------------------------------- engine: old positional call
+
+
+def test_search_batch_positional_equals_request(anns):
+    ds, cfg, index, q = anns
+    srv = HarmonyServer(index, n_nodes=2)
+    old = srv.search_batch(q, 5)
+    new = srv.search_batch(SearchRequest(vector=q, k=5))
+    assert np.array_equal(old.ids, new.ids)
+    assert np.array_equal(old.scores, new.scores)
+
+
+# --------------------------------------- scheduler: deprecation shim
+
+
+def test_bare_ndarray_submit_warns_and_matches(anns):
+    ds, cfg, index, q = anns
+
+    def run(wrap):
+        srv = HarmonyServer(index, n_nodes=2)
+        sched = ServingScheduler(srv, SchedulerConfig(max_batch=8), k=5)
+        trace = [(0.0, wrap(q[i]) if wrap else q[i]) for i in range(16)]
+        return sched.run_trace(trace)
+
+    with pytest.warns(DeprecationWarning, match="bare ndarray"):
+        old = run(None)
+    with warnings.catch_warnings():
+        # the canonical path must be warning-free
+        warnings.simplefilter("error", DeprecationWarning)
+        new = run(lambda v: SearchRequest(vector=v))
+    assert len(old) == len(new) == 16
+    for a, b in zip(old, new):
+        assert np.array_equal(a.ids, b.ids)
+        assert np.array_equal(a.scores, b.scores)
+
+
+# ------------------------------- old-style dispatch targets still work
+
+
+class LegacyTarget(DispatchTarget):
+    """A dispatch target written against the pre-request positional
+    ``execute`` signature — knob-free batches must reach it unchanged."""
+
+    def __init__(self):
+        self.stats = ServeStats()
+        self.calls = []
+
+    def configure(self, cfg, k):
+        pass
+
+    def next_free_s(self):
+        return 0.0
+
+    def execute(self, queries, k, dispatch_s, batch_id):  # no options arg
+        self.calls.append((batch_id, queries.shape[0], k))
+        ids = np.tile(np.arange(k, dtype=np.int64), (queries.shape[0], 1))
+        scores = np.zeros((queries.shape[0], k), np.float32)
+
+        class R:
+            pass
+
+        r = R()
+        r.ids, r.scores = ids, scores
+        return r, dispatch_s
+
+    @property
+    def default_max_batch(self):
+        return 8
+
+    @property
+    def default_k(self):
+        return 5
+
+    @property
+    def replans(self):
+        return 0
+
+    @property
+    def nlist(self):
+        return 4
+
+    @property
+    def parallelism(self):
+        return 1
+
+
+def test_legacy_positional_target_unchanged():
+    target = LegacyTarget()
+    sched = ServingScheduler(target, SchedulerConfig(max_batch=4), k=5)
+    q = np.zeros((8, 8), np.float32)
+    results = sched.run_trace(
+        [(0.0, SearchRequest(vector=q[i])) for i in range(8)])
+    assert len(results) == 8
+    assert [c[1] for c in target.calls] == [4, 4]
+    assert all(c[2] == 5 for c in target.calls)
+
+
+# -------------------------- mixed per-request knobs in one formed batch
+
+
+def test_mixed_option_batch_splits_and_matches(anns):
+    ds, cfg, index, q = anns
+    data = SegmentedIndex.from_static(index)
+    srv = HarmonyServer(data, n_nodes=2)
+    srv.upsert(np.arange(8) + 10_000, ds.x[:8] + 3.0,
+               meta={"color": [1, 2] * 4})
+    flt = TagIn("color", (2,))
+    sched = ServingScheduler(srv, SchedulerConfig(max_batch=8), k=5)
+    trace = [
+        (0.0, SearchRequest(vector=q[0])),
+        (0.0, SearchRequest(vector=q[1], filter=flt)),
+        (0.0, SearchRequest(vector=q[2], k=3)),
+        (0.0, SearchRequest(vector=q[3], filter=flt)),
+    ]
+    results = sched.run_trace(trace)
+    assert len(results) == 4
+    # per-request k honoured without inflating the others
+    assert results[2].ids.shape == (3,)
+    assert results[0].ids.shape == (5,)
+    # filtered rows equal the filtered synchronous call, row for row
+    want = srv.search_batch(np.stack([q[1], q[3]]), 5, flt=flt)
+    assert np.array_equal(results[1].ids, want.ids[0])
+    assert np.array_equal(results[3].ids, want.ids[1])
+    # unfiltered row equals the plain engine result
+    plain = srv.search_batch(q[:1], 5)
+    assert np.array_equal(results[0].ids, plain.ids[0])
+
+
+# ----------------------------------------- DataPlane forwarder contract
+
+
+def test_dataplane_forwarders_count_writes(anns):
+    ds, cfg, index, q = anns
+    data = SegmentedIndex.from_static(index)
+    srv = HarmonyServer(data, n_nodes=2)
+    srv.upsert([50_000, 50_001], ds.x[:2])
+    assert srv.stats.upserts == 2
+    removed = srv.delete([50_000, 99_999])   # one hit, one miss
+    assert removed == 1
+    # deletes count submitted ids (the historical, golden-pinned metric)
+    assert srv.stats.deletes == 2
