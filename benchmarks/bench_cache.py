@@ -1,0 +1,157 @@
+"""Semantic-cache benchmark: effective served QPS on a Zipfian
+repeat-heavy trace, cache off vs exact tier vs semantic tier.
+
+Real query streams are heavily repetitive; this bench replays an
+open-loop trace whose queries are drawn Zipf-distributed from a small
+pool (rank-``1/r`` weights — a few hot queries dominate, the tail is
+long) at an offered rate well above the service model's capacity. The
+virtual-clock scheduler replays the identical trace three ways:
+
+* ``off`` — ``cache=None``: every repeat executes; throughput is pinned
+  at the service model's capacity and the makespan stretches far past
+  the trace span;
+* ``exact`` — exact-tier cache + in-batch coalescing: repeats are
+  answered from cache at arrival, only (roughly) the distinct pool
+  executes, and the makespan collapses toward the trace span;
+* ``semantic`` — every request is its pool anchor plus a jitter inside
+  half the semantic radius (so any two requests of one anchor are
+  within the threshold of each other): the exact tier can never hit,
+  the semantic tier serves the repeats.
+
+Service model: ``service_time_fn = n_queries × 1 ms`` on the virtual
+clock (the serving benches' standard one-box methodology — deterministic
+and machine-independent). Offered load is ``OVERSUBSCRIBE×`` capacity.
+
+Acceptance claim (ISSUE 9): the exact-tier cell serves **≥ 3×** the
+cache-off effective QPS on this trace.
+
+Results fold into ``serving_results.json`` under the ``"cache"`` key
+(schema in ``benchmarks/README.md``), plus the usual CSV rows.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import TINY, corpus, emit
+from repro.core import SearchRequest
+from repro.data import make_queries
+from repro.serve import (
+    CacheConfig,
+    HarmonyServer,
+    SchedulerConfig,
+    ServingScheduler,
+)
+
+N_REQ = 256 if TINY else 1024
+POOL = 32 if TINY else 64
+PER_Q_S = 1e-3          # virtual service model: 1 ms per query row
+OVERSUBSCRIBE = 5.0     # offered load / service capacity
+SEM_THRESHOLD = 1.0     # squared-L2 semantic radius (score space)
+
+
+def zipf_trace(pool: np.ndarray, n: int, rate_qps: float, seed: int,
+               jitter_r: float = 0.0):
+    """Open-loop arrivals at ``rate_qps`` whose queries are drawn from
+    ``pool`` with Zipf (1/rank) weights; ``jitter_r > 0`` perturbs every
+    draw inside a ball of that radius (the semantic-tier workload)."""
+    rng = np.random.default_rng(seed)
+    p = 1.0 / np.arange(1, len(pool) + 1)
+    p /= p.sum()
+    picks = rng.choice(len(pool), size=n, p=p)
+    trace = []
+    for i, pick in enumerate(picks):
+        v = pool[pick]
+        if jitter_r > 0:
+            d = rng.standard_normal(v.shape[0]).astype(np.float32)
+            d *= (jitter_r * rng.uniform()) / max(float(np.linalg.norm(d)),
+                                                  1e-9)
+            v = (v + d).astype(np.float32)
+        trace.append((i / rate_qps, SearchRequest(vector=v)))
+    return trace
+
+
+def run_cell(index, cfg, trace, cache) -> dict:
+    srv = HarmonyServer(index, n_nodes=4)
+    sched = ServingScheduler(
+        srv,
+        SchedulerConfig(max_batch=32, max_wait_s=2e-3, cache=cache),
+        k=cfg.topk, service_time_fn=lambda n: n * PER_Q_S,
+    )
+    sched.run_trace(trace)
+    st = srv.stats
+    return {
+        "served": len(sched.done),
+        "served_qps": sched.served_qps,
+        "makespan_s": sched.makespan_s,
+        "executed_queries": st.queries,
+        "cache_hits_exact": st.cache_hits_exact,
+        "cache_hits_semantic": st.cache_hits_semantic,
+        "cache_misses": st.cache_misses,
+        "coalesced": st.coalesced,
+    }
+
+
+def main():
+    _, cfg, index = corpus(nb=10_000)
+    rate_qps = OVERSUBSCRIBE / PER_Q_S
+    ds, _, _ = corpus(nb=10_000)
+    pool = make_queries(ds, nq=POOL, skew=0.3, noise=0.2, seed=11)
+
+    print(f"# cache: Zipfian repeat trace ({N_REQ} requests over a "
+          f"{POOL}-query pool, offered {rate_qps:.0f} q/s vs "
+          f"{1.0 / PER_Q_S:.0f} q/s capacity)")
+    exact_cfg = CacheConfig(enabled=True, exact_ttl_s=1e9)
+    sem_cfg = CacheConfig(enabled=True, exact_ttl_s=1e9,
+                          semantic_threshold=SEM_THRESHOLD)
+    # same arrival process for every cell; the semantic cell jitters each
+    # draw inside HALF the semantic radius, so any two requests of one
+    # anchor stay within the threshold of each other
+    exact_trace = zipf_trace(pool, N_REQ, rate_qps, seed=5)
+    sem_trace = zipf_trace(pool, N_REQ, rate_qps, seed=5,
+                           jitter_r=0.5 * float(np.sqrt(SEM_THRESHOLD)))
+    report = {
+        "n_requests": N_REQ,
+        "pool": POOL,
+        "offered_qps": rate_qps,
+        "per_q_service_s": PER_Q_S,
+        "semantic_threshold": SEM_THRESHOLD,
+        "cells": {},
+    }
+    for name, trace, cache in (
+        ("off", exact_trace, None),
+        ("exact", exact_trace, exact_cfg),
+        ("semantic", sem_trace, sem_cfg),
+    ):
+        cell = run_cell(index, cfg, trace, cache)
+        report["cells"][name] = cell
+        emit(
+            f"cache.zipf.{name}",
+            1e6 / max(cell["served_qps"], 1e-9),
+            f"served_qps={cell['served_qps']:.0f};"
+            f"executed={cell['executed_queries']};"
+            f"hits={cell['cache_hits_exact']}+{cell['cache_hits_semantic']};"
+            f"coalesced={cell['coalesced']}",
+        )
+
+    q_off = report["cells"]["off"]["served_qps"]
+    q_on = report["cells"]["exact"]["served_qps"]
+    ok = q_on >= 3.0 * q_off
+    report["claim_cached_qps_ge_3x_uncached"] = {
+        "off_qps": q_off, "exact_qps": q_on,
+        "speedup": q_on / max(q_off, 1e-9), "ok": bool(ok),
+    }
+    emit("cache.claim.cached_qps_ge_3x_uncached", 0.0,
+         f"ok={ok};speedup={q_on / max(q_off, 1e-9):.2f}")
+
+    out = Path(__file__).resolve().parent / "serving_results.json"
+    blob = json.loads(out.read_text()) if out.exists() else {}
+    blob["cache"] = report
+    out.write_text(json.dumps(blob, indent=2, sort_keys=True))
+
+
+if __name__ == "__main__":
+    main()

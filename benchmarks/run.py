@@ -15,6 +15,7 @@ def main() -> None:
         bench_ablation,
         bench_breakdown,
         bench_build,
+        bench_cache,
         bench_chaos,
         bench_executor,
         bench_filtered,
@@ -37,6 +38,7 @@ def main() -> None:
         bench_serving,
         bench_fleet,
         bench_frontend,
+        bench_cache,
         bench_chaos,
         bench_executor,
         bench_quantization,

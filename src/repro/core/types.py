@@ -179,7 +179,11 @@ class SearchRequest:
     * ``precision`` — "fp32" | "int8" override, or None for the server's
       configured tier.
     * ``deadline`` — absolute clock time after which the caller no longer
-      wants an answer (advisory; carried into scheduling stats).
+      wants an answer. Enforced per request by the scheduler and
+      front-end: a request whose deadline passed before dispatch is shed
+      with the sentinel degradation path (ids -1, +inf scores, counted in
+      ``stats.expired_requests``) instead of executed; cache hits honor
+      it trivially (they complete at arrival).
     """
 
     vector: np.ndarray
@@ -242,6 +246,20 @@ class DataPlane:
     def _data_plane(self):
         """The layer writes forward to (override)."""
         raise NotImplementedError
+
+    def _root_data_plane(self):
+        """Follow ``_data_plane()`` to the bottom of the stack — ultimately
+        the shared :class:`repro.core.SegmentedIndex`. The serving-side
+        query cache reads its ``(generation, op_count)`` epoch here, so
+        writes and compaction commits invalidate cached answers no matter
+        which layer performed them (frontend, scheduler target, fleet, or
+        the plane directly)."""
+        obj = self
+        for _ in range(8):                  # defensive depth bound
+            if not isinstance(obj, DataPlane):
+                break
+            obj = obj._data_plane()
+        return obj
 
     def _note_write(self, kind: str, n: int) -> None:
         """Accounting hook: ``kind`` is "upsert" | "delete", ``n`` the

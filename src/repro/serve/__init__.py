@@ -79,6 +79,7 @@ from repro.core.types import (
     SearchResult,
     TagIn,
 )
+from repro.serve.cache import CacheConfig, CacheHit, QueryCache
 from repro.serve.clock import Clock, MonotonicClock, VirtualClock
 from repro.serve.compactor import CompactionConfig, Compactor
 from repro.serve.engine import HarmonyServer, ServeStats
@@ -106,6 +107,9 @@ __all__ = [
     "And",
     "Or",
     "DataPlane",
+    "CacheConfig",
+    "CacheHit",
+    "QueryCache",
     "Compactor",
     "CompactionConfig",
     "ExecutorConfig",

@@ -109,6 +109,19 @@ class ServeStats:
     failed_requests: int = 0         # requests inside those failed batches
     shutdown_leaks: int = 0          # frontend shutdowns leaving live threads
 
+    # --- semantic cache + coalescing front door (repro.serve.cache):
+    # cache-off (the default) leaves all six at 0. Hits and expirations
+    # complete at admission, so on the scheduler
+    # offered == admitted + shed + expired_requests + cache hits, and the
+    # front-end additionally subtracts coalesced (followers never queue;
+    # the virtual scheduler coalesces at dispatch, inside admitted).
+    cache_hits_exact: int = 0        # answered verbatim from the exact tier
+    cache_hits_semantic: int = 0     # answered from a cached neighbor
+    cache_misses: int = 0            # lookups that fell through to execution
+    cache_invalidations: int = 0     # entries dropped (epoch/TTL/explicit)
+    coalesced: int = 0               # duplicates that shared an execution
+    expired_requests: int = 0        # per-request deadlines enforced
+
     @property
     def qps(self) -> float:
         """Queries per second of *summed batch execution wall*
@@ -171,6 +184,12 @@ class ServeStats:
             "failed_batches": self.failed_batches,
             "failed_requests": self.failed_requests,
             "shutdown_leaks": self.shutdown_leaks,
+            "cache_hits_exact": self.cache_hits_exact,
+            "cache_hits_semantic": self.cache_hits_semantic,
+            "cache_misses": self.cache_misses,
+            "cache_invalidations": self.cache_invalidations,
+            "coalesced": self.coalesced,
+            "expired_requests": self.expired_requests,
             "p50_queue_wait_ms": self._pct_or_none(self.queue_wait_ms, 50),
             "p99_queue_wait_ms": self._pct_or_none(self.queue_wait_ms, 99),
             "p50_request_latency_ms": self._pct_or_none(self.request_latency_ms, 50),

@@ -61,6 +61,7 @@ import time
 import warnings
 
 from repro.core.types import DataPlane, SearchRequest
+from repro.serve.cache import QueryCache, build_query_cache
 from repro.serve.clock import Clock, MonotonicClock
 from repro.serve.scheduler import (
     DispatchTarget,
@@ -143,6 +144,16 @@ class ServingFrontend(DataPlane):
         self._skew = SkewMonitor(self.cfg, self.target)
         self._skew_mu = threading.Lock()
 
+        # semantic cache + in-flight coalescing (repro.serve.cache):
+        # inert when cfg.cache is None/disabled. Followers of an in-flight
+        # leader never enter the queue — they attach to its execution and
+        # resolve when it completes.
+        self.cache = build_query_cache(self.cfg, self.target, self.stats)
+        self._coalesce = self.cache is not None and self.cfg.cache.coalesce
+        self._leaders: dict = {}                   # cache key -> leader rid
+        self._followers: dict = {}                 # leader rid -> [(Request, Future)]
+        self._rid_key: dict = {}                   # leader rid -> cache key
+
         self._mu = threading.Condition()
         self.queue: Deque[Request] = deque()       # same shape the shared
         self._futures: dict = {}                   # next_fire policy reads
@@ -180,6 +191,8 @@ class ServingFrontend(DataPlane):
             )
             query = SearchRequest(vector=np.asarray(query))
         fut: "Future[RequestResult]" = Future()
+        shed_exc = None
+        ready: Optional[RequestResult] = None
         with self._mu:
             if self._closing:
                 raise RuntimeError("ServingFrontend is shut down")
@@ -189,7 +202,48 @@ class ServingFrontend(DataPlane):
             self._next_id += 1
             if self.first_arrival_s is None:
                 self.first_arrival_s = arrival_s
-            if (self.cfg.queue_capacity
+            vec = np.asarray(query.vector)
+            k_r = query.k or self.k
+            options = (query.filter, query.hybrid_text, query.precision)
+            key = (QueryCache.request_key(vec, k_r, options)
+                   if self.cache is not None else None)
+            hit = None
+            leader = (self._leaders.get(key)
+                      if self._coalesce and key is not None else None)
+            if query.deadline is not None and arrival_s > query.deadline:
+                # deadline already blown: sentinel degradation (PR 7
+                # shape), never queued — checked before the cache so even
+                # a cached answer is refused
+                self.stats.expired_requests += 1
+                ready = RequestResult(
+                    req_id=rid,
+                    ids=np.full(k_r, -1, np.int64),
+                    scores=np.full(k_r, np.inf, np.float32),
+                    arrival_s=arrival_s, dispatch_s=arrival_s,
+                    done_s=arrival_s, batch_id=-1,
+                )
+            elif (self.cache is not None and (hit := self.cache.lookup(
+                    vec, k_r, options, arrival_s)) is not None):
+                self._served += 1
+                self.last_done_s = max(self.last_done_s, arrival_s)
+                self.stats.queue_wait_ms.append(0.0)
+                self.stats.request_latency_ms.append(0.0)
+                ready = RequestResult(
+                    req_id=rid, ids=hit.ids, scores=hit.scores,
+                    arrival_s=arrival_s, dispatch_s=arrival_s,
+                    done_s=arrival_s, batch_id=-1,
+                )
+            elif leader is not None:
+                # coalesce: attach to the in-flight/queued duplicate's
+                # execution instead of enqueueing again
+                self.stats.coalesced += 1
+                self._followers.setdefault(leader, []).append((Request(
+                    rid, vec, arrival_s,
+                    k=query.k, filter=query.filter,
+                    hybrid_text=query.hybrid_text, precision=query.precision,
+                    deadline=query.deadline,
+                ), fut))
+            elif (self.cfg.queue_capacity
                     and len(self.queue) >= self.cfg.queue_capacity):
                 self.stats.shed += 1
                 shed_exc = ShedError(
@@ -198,16 +252,21 @@ class ServingFrontend(DataPlane):
                 )
             else:
                 self.queue.append(Request(
-                    rid, np.asarray(query.vector), arrival_s,
+                    rid, vec, arrival_s,
                     k=query.k, filter=query.filter,
                     hybrid_text=query.hybrid_text, precision=query.precision,
+                    deadline=query.deadline,
                 ))
                 self._futures[rid] = fut
                 self.stats.admitted += 1
-                shed_exc = None
+                if self._coalesce and key is not None:
+                    self._leaders[key] = rid
+                    self._rid_key[rid] = key
                 self._mu.notify_all()
         if shed_exc is not None:
             fut.set_exception(shed_exc)
+        elif ready is not None:
+            fut.set_result(ready)
         return fut
 
     def submit_many(self, queries) -> List["Future[RequestResult]"]:
@@ -275,12 +334,87 @@ class ServingFrontend(DataPlane):
             except RuntimeError:            # pool torn down mid-close
                 with self._mu:
                     self._inflight -= 1
+                    fols = self._detach_followers(batch)
                     self._mu.notify_all()
                 for fut in futs:
                     fut.cancel()
+                for fl in fols:
+                    for _, f in fl:
+                        f.cancel()
+
+    def _detach_followers(self, batch) -> List[list]:
+        """Pop each batch request's coalesced followers and release its
+        leader registration (call under ``self._mu``). Returns one
+        ``[(Request, Future), ...]`` list per batch row. After this, new
+        duplicates start a fresh leader — no follower can attach to an
+        already-completed execution."""
+        fols = []
+        for req in batch:
+            key = self._rid_key.pop(req.req_id, None)
+            if key is not None and self._leaders.get(key) == req.req_id:
+                del self._leaders[key]
+            fols.append(self._followers.pop(req.req_id, []))
+        return fols
+
+    def _sentinel(self, rid: int, k: int, arrival_s: float, stamp_s: float,
+                  bid: int) -> RequestResult:
+        return RequestResult(
+            req_id=rid,
+            ids=np.full(k, -1, np.int64),
+            scores=np.full(k, np.inf, np.float32),
+            arrival_s=arrival_s, dispatch_s=stamp_s, done_s=stamp_s,
+            batch_id=bid,
+        )
 
     def _run_batch(self, batch, futs, dispatch_s: float, trigger: str,
                    bid: int):
+        # per-request deadline enforcement at dispatch: a request whose
+        # absolute deadline passed while it queued degrades to the
+        # sentinel shape (PR 7), never executes. Its coalesced followers
+        # (who wanted the same answer) degrade with it.
+        expired, exp_futs = [], []
+        live, live_futs = [], []
+        for req, fut in zip(batch, futs):
+            if req.deadline is not None and dispatch_s > req.deadline:
+                expired.append(req)
+                exp_futs.append(fut)
+            else:
+                live.append(req)
+                live_futs.append(fut)
+        if expired:
+            with self._mu:
+                exp_fols = (self._detach_followers(expired)
+                            if self._coalesce else [[] for _ in expired])
+                self.stats.expired_requests += (
+                    len(expired) + sum(len(f) for f in exp_fols)
+                )
+            for req, fut, fols in zip(expired, exp_futs, exp_fols):
+                fut.set_result(self._sentinel(
+                    req.req_id, req.k or self.k, req.arrival_s, dispatch_s,
+                    bid,
+                ))
+                for freq, ffut in fols:
+                    ffut.set_result(self._sentinel(
+                        freq.req_id, freq.k or self.k, freq.arrival_s,
+                        dispatch_s, bid,
+                    ))
+        batch, futs = live, live_futs
+        if not batch:
+            with self._mu:
+                self._inflight -= 1
+                self._mu.notify_all()
+            if self.on_batch is not None:
+                try:
+                    self.on_batch(bid, self)
+                except Exception as e:
+                    warnings.warn(
+                        f"on_batch callback failed on batch {bid}: {e!r}"
+                    )
+            return
+        # epoch read before execution: cache entries from this batch are
+        # stamped pre-execute, so a concurrent write that lands mid-batch
+        # makes them count as already-stale (conservative)
+        pre_epoch = self.cache.epoch() if self.cache is not None else None
         row_ids = row_scores = None
         err = None
         try:
@@ -339,13 +473,28 @@ class ServingFrontend(DataPlane):
             err = e
         if err is not None:
             done_s = self.clock.now()
+        if err is None and self.cache is not None:
+            # store served answers before followers detach, so the next
+            # duplicate (no longer coalescible) exact-hits instead
+            for row, req in enumerate(batch):
+                self.cache.insert(
+                    req.query, req.k or self.k,
+                    (req.filter, req.hybrid_text, req.precision),
+                    row_ids[row], row_scores[row], done_s, epoch=pre_epoch,
+                )
         with self._mu:
             self._inflight -= 1
+            # followers resolve with their leader (success or error) —
+            # detaching under the same lock submit() attaches with means
+            # no follower can be orphaned
+            fols = (self._detach_followers(batch)
+                    if self._coalesce else [[] for _ in batch])
+            n_fols = sum(len(f) for f in fols)
             if err is not None:
                 # the batch is answered (with an error), the front-end
                 # keeps serving — degradation, not collapse
                 self.stats.failed_batches += 1
-                self.stats.failed_requests += len(batch)
+                self.stats.failed_requests += len(batch) + n_fols
             if err is None:
                 if trigger == "full":
                     self.stats.full_batches += 1
@@ -353,20 +502,32 @@ class ServingFrontend(DataPlane):
                     self.stats.capacity_batches += 1
                 else:
                     self.stats.deadline_batches += 1
-                for req in batch:
+                for row, req in enumerate(batch):
                     self.stats.queue_wait_ms.append(
                         (dispatch_s - req.arrival_s) * 1e3
                     )
                     self.stats.request_latency_ms.append(
                         (done_s - req.arrival_s) * 1e3
                     )
-                self._served += len(batch)
+                    for freq, _ffut in fols[row]:
+                        # a follower may have attached after dispatch —
+                        # it never queued, so its wait clamps at 0
+                        self.stats.queue_wait_ms.append(
+                            max(dispatch_s - freq.arrival_s, 0.0) * 1e3
+                        )
+                        self.stats.request_latency_ms.append(
+                            max(done_s - freq.arrival_s, 0.0) * 1e3
+                        )
+                self._served += len(batch) + n_fols
                 self.last_done_s = max(self.last_done_s, done_s)
             self._mu.notify_all()
         # complete futures outside the lock: done-callbacks run inline
         if err is not None:
             for fut in futs:
                 fut.set_exception(err)
+            for fl in fols:
+                for _, ffut in fl:
+                    ffut.set_exception(err)
         else:
             for row, (req, fut) in enumerate(zip(batch, futs)):
                 fut.set_result(
@@ -380,6 +541,18 @@ class ServingFrontend(DataPlane):
                         batch_id=bid,
                     )
                 )
+                for freq, ffut in fols[row]:
+                    ffut.set_result(
+                        RequestResult(
+                            req_id=freq.req_id,
+                            ids=row_ids[row],
+                            scores=row_scores[row],
+                            arrival_s=freq.arrival_s,
+                            dispatch_s=dispatch_s,
+                            done_s=done_s,
+                            batch_id=bid,
+                        )
+                    )
             try:
                 with self._skew_mu:         # serialized hot-mass check
                     self._skew.after_batch()
@@ -439,8 +612,13 @@ class ServingFrontend(DataPlane):
             already = self._closing
             self._closing = True
             if not wait:
-                dropped = [self._futures.pop(r.req_id, None)
-                           for r in self.queue]
+                dropped = []
+                for r in self.queue:
+                    dropped.append(self._futures.pop(r.req_id, None))
+                    # queued leaders take their coalesced followers down
+                    # with them (in-flight leaders still resolve theirs)
+                    for fl in self._detach_followers([r]):
+                        dropped.extend(f for _, f in fl)
                 self.queue.clear()
             self._mu.notify_all()
         if not wait:

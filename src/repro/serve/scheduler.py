@@ -59,6 +59,7 @@ from repro.core.router import (
 )
 from repro.core.types import DataPlane, Filter, SearchRequest
 from repro.runtime.straggler import HedgingExecutor
+from repro.serve.cache import CacheConfig, build_query_cache, vec_bytes
 from repro.serve.clock import Clock, VirtualClock
 
 
@@ -109,6 +110,11 @@ class SchedulerConfig:
     max_retries: int = 0
     retry_backoff_s: float = 1e-3
     request_deadline_s: float = 0.0
+    # semantic cache + request coalescing in front of admission
+    # (repro.serve.cache). None or CacheConfig(enabled=False) — the
+    # default — keeps every admission path byte-identical to a cache-less
+    # build (the virtual-clock goldens pin this).
+    cache: Optional[CacheConfig] = None
 
 
 @dataclass
@@ -124,6 +130,7 @@ class Request:
     filter: Optional[Filter] = None
     hybrid_text: Optional[str] = None
     precision: Optional[str] = None
+    deadline: Optional[float] = None    # absolute; enforced at dispatch
 
     def options_key(self):
         """Grouping key for batch execution (see
@@ -562,6 +569,10 @@ class ServingScheduler:
         self._batch_id = 0
         self.target.configure(self.cfg, self.k)
         self._skew = SkewMonitor(self.cfg, self.target)
+        # semantic cache + in-batch coalescing (inert when cfg.cache is
+        # None/disabled — the goldens pin byte-identity of that default)
+        self.cache = build_query_cache(self.cfg, self.target, self.stats)
+        self._coalesce = self.cache is not None and self.cfg.cache.coalesce
 
     @property
     def _hedge(self) -> Optional[HedgingExecutor]:
@@ -587,6 +598,7 @@ class ServingScheduler:
         if isinstance(query, SearchRequest):
             req_k, req_flt = query.k, query.filter
             req_text, req_prec = query.hybrid_text, query.precision
+            req_dl = query.deadline
             query = query.vector
         else:
             if _warn:
@@ -595,7 +607,7 @@ class ServingScheduler:
                     "repro.core.SearchRequest",
                     DeprecationWarning, stacklevel=2,
                 )
-            req_k = req_flt = req_text = req_prec = None
+            req_k = req_flt = req_text = req_prec = req_dl = None
         if arrival_s is None:
             arrival_s = self.clock.now()
         self.advance(arrival_s)
@@ -605,15 +617,54 @@ class ServingScheduler:
         self._next_id += 1
         if self.first_arrival_s is None:
             self.first_arrival_s = arrival_s
+        query = np.asarray(query)
+        # per-request deadline already blown at submission: answer with
+        # the sentinel degradation path (PR 7), never queue dead work —
+        # checked before the cache so even a cached answer is refused
+        if req_dl is not None and arrival_s > req_dl:
+            stats.expired_requests += 1
+            self.busy_until = max(self.busy_until, arrival_s)
+            self._sentinel(rid, req_k or self.k, arrival_s, arrival_s,
+                           arrival_s, batch_id=-1)
+            return rid
+        if self.cache is not None:
+            k_r = req_k or self.k
+            hit = self.cache.lookup(
+                query, k_r, (req_flt, req_text, req_prec), arrival_s
+            )
+            if hit is not None:
+                # served at arrival: no queueing, no shedding, no batch
+                self.busy_until = max(self.busy_until, arrival_s)
+                stats.queue_wait_ms.append(0.0)
+                stats.request_latency_ms.append(0.0)
+                self.done.append(RequestResult(
+                    req_id=rid, ids=hit.ids, scores=hit.scores,
+                    arrival_s=arrival_s, dispatch_s=arrival_s,
+                    done_s=arrival_s, batch_id=-1,
+                ))
+                return rid
         if self.cfg.queue_capacity and len(self.queue) >= self.cfg.queue_capacity:
             stats.shed += 1
             return -1
         self.queue.append(Request(
-            rid, np.asarray(query), arrival_s,
+            rid, query, arrival_s,
             k=req_k, filter=req_flt, hybrid_text=req_text, precision=req_prec,
+            deadline=req_dl,
         ))
         stats.admitted += 1
         return rid
+
+    def _sentinel(self, rid: int, k: int, arrival_s: float, dispatch_s: float,
+                  done_s: float, batch_id: int) -> None:
+        """Append a degraded (ids -1, +inf scores) result for a request
+        answered without execution — the PR 7 sentinel shape."""
+        self.done.append(RequestResult(
+            req_id=rid,
+            ids=np.full(k, -1, np.int64),
+            scores=np.full(k, np.inf, np.float32),
+            arrival_s=arrival_s, dispatch_s=dispatch_s, done_s=done_s,
+            batch_id=batch_id,
+        ))
 
     # ------------------------------------------------------------ batch form
     def _next_fire(self) -> Tuple[float, str]:
@@ -643,6 +694,25 @@ class ServingScheduler:
         batch = [self.queue.popleft()
                  for _ in range(min(len(self.queue), self.max_batch))]
         stats = self.stats
+        # per-request deadline enforcement at dispatch: a request whose
+        # absolute deadline passed while it queued is answered with the
+        # sentinel degradation path (PR 7 shape), never executed
+        expired = [req for req in batch
+                   if req.deadline is not None and dispatch_s > req.deadline]
+        if expired:
+            stats.expired_requests += len(expired)
+            for req in expired:
+                self._sentinel(req.req_id, req.k or self.k, req.arrival_s,
+                               dispatch_s, dispatch_s, self._batch_id)
+            gone = {req.req_id for req in expired}
+            batch = [req for req in batch if req.req_id not in gone]
+            if not batch:
+                # nothing left to execute: mirror the failed-batch path —
+                # the batch id is consumed, no trigger/skew accounting
+                self._batch_id += 1
+                if self.on_batch is not None:
+                    self.on_batch(self._batch_id - 1, self)
+                return
         # partition the formed batch by request options: each group shares
         # one (k, filter, hybrid_text, precision) execution context. A
         # knob-free batch is exactly one group with key None and one
@@ -651,13 +721,37 @@ class ServingScheduler:
         groups: Dict[Optional[tuple], List[int]] = {}
         for row, req in enumerate(batch):
             groups.setdefault(req.options_key(), []).append(row)
+        # in-batch coalescing: duplicate vectors inside one options group
+        # execute once; the answer fans out to every duplicate row. The
+        # virtual-clock twin of the front-end's in-flight coalescing —
+        # deterministic, so replay harnesses exercise it.
+        plans: Dict[Optional[tuple], Tuple[List[int], List[int]]] = {}
+        for key, rows in groups.items():
+            if self._coalesce:
+                seen: Dict[bytes, int] = {}
+                exec_rows: List[int] = []
+                assign: List[int] = []
+                for r in rows:
+                    b = vec_bytes(batch[r].query)
+                    j = seen.get(b)
+                    if j is None:
+                        j = len(exec_rows)
+                        seen[b] = j
+                        exec_rows.append(r)
+                    else:
+                        stats.coalesced += 1
+                    assign.append(j)
+                plans[key] = (exec_rows, assign)
+            else:
+                plans[key] = (rows, list(range(len(rows))))
 
         def _run(eff_dispatch_s):
             row_ids = [None] * len(batch)
             row_scores = [None] * len(batch)
             g_done_max = eff_dispatch_s
             for key, rows in groups.items():
-                queries = np.stack([batch[r].query for r in rows])
+                exec_rows, assign = plans[key]
+                queries = np.stack([batch[r].query for r in exec_rows])
                 if key is None:
                     res, g_done = self.target.execute(
                         queries, self.k, eff_dispatch_s, self._batch_id
@@ -668,11 +762,15 @@ class ServingScheduler:
                         self._batch_id, key[1:],
                     )
                 g_done_max = max(g_done_max, g_done)
-                for i, r in enumerate(rows):
+                for i, r in zip(assign, rows):
                     row_ids[r] = res.ids[i]
                     row_scores[r] = res.scores[i]
             return row_ids, row_scores, g_done_max
 
+        # epoch read before execution: entries inserted from this batch
+        # are stamped pre-execute, so a write landing mid-batch makes
+        # them count as already-stale (conservative)
+        pre_epoch = self.cache.epoch() if self.cache is not None else None
         # bounded retry of the (idempotent) batch: each re-issue charges
         # its backoff to the virtual clock via a later dispatch stamp
         eff_dispatch_s = dispatch_s
@@ -717,6 +815,15 @@ class ServingScheduler:
                 self.on_batch(self._batch_id - 1, self)
             return
         self.busy_until = max(self.busy_until, done_s)
+        if self.cache is not None:
+            for key, rows in groups.items():
+                k_g = (key[0] or self.k) if key is not None else self.k
+                options = key[1:] if key is not None else (None, None, None)
+                for r in plans[key][0]:     # unique executed rows only
+                    self.cache.insert(
+                        batch[r].query, k_g, options,
+                        row_ids[r], row_scores[r], done_s, epoch=pre_epoch,
+                    )
 
         if trigger == "full":
             stats.full_batches += 1

@@ -1,0 +1,8 @@
+"""Test-suite conftest.
+
+Besides the usual pytest hook point, its presence puts ``tests/`` on
+``sys.path`` (rootdir conftest, prepend import mode), so shared test
+helpers — :mod:`cache_invariants`, the body of invariant P11 used by
+both ``tests/test_cache.py`` and ``tests/properties/test_props.py`` —
+import as plain top-level modules from any test directory.
+"""

@@ -32,7 +32,15 @@ The invariants that make HARMONY's pruning *exact* rather than heuristic:
       filter's allowed set — on both backends, under both precisions
       (the int8 two-stage re-rank included), across seal/merge, and
       interacting correctly with tombstones; rows without metadata and
-      disallowed/deleted ids never appear.
+      disallowed/deleted ids never appear;
+  P11 staleness-bounded cache correctness: under arbitrary
+      interleavings of search/upsert/delete/compaction with the
+      semantic cache enabled (staleness budget 0), exact-tier hits and
+      misses are bit-identical to a cache-off twin execution, semantic
+      hits stay within the distance threshold of the fresh answer and
+      never serve a deleted id, and no hit is ever served across a
+      generation swap — on both serving backends, fp32 and int8 (body
+      shared with tests/test_cache.py via tests/cache_invariants.py).
 """
 
 import numpy as np
@@ -614,3 +622,24 @@ def test_p10_filtered_search_matches_filtered_bruteforce(
     assert not np.isin(got, deleted or [-999]).any()
     assert not np.isin(got, bare_ids).any()
     assert probe_id in res.ids[0]
+
+
+@given(
+    data_seed=st.integers(0, 50),
+    backend=st.sampled_from(["host", "spmd"]),
+    precision=st.sampled_from(["fp32", "int8"]),
+    ops=st.lists(
+        st.tuples(st.sampled_from([
+            "fresh", "repeat", "near", "upsert", "delete", "compact",
+        ]), st.integers(0, 10_000)),
+        min_size=1, max_size=10,
+    ),
+)
+@settings(max_examples=6, deadline=None)
+def test_p11_cached_serving_matches_cache_off_twin(data_seed, backend,
+                                                   precision, ops):
+    # shared P11 body (tests/ is on sys.path via tests/conftest.py);
+    # tests/test_cache.py runs the same body on a fixed grid
+    from cache_invariants import run_cache_interleaving
+
+    run_cache_interleaving(data_seed, backend, precision, ops)

@@ -1,0 +1,329 @@
+"""Semantic cache + request coalescing front door (PR 9).
+
+Covers the :mod:`repro.serve.cache` tiers directly (TTL expiry, the
+inclusive semantic threshold boundary, LRU eviction), the virtual-clock
+scheduler integration (in-batch coalescing, invalidation on
+upsert/delete/compaction-adopt, the staleness budget, per-request
+deadline enforcement — the PR 9 bugfix), the wall-clock front-end
+(in-flight coalescing, drain/shutdown with no leaked futures), and the
+fixed grid of invariant P11 (:mod:`cache_invariants` — the hypothesis
+twin lives in ``tests/properties/test_props.py``).
+"""
+
+import numpy as np
+import pytest
+
+from cache_invariants import retry_flaky, run_cache_interleaving
+from repro.config import HarmonyConfig
+from repro.core import SearchRequest, SegmentedIndex, build_ivf
+from repro.serve import (
+    CacheConfig,
+    HarmonyServer,
+    QueryCache,
+    SchedulerConfig,
+    ServingFrontend,
+    ServingScheduler,
+)
+
+
+def _plane(nb=256, dim=8, seed=0, **over):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((nb, dim)).astype(np.float32)
+    cfg = HarmonyConfig(dim=dim, nlist=4, nprobe=4, topk=3, kmeans_iters=2,
+                        **over)
+    return x, cfg, SegmentedIndex.build(x, cfg)
+
+
+# --------------------------------------------------------------- cache unit
+def test_exact_tier_ttl_expiry():
+    c = QueryCache(CacheConfig(enabled=True, exact_ttl_s=10.0))
+    q = np.arange(4, dtype=np.float32)
+    opts = (None, None, None)
+    c.insert(q, 3, opts, np.array([1, 2, 3]), np.array([0.1, 0.2, 0.3]),
+             now_s=0.0)
+    assert c.lookup(q, 3, opts, now_s=9.9).tier == "exact"
+    assert c.lookup(q, 3, opts, now_s=10.1) is None      # TTL bound
+    assert c.stats.cache_invalidations == 1
+    assert len(c) == 0                                   # expired entry dropped
+    assert c.lookup(q, 3, opts, now_s=0.0) is None       # gone for good
+
+
+def test_semantic_threshold_boundary_inclusive():
+    c = QueryCache(CacheConfig(enabled=True, exact_ttl_s=1e9,
+                               semantic_threshold=4.0))
+    q = np.zeros(4, np.float32)
+    opts = (None, None, None)
+    ids = np.array([7, 8, -1])
+    c.insert(q, 3, opts, ids, np.array([0.5, 0.6, np.inf]), now_s=0.0)
+    at = q.copy()
+    at[0] = 2.0                     # squared L2 distance exactly 4.0
+    hit = c.lookup(at, 3, opts, now_s=1.0)
+    assert hit is not None and hit.tier == "semantic"
+    assert np.array_equal(hit.ids, ids)
+    beyond = q.copy()
+    beyond[0] = np.float32(2.001)   # just past the boundary
+    assert c.lookup(beyond, 3, opts, now_s=1.0) is None
+    # k/options partition the semantic space: same vector, different k
+    assert c.lookup(at, 5, opts, now_s=1.0) is None
+    assert (c.stats.cache_hits_semantic, c.stats.cache_misses) == (1, 2)
+
+
+def test_semantic_tier_rejects_non_l2_metric():
+    with pytest.raises(AssertionError):
+        QueryCache(CacheConfig(enabled=True, semantic_threshold=1.0),
+                   metric="ip")
+
+
+def test_lru_eviction_with_refresh():
+    c = QueryCache(CacheConfig(enabled=True, exact_ttl_s=1e9, max_entries=2))
+    opts = (None, None, None)
+    qs = [np.full(4, i, np.float32) for i in range(3)]
+    ids = np.array([1, 2, 3])
+    sc = np.array([0.1, 0.2, 0.3])
+    c.insert(qs[0], 3, opts, ids, sc, now_s=0.0)
+    c.insert(qs[1], 3, opts, ids, sc, now_s=0.0)
+    assert c.lookup(qs[0], 3, opts, now_s=0.0) is not None  # LRU refresh
+    c.insert(qs[2], 3, opts, ids, sc, now_s=0.0)            # evicts qs[1]
+    assert c.lookup(qs[1], 3, opts, now_s=0.0) is None
+    assert c.lookup(qs[0], 3, opts, now_s=0.0) is not None
+    assert c.lookup(qs[2], 3, opts, now_s=0.0) is not None
+    assert len(c) == 2
+
+
+# ------------------------------------------- virtual-clock scheduler paths
+def _sched(data, cache, **kw):
+    srv = HarmonyServer(data, n_nodes=2)
+    return srv, ServingScheduler(
+        srv, SchedulerConfig(max_batch=8, cache=cache, **kw), k=3,
+        service_time_fn=lambda n: 0.0,
+    )
+
+
+def test_scheduler_coalesces_duplicates_to_one_execution():
+    x, cfg, data = _plane()
+    srv, sched = _sched(data, CacheConfig(enabled=True, exact_ttl_s=1e9))
+    req = SearchRequest(vector=x[0], k=3)
+    n = 6
+    for i in range(n):
+        sched.submit(req, i * 1e-6)
+    res = sched.flush()
+    # one batch, one executed row, the answer fanned out to all n
+    assert len(res) == n
+    assert srv.stats.queries == 1
+    assert srv.stats.coalesced == n - 1
+    for r in res[1:]:
+        assert r.batch_id == res[0].batch_id
+        assert np.array_equal(r.ids, res[0].ids)
+        assert np.array_equal(r.scores, res[0].scores)
+    # the executed answer was cached: a later duplicate is an exact hit
+    rid = sched.submit(req, 1.0)
+    assert srv.stats.cache_hits_exact == 1
+    late = [r for r in sched.done if r.req_id == rid]
+    assert late and np.array_equal(late[0].ids, res[0].ids)
+    assert srv.stats.queries == 1               # still one execution total
+    st = srv.stats
+    assert st.offered == (st.admitted + st.shed + st.expired_requests
+                          + st.cache_hits_exact + st.cache_hits_semantic)
+
+
+def test_scheduler_semantic_hit_replays_neighbor_answer():
+    x, cfg, data = _plane()
+    srv, sched = _sched(data, CacheConfig(enabled=True, exact_ttl_s=1e9,
+                                          semantic_threshold=4.0))
+    sched.submit(SearchRequest(vector=x[0], k=3), 0.0)
+    sched.advance(0.5)
+    first = sched.done[-1]
+    near = x[0].copy()
+    near[0] += 1.0                  # squared L2 distance 1.0 < 4.0
+    sched.submit(SearchRequest(vector=near, k=3), 1.0)
+    assert srv.stats.cache_hits_semantic == 1
+    assert np.array_equal(sched.done[-1].ids, first.ids)
+    assert np.array_equal(sched.done[-1].scores, first.scores)
+    assert srv.stats.queries == 1
+
+
+def test_scheduler_cache_invalidation_on_writes_and_adopt():
+    x, cfg, data = _plane()
+    srv, sched = _sched(data, CacheConfig(enabled=True, exact_ttl_s=1e9))
+    req = SearchRequest(vector=x[0], k=3)
+
+    def probe(t):
+        h0 = srv.stats.cache_hits_exact
+        sched.submit(req, t)
+        sched.advance(t + 0.5)
+        return srv.stats.cache_hits_exact > h0
+
+    assert not probe(1.0)                       # cold: executes + caches
+    assert probe(2.0)                           # warm: exact hit
+    srv.upsert([500], x[:1] + 1.0)              # op_count moved, budget 0
+    assert not probe(3.0)
+    assert probe(4.0)
+    srv.delete([500])                           # delete invalidates too
+    assert not probe(5.0)
+    assert probe(6.0)
+    gen0 = data.generation
+    data.compact_inline(merge_all=True)         # the PR 5 adoption path
+    assert data.generation > gen0
+    assert not probe(7.0)                       # never across a swap
+    assert srv.stats.cache_invalidations >= 3
+
+
+def test_scheduler_staleness_budget_bounds_serving_across_writes():
+    x, cfg, data = _plane()
+    srv, sched = _sched(data, CacheConfig(enabled=True, exact_ttl_s=1e9,
+                                          staleness_s=10.0))
+    req = SearchRequest(vector=x[0], k=3)
+    sched.submit(req, 1.0)
+    sched.advance(1.5)                          # entry stamped ~t=1
+    srv.upsert([501], x[:1] - 1.0)              # op_count moves
+    sched.submit(req, 5.0)                      # age ~4 s <= budget: served
+    assert srv.stats.cache_hits_exact == 1
+    sched.submit(req, 30.0)                     # age ~29 s > budget: stale
+    assert srv.stats.cache_hits_exact == 1
+    assert srv.stats.cache_invalidations == 1
+
+
+# --------------------------------------------- per-request deadline (bugfix)
+def test_scheduler_deadline_expired_at_submit_is_shed_with_sentinel():
+    x, cfg, data = _plane()
+    srv, sched = _sched(data, CacheConfig(enabled=True, exact_ttl_s=1e9))
+    req = SearchRequest(vector=x[0], k=3)
+    sched.submit(req, 1.0)
+    sched.advance(1.5)                          # answer now cached
+    hits0 = srv.stats.cache_hits_exact
+    rid = sched.submit(
+        SearchRequest(vector=x[0], k=3, deadline=2.5), 3.0)
+    # expired at submission: sentinel degradation, and even the cached
+    # answer is refused (a blown deadline is a blown deadline)
+    assert srv.stats.expired_requests == 1
+    assert srv.stats.cache_hits_exact == hits0
+    r = [d for d in sched.done if d.req_id == rid][0]
+    assert (r.ids == -1).all() and np.isinf(r.scores).all()
+    assert r.batch_id == -1
+
+
+def test_scheduler_deadline_expired_in_queue_degrades_not_executes():
+    x, cfg, data = _plane()
+    srv = HarmonyServer(data, n_nodes=2)
+    sched = ServingScheduler(
+        srv, SchedulerConfig(max_batch=8, max_wait_s=1.0), k=3,
+        service_time_fn=lambda n: 0.0,
+    )
+    sched.submit(SearchRequest(vector=x[0], k=3, deadline=0.3), 0.0)
+    sched.submit(SearchRequest(vector=x[1], k=3), 0.01)
+    res = sched.flush()                         # deadline trigger at t=1.0
+    assert srv.stats.expired_requests == 1
+    assert srv.stats.queries == 1               # only the live row executed
+    dead, live = res[0], res[1]
+    assert (dead.ids == -1).all() and np.isinf(dead.scores).all()
+    assert dead.batch_id == live.batch_id == 0
+    assert (live.ids >= 0).any()
+    assert srv.stats.deadline_batches == 1
+
+
+def test_scheduler_all_expired_batch_consumes_id_without_trigger():
+    x, cfg, data = _plane()
+    srv = HarmonyServer(data, n_nodes=2)
+    seen = []
+    sched = ServingScheduler(
+        srv, SchedulerConfig(max_batch=8, max_wait_s=1.0), k=3,
+        service_time_fn=lambda n: 0.0,
+        on_batch=lambda bid, s: seen.append(bid),
+    )
+    sched.submit(SearchRequest(vector=x[0], k=3, deadline=0.3), 0.0)
+    res = sched.flush()
+    assert srv.stats.expired_requests == 1
+    assert srv.stats.queries == 0               # nothing executed
+    # mirrors the failed-batch path: the batch id is consumed, no
+    # size/deadline/capacity trigger is recorded, on_batch still fires
+    assert (srv.stats.full_batches + srv.stats.deadline_batches
+            + srv.stats.capacity_batches) == 0
+    assert seen == [0]
+    assert (res[0].ids == -1).all()
+
+
+# ----------------------------------------------- wall-clock front-end paths
+def _frontend_stack():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((256, 8)).astype(np.float32)
+    cfg = HarmonyConfig(dim=8, nlist=4, nprobe=2, topk=3, kmeans_iters=2)
+    return x, HarmonyServer(build_ivf(x, cfg), n_nodes=2)
+
+
+@retry_flaky(times=3)
+def test_frontend_inflight_coalescing_and_clean_shutdown():
+    x, srv = _frontend_stack()
+    fe = ServingFrontend(
+        srv,
+        SchedulerConfig(max_batch=4, max_wait_s=1.0,
+                        cache=CacheConfig(enabled=True, exact_ttl_s=60.0)),
+        k=3, service_time_fn=lambda n: 0.05,
+    )
+    try:
+        req = SearchRequest(vector=x[0], k=3)
+        n = 5
+        futs = [fe.submit(req) for _ in range(n)]   # 1 leader + 4 followers
+        assert fe.drain(timeout=30.0)               # fire the queued leader
+        res = [f.result(timeout=30.0) for f in futs]
+        assert srv.stats.coalesced == n - 1
+        assert srv.stats.queries == 1               # one execution for all n
+        for r in res[1:]:
+            assert np.array_equal(r.ids, res[0].ids)
+            assert np.array_equal(r.scores, res[0].scores)
+        # the answer was cached before followers detached: the next
+        # duplicate (no in-flight leader anymore) is an exact hit
+        late = fe.submit(req).result(timeout=30.0)
+        assert srv.stats.cache_hits_exact == 1
+        assert late.batch_id == -1
+        assert np.array_equal(late.ids, res[0].ids)
+        st = srv.stats
+        assert st.offered == (st.admitted + st.shed + st.expired_requests
+                              + st.coalesced + st.cache_hits_exact
+                              + st.cache_hits_semantic)
+    finally:
+        assert fe.shutdown(wait=True)
+    assert srv.stats.shutdown_leaks == 0
+    assert not fe._futures and not fe._followers and not fe._leaders
+
+
+def test_frontend_shutdown_nowait_drops_queued_leader_and_followers():
+    x, srv = _frontend_stack()
+    fe = ServingFrontend(
+        srv,
+        SchedulerConfig(max_batch=64, max_wait_s=5.0,
+                        cache=CacheConfig(enabled=True, exact_ttl_s=60.0)),
+        k=3,
+    )
+    req = SearchRequest(vector=x[0], k=3)
+    futs = [fe.submit(req) for _ in range(3)]       # leader + 2 followers
+    assert srv.stats.coalesced == 2
+    fe.shutdown(wait=False)
+    for f in futs:
+        assert f.cancelled(), "queued work must be cancelled, not leaked"
+    assert not fe._futures and not fe._followers and not fe._leaders
+    assert srv.stats.shutdown_leaks == 0
+
+
+def test_frontend_deadline_expired_at_submit():
+    x, srv = _frontend_stack()
+    with ServingFrontend(srv, SchedulerConfig(max_batch=4), k=3) as fe:
+        r = fe.submit(
+            SearchRequest(vector=x[0], k=3, deadline=-1.0)
+        ).result(timeout=30.0)
+    assert (r.ids == -1).all() and np.isinf(r.scores).all()
+    assert r.batch_id == -1
+    assert srv.stats.expired_requests == 1
+
+
+# ------------------------------------------------------- P11 (fixed grid)
+P11_OPS = [
+    ("fresh", 1), ("repeat", 2), ("near", 3), ("upsert", 4), ("repeat", 5),
+    ("compact", 6), ("repeat", 7), ("delete", 8), ("near", 9), ("fresh", 10),
+    ("repeat", 11), ("compact", 13), ("repeat", 14),
+]
+
+
+@pytest.mark.parametrize("backend", ["host", "spmd"])
+@pytest.mark.parametrize("precision", ["fp32", "int8"])
+def test_p11_cached_serving_matches_cache_off_twin_grid(backend, precision):
+    run_cache_interleaving(0, backend, precision, P11_OPS)

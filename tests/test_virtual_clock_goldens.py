@@ -70,14 +70,18 @@ def _digest(sched, target) -> dict:
             for k, v in stats.summary().items()
             # execution-side and data-plane-side counters are not replay
             # state (the data plane grew upsert/delete/swap counters in
-            # PR 5, and resilience counters in PR 7 — always 0 in these
-            # read-only, fault-free scenarios)
+            # PR 5, resilience counters in PR 7, and cache/coalescing/
+            # deadline counters in PR 9 — always 0 in these read-only,
+            # fault-free, cache-off scenarios)
             if k not in ("batches", "queries",
                          "upserts", "deletes", "generation_swaps",
                          "replica_failures", "breaker_opens",
                          "breaker_closes", "health_probes",
                          "retried_batches", "failed_batches",
-                         "failed_requests", "shutdown_leaks")
+                         "failed_requests", "shutdown_leaks",
+                         "cache_hits_exact", "cache_hits_semantic",
+                         "cache_misses", "cache_invalidations",
+                         "coalesced", "expired_requests")
         },
     }
     hedge = getattr(target, "_hedge", None) or getattr(
@@ -215,6 +219,32 @@ def test_virtual_clock_replay_matches_goldens():
             f"virtual-clock replay drifted in scenario {name!r}:\n"
             f"  golden: {json.dumps(golden[name], sort_keys=True)}\n"
             f"  got:    {json.dumps(got[name], sort_keys=True)}"
+        )
+
+
+def test_cache_off_replay_is_byte_identical_to_golden():
+    """PR 9's cache/coalescing front door is default-off; this pins that
+    the *new code paths themselves* leave the replay byte-identical to the
+    stored pre-cache golden: (a) an explicit ``CacheConfig(enabled=False)``
+    must be fully inert, and (b) an *enabled* cache on a repeat-free trace
+    (exact tier only — distinct queries can't hit) must not move a single
+    admission counter, trigger classification, wait, or makespan either —
+    lookups/inserts happen off the accounting path."""
+    from repro.serve import HarmonyServer
+    from repro.serve.cache import CacheConfig
+
+    golden = json.loads(GOLDEN_PATH.read_text())["single_full"]
+    ds, cfg, index, q, qh = _fixture()
+    for ccfg in (CacheConfig(enabled=False),
+                 CacheConfig(enabled=True, semantic_threshold=0.0)):
+        srv = HarmonyServer(index, n_nodes=4)
+        sched = ServingScheduler(
+            srv, SchedulerConfig(max_batch=16, cache=ccfg), k=5,
+            service_time_fn=lambda n: n * 1e-3,
+        )
+        sched.run_trace(_burst(q, spacing=0.0))
+        assert _digest(sched, sched.target) == golden, (
+            f"cache config {ccfg} perturbed the replay"
         )
 
 
