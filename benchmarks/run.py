@@ -29,6 +29,7 @@ def main() -> None:
         bench_scaling,
         bench_serving,
         bench_skew,
+        bench_tiered,
     )
 
     print("name,us_per_call,derived")
@@ -41,6 +42,7 @@ def main() -> None:
         bench_cache,
         bench_chaos,
         bench_executor,
+        bench_tiered,
         bench_quantization,
         bench_filtered,
         bench_ingest,

@@ -76,6 +76,12 @@ def save_segmented_index(
                 }
                 for s in data.segments
             ],
+            # memory-hierarchy placement: per-segment tier + version so a
+            # restored plane resumes the exact hot/cold split (old
+            # checkpoints load all-device via .get)
+            "tiers": [data._tier.get(s.seg_id, "device")
+                      for s in data.segments],
+            "placement_version": data.placement_version,
         }
         tree = {"meta": _meta_array(meta)}
         for i, seg in enumerate(data.segments):
@@ -94,6 +100,9 @@ def save_segmented_index(
                 leaf["quant_codes"] = q.codes
                 leaf["quant_scale"] = q.scale
                 leaf["quant_zero"] = q.zero
+            h = data._hotness.get(seg.seg_id)
+            if h is not None:
+                leaf["hotness"] = h.copy()
             ms = seg.index.meta
             if ms is not None:
                 for name, col in ms.tags.items():
@@ -163,6 +172,17 @@ def load_segmented_index(
     data.op_count = int(meta["op_count"])
     data.wal_seq = int(meta.get("wal_seq", 0))
     data._next_seg_id = int(meta["next_seg_id"])
+    # placement + hotness: restored verbatim so the restart resumes the
+    # saved hot/cold split instead of an all-device cold start
+    tiers = meta.get("tiers")
+    if tiers is not None:
+        data._tier = {int(s): t for s, t in zip(meta["seg_ids"], tiers)}
+    data.placement_version = int(meta.get("placement_version", 0))
+    for i, seg in enumerate(segments):
+        if f"segments/{i}/hotness" in arrays:
+            data._hotness[seg.seg_id] = (
+                arrays[f"segments/{i}/hotness"].astype(np.float64)
+            )
     # rebuild the location map from the dead bitmaps: an external id is
     # live in exactly one (segment, row) — the one whose bit is clear.
     # (The constructor's map ignores tombstones, and a stale sealed copy

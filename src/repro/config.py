@@ -53,6 +53,14 @@ class HarmonyConfig:
     quant_blocks: int = 4           # dimension blocks per int8 scale/zero grid
     rerank_factor: int = 4          # stage-1 keeps k·rerank_factor candidates
 
+    # Selectivity-aware probe widening for filtered search: when the
+    # allowed fraction of live rows drops below ``filter_widen_threshold``,
+    # nprobe scales by ~threshold/selectivity (candidates thin out
+    # linearly with selectivity, so the probe budget must widen to keep
+    # recall) up to ``filter_widen_cap`` × nprobe. 0 disables widening.
+    filter_widen_threshold: float = 0.2
+    filter_widen_cap: float = 4.0
+
     # k-means training
     kmeans_iters: int = 12
     kmeans_seed: int = 0

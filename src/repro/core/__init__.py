@@ -24,6 +24,7 @@ from repro.core.index import (
     dim_block_bounds,
     preassign,
     quantize_vectors,
+    segment_device_bytes,
 )
 from repro.core.types import (
     And,
@@ -57,7 +58,7 @@ __all__ = [
     "Filter", "TagIn", "NumRange", "And", "Or", "DataPlane",
     "MetadataStore", "TAG_MISSING",
     "Segment", "SegmentedIndex", "DataSnapshot", "CompactionPlan",
-    "Int8Quant", "quantize_vectors",
+    "Int8Quant", "quantize_vectors", "segment_device_bytes",
     "plan_search", "factorizations", "PlanDecision", "HardwareModel",
     "WorkloadStats", "plan_cost", "TPU_V5E", "harmony_search",
     "search_oracle", "delta_topk", "merge_topk", "two_stage_search",

@@ -66,6 +66,15 @@ class BM25Index:
             for t, tf in postings.items()
         }
 
+    def memory_bytes(self) -> int:
+        """Host-resident bytes of the postings + doc-length structures
+        (BM25 is host-tier always; counted by
+        :meth:`repro.core.SegmentedIndex.memory_report`)."""
+        out = self.doc_len.nbytes
+        for rows, tf in self.postings.values():
+            out += rows.nbytes + tf.nbytes
+        return out
+
     def scores(self, text: str) -> np.ndarray:
         """BM25 scores [n] (higher = better, 0 = no term match)."""
         out = np.zeros(self.n, np.float32)

@@ -559,6 +559,20 @@ class Segment:
         return self.index.nb
 
 
+def segment_device_bytes(seg: "Segment", precision: str = "fp32",
+                         d_blocks: int = 1) -> int:
+    """Bytes the SPMD executor keeps device-resident for one sealed
+    segment at ``precision`` — the packed corpus rows (int8 codes or
+    fp32), per-dimension-block norms, and the packed cluster/row id
+    columns. This is the currency of the placement budget: a
+    ``device``-tier segment costs this much HBM, a ``host``-tier segment
+    costs zero (its rows stream through the gather path per batch)."""
+    idx = seg.index
+    d = int(idx.x.shape[1])
+    per_row = (d if precision == "int8" else 4 * d) + 4 * d_blocks + 8
+    return idx.nb * per_row
+
+
 @dataclass(frozen=True)
 class CompactionPlan:
     """Consistent snapshot handed to the (off-path, lock-free) seal step.
@@ -647,6 +661,18 @@ class SegmentedIndex:
         # record (persisted in checkpoints, the replay cut on recovery)
         self._wal = None
         self.wal_seq = 0
+        # memory-hierarchy tier per sealed segment: seg_id -> "device" |
+        # "host" (absent = "device"). placement_version bumps on every
+        # set_tiers so serving replicas re-sync executor residency
+        # without a generation swap (results are tier-invariant, so the
+        # query cache stays valid across a move)
+        self._tier: Dict[int, str] = {}
+        self.placement_version = 0
+        # per-segment cluster-hotness EWMA (probe mass per sealed
+        # cluster), fed by the serving layer via note_probes — the
+        # placement policy's promote/demote signal
+        self.hotness_alpha = 0.25
+        self._hotness: Dict[int, np.ndarray] = {}
 
     # ------------------------------------------------------------- builders
     @classmethod
@@ -703,13 +729,118 @@ class SegmentedIndex:
             return {sid: int(d.sum()) for sid, d in self._dead_rows.items()}
 
     def memory_bytes(self) -> int:
-        """Resident bytes: sealed segments + dead bitmaps + delta buffer."""
+        """Total resident bytes across both tiers: sealed segments
+        (including metadata columns, cached BM25 postings and cached int8
+        codes), dead bitmaps, and the delta buffer. For the per-tier
+        split the placement budget works against, see
+        :meth:`memory_report`."""
+        rep = self.memory_report()
+        return rep["host_bytes"] + rep["device_bytes"]
+
+    def _segment_host_bytes_locked(self, seg: Segment) -> int:
+        """Host-resident bytes of one sealed segment: the fp32 corpus and
+        build artifacts always live host-side (the re-rank source and the
+        compaction/checkpoint source of truth), plus metadata columns,
+        lazily-built BM25 postings, and cached int8 codes."""
+        idx = seg.index
+        out = sum(a.nbytes
+                  for a in (idx.centers, idx.x, idx.ids, idx.offsets,
+                            idx.cluster_of))
+        if idx.meta is not None:
+            out += idx.meta.memory_bytes()
+        bm = idx.__dict__.get("_bm25")
+        if bm is not None:
+            out += bm.memory_bytes()
+        for quant in idx.__dict__.get("_int8_quants", {}).values():
+            out += quant.memory_bytes()
+        return out
+
+    def memory_report(self, precision: str = "fp32",
+                      d_blocks: int = 1) -> Dict[str, int]:
+        """Per-tier byte accounting — what actually lives in HBM vs host
+        RAM. ``device_bytes`` counts, for every ``device``-tier segment,
+        the arrays the SPMD executor keeps resident at ``precision``
+        (:func:`segment_device_bytes`); everything else — fp32 corpora,
+        metadata, BM25 postings, int8 codes, dead bitmaps, the delta
+        buffer — is ``host_bytes``. The placement budget and
+        ``bench_memory`` both read this."""
         with self._mu:
-            seg = sum(s.index.memory_bytes() for s in self.segments)
-            masks = sum(d.nbytes for d in self._dead_rows.values())
-            delta = (self._delta_x.nbytes + self._delta_ids.nbytes
+            device = 0
+            host = sum(d.nbytes for d in self._dead_rows.values())
+            host += (self._delta_x.nbytes + self._delta_ids.nbytes
                      + self._delta_live.nbytes)
-            return seg + masks + delta
+            for s in self.segments:
+                host += self._segment_host_bytes_locked(s)
+                if self._tier.get(s.seg_id, "device") == "device":
+                    device += segment_device_bytes(s, precision, d_blocks)
+            return {"device_bytes": device, "host_bytes": host,
+                    "total_bytes": device + host}
+
+    # ------------------------------------------------------ tier placement
+    def tier_of(self, seg_id: int) -> str:
+        """Current tier of a sealed segment ("device" unless demoted)."""
+        with self._mu:
+            return self._tier.get(int(seg_id), "device")
+
+    def tiers(self) -> Dict[int, str]:
+        """seg_id -> tier for every sealed segment (point-in-time copy)."""
+        with self._mu:
+            return {s.seg_id: self._tier.get(s.seg_id, "device")
+                    for s in self.segments}
+
+    def set_tiers(self, tiers: Dict[int, str]) -> int:
+        """Install a placement (seg_id -> "device"|"host") and bump
+        ``placement_version`` so every serving replica re-syncs executor
+        residency on its next batch. Unknown seg ids are ignored; omitted
+        segments keep their current tier. Returns the new version.
+
+        Tier moves never change search results (the host tier streams
+        the exact same packed rows through the same kernels), so unlike
+        a generation swap this does NOT invalidate query caches."""
+        live = {s.seg_id for s in self.segments}
+        with self._mu:
+            for sid, tier in tiers.items():
+                if tier not in ("device", "host"):
+                    raise ValueError(f"unknown tier {tier!r}")
+                if int(sid) in live:
+                    self._tier[int(sid)] = tier
+            self.placement_version += 1
+            return self.placement_version
+
+    def note_probes(self, seg_id: int, probes: np.ndarray) -> None:
+        """Fold one batch's probe selection for segment ``seg_id`` into
+        its cluster-hotness EWMA (the placement policy's promote/demote
+        signal). Padding entries (< 0) are ignored."""
+        seg = next((s for s in self.segments if s.seg_id == seg_id), None)
+        if seg is None:
+            return
+        flat = np.asarray(probes).ravel()
+        flat = flat[(flat >= 0) & (flat < seg.index.nlist)]
+        counts = np.bincount(flat, minlength=seg.index.nlist)
+        with self._mu:
+            h = self._hotness.get(seg_id)
+            if h is None or len(h) != seg.index.nlist:
+                h = np.zeros(seg.index.nlist, np.float64)
+                self._hotness[seg_id] = h
+            a = self.hotness_alpha
+            h *= (1.0 - a)
+            h += a * counts
+
+    def hotness(self, seg_id: int) -> np.ndarray:
+        """Cluster-hotness EWMA of one segment (zeros until probed)."""
+        seg = next((s for s in self.segments if s.seg_id == seg_id), None)
+        nlist = seg.index.nlist if seg is not None else 0
+        with self._mu:
+            h = self._hotness.get(int(seg_id))
+            return h.copy() if h is not None else np.zeros(nlist, np.float64)
+
+    def segment_hotness(self) -> Dict[int, float]:
+        """seg_id -> total probe mass EWMA (the per-segment heat the
+        placement policy ranks by)."""
+        with self._mu:
+            return {s.seg_id: float(self._hotness[s.seg_id].sum())
+                    if s.seg_id in self._hotness else 0.0
+                    for s in self.segments}
 
     def has(self, ext_id: int) -> bool:
         """Is ``ext_id`` live (reachable by search)?"""
@@ -833,6 +964,9 @@ class SegmentedIndex:
                 delta_live=self._delta_live[:n].copy(),
                 dead_version=self.dead_version,
                 delta_meta=tuple(self._delta_meta[:n]),
+                tiers={s.seg_id: self._tier.get(s.seg_id, "device")
+                       for s in self.segments},
+                placement_version=self.placement_version,
             )
 
     def live_vectors(self) -> Tuple[np.ndarray, np.ndarray]:
@@ -956,6 +1090,14 @@ class SegmentedIndex:
             }
             for s in new_segments:
                 self._dead_rows[s.seg_id] = np.zeros(s.nb, bool)
+            # tier/hotness state of merged-away segments dies with them;
+            # new seals start device-tier (the placement policy demotes
+            # them on its next cycle if the budget says so)
+            keep = set(plan.carry_seg_ids)
+            self._tier = {sid: t for sid, t in self._tier.items()
+                          if sid in keep}
+            self._hotness = {sid: h for sid, h in self._hotness.items()
+                             if sid in keep}
             # rebuild location maps: carried entries survive, merged /
             # delta entries now point at the new sealed rows. The two
             # common shapes stay cheap under the lock: a full merge is an
@@ -1018,6 +1160,10 @@ class DataSnapshot:
     delta_live: np.ndarray              # [n] bool
     dead_version: int = 0               # tombstone-flip counter at snapshot
     delta_meta: Tuple[Optional[dict], ...] = ()   # [n] per-row meta dicts
+    # seg_id -> "device" | "host" at snapshot time, and the placement
+    # version it reflects (replicas re-sync executors when it moves)
+    tiers: Dict[int, str] = None        # type: ignore[assignment]
+    placement_version: int = 0
 
     @property
     def delta_count(self) -> int:

@@ -371,6 +371,37 @@ def gather_local_candidates(rows, x_blk, xn2_blk, cluster_ids, row_ids):
     return x_c, xn2_c, cl_c, id_c
 
 
+def gather_host_candidates(arrays: dict, rows: np.ndarray) -> dict:
+    """Host-side analogue of :func:`gather_local_candidates` for
+    host-tier (cold) segments: gather the probed clusters' rows out of
+    the host-resident packed corpus into per-batch candidate arrays
+    ready to stream to the mesh.
+
+    ``arrays`` is :func:`build_corpus_arrays`'s dict kept host-side
+    (int8 codes stream 4× less PCIe traffic than fp32 rows — the cold
+    tier's preferred precision); ``rows`` [V, cap_b] int32 indexes each
+    shard's packed rows, -1 = pad. Pad slots re-read row 0 but get
+    cluster id -1 and zero norms, so — exactly like the device-side
+    gather — they match no probe and never enter a top-K.
+
+    Returns ``dict(x_c [V, cap_b, D], xn2_c [B, V, cap_b],
+    cl_c [V, cap_b], id_c [V, cap_b])`` with the same dtypes, block
+    grids and axis layout the resident path uses, so the streamed step
+    runs the identical ring kernels over them.
+    """
+    x_blocks, xn2_blocks = arrays["x_blocks"], arrays["xn2_blocks"]
+    cl, rid = arrays["cluster_ids"], arrays["row_ids"]
+    V = cl.shape[0]
+    keep = rows >= 0
+    safe = np.where(keep, rows, 0)
+    vi = np.arange(V)[:, None]
+    x_c = np.ascontiguousarray(x_blocks[vi, safe])
+    xn2_c = np.where(keep[None], xn2_blocks[:, vi, safe], 0.0).astype(np.float32)
+    cl_c = np.where(keep, cl[vi, safe], -1).astype(np.int32)
+    id_c = np.where(keep, rid[vi, safe], -1).astype(np.int32)
+    return dict(x_c=x_c, xn2_c=xn2_c, cl_c=cl_c, id_c=id_c)
+
+
 def ring_chunk_search(scfg: SpmdConfig, x_blk, xn2_blk, cluster_ids, row_ids,
                       q_blk, probes, tau0, scale2=None):
     """Per-device ring search core (call under shard_map).

@@ -97,10 +97,26 @@ def filtered_assign_queries(
     schedule's ``np.unique``, the executor's row gather) treats
     duplicates as one probe, while a negative sentinel would wrap or
     crash them. Row-level masking stays the source of truth, so this is
-    pure work avoidance — never a correctness dependency."""
+    pure work avoidance — never a correctness dependency.
+
+    Selectivity-aware widening: when the allowed fraction of rows falls
+    below ``cfg.filter_widen_threshold``, the effective ``nprobe`` scales
+    by ~``threshold / selectivity`` (capped at ``filter_widen_cap`` ×,
+    clamped to ``nlist``). Candidates thin out linearly with selectivity,
+    so a fixed probe budget starves a sel=0.01 filter of candidates long
+    before it hurts recall at sel=0.5 — widening spends probes exactly
+    where the filter made them cheap. An explicitly passed ``nprobe`` is
+    a caller override and is never widened."""
+    explicit = nprobe is not None
     nprobe = nprobe or index.cfg.nprobe
     if excluded is None or not excluded.any():
         return assign_queries(index, q, nprobe)
+    thr = getattr(index.cfg, "filter_widen_threshold", 0.0)
+    sel = float((~excluded).mean())
+    if not explicit and thr > 0.0 and 0.0 < sel < thr:
+        cap = max(1.0, getattr(index.cfg, "filter_widen_cap", 1.0))
+        nprobe = min(index.nlist,
+                     int(np.ceil(nprobe * min(cap, thr / sel))))
     live_cluster = np.bincount(
         index.cluster_of[~excluded], minlength=index.nlist
     ) > 0
@@ -372,8 +388,14 @@ def harmony_search(
     collect_stats: bool = True,
     dead_rows: Optional[np.ndarray] = None,
     dead_key: Optional[tuple] = None,
+    probes: Optional[np.ndarray] = None,
 ) -> SearchResult:
     """Distributed HARMONY search (host-scheduled reproduction engine).
+
+    ``probes`` (int [nq, nprobe']) — precomputed probe table; skips the
+    internal :func:`assign_queries` so a caller that already selected
+    probes (filter-aware pushdown/widening in the serving engine) scans
+    exactly those clusters.
 
     ``dead_rows`` (bool [NB] over *packed* index rows) applies the mutable
     data plane's tombstones exactly: dead rows are excluded from the τ
@@ -397,7 +419,8 @@ def harmony_search(
     stats = SearchStats(B, V)
 
     t_host0 = time.perf_counter()
-    probes = assign_queries(index, q, nprobe)
+    if probes is None:
+        probes = assign_queries(index, q, nprobe)
     tau0 = (
         prewarm_tau(index, q, probes, k, cfg.prewarm_samples, metric,
                     dead_rows=dead_rows)

@@ -86,6 +86,12 @@ from repro.serve.engine import HarmonyServer, ServeStats
 from repro.serve.executor import ExecutorConfig, SpmdExecutor
 from repro.serve.fleet import Replica, ReplicaFleet, ReplicaSpec, gini
 from repro.serve.frontend import ServingFrontend, ShedError
+from repro.serve.placement import (
+    PlacementConfig,
+    apply_placement,
+    device_bytes_by_segment,
+    plan_placement,
+)
 from repro.serve.scheduler import (
     DispatchTarget,
     Request,
@@ -112,6 +118,10 @@ __all__ = [
     "QueryCache",
     "Compactor",
     "CompactionConfig",
+    "PlacementConfig",
+    "plan_placement",
+    "apply_placement",
+    "device_bytes_by_segment",
     "ExecutorConfig",
     "SpmdExecutor",
     "Clock",

@@ -62,6 +62,11 @@ from typing import Dict, List, Optional, Sequence
 
 from repro.core import SegmentedIndex
 from repro.runtime.faults import fault_point
+from repro.serve.placement import (
+    PlacementConfig,
+    apply_placement,
+    plan_placement,
+)
 
 
 @dataclass(frozen=True)
@@ -72,12 +77,18 @@ class CompactionConfig:
     ``max_segments`` — sealed segment count that triggers a full merge;
     ``max_dead_fraction`` — tombstoned fraction of sealed rows that
     triggers a full merge; ``poll_s`` — background thread poll interval
-    (seconds)."""
+    (seconds); ``placement`` — optional
+    :class:`repro.serve.placement.PlacementConfig`: when set, the
+    compactor also owns tier placement — it re-plans the hot/cold split
+    after every commit (new segments are born unplaced) and whenever
+    :meth:`Compactor.maybe_place` sees the hotness-driven plan drift
+    from the installed one."""
 
     delta_threshold: int = 1024
     max_segments: int = 4
     max_dead_fraction: float = 0.25
     poll_s: float = 0.05
+    placement: Optional[PlacementConfig] = None
 
 
 class Compactor:
@@ -175,6 +186,7 @@ class Compactor:
         fault_point("compactor.commit", reason=reason)
         for srv in self._servers():
             srv.adopt()
+        placed = self._place_locked()
         event = {
             "reason": reason,
             "generation": generation,
@@ -184,10 +196,38 @@ class Compactor:
             "carried_segments": len(plan.carry_seg_ids),
             "new_segments": len(segments),
             "segments_after": self.data.n_segments,
+            "placed": placed,
             "wall_s": time.perf_counter() - t0,
         }
         self.events.append(event)
         return event
+
+    # ----------------------------------------------------------- placement
+    def _place_locked(self) -> bool:
+        pcfg = self.cfg.placement
+        if pcfg is None:
+            return False
+        tiers = plan_placement(self.data, pcfg)
+        return apply_placement(self.data, self._servers(), tiers)
+
+    def maybe_place(self) -> Optional[Dict]:
+        """Re-run the hotness-driven placement policy and install the
+        plan if it drifted from the current tiers (no-op otherwise; also
+        a no-op without ``cfg.placement``). Like :meth:`maybe_compact`,
+        safe to call from scheduler hooks at any frequency — the swap is
+        zero-downtime and results are tier-invariant."""
+        if self.cfg.placement is None:
+            return None
+        with self._op_mu:
+            if not self._place_locked():
+                return None
+            event = {
+                "reason": "placement",
+                "tiers": dict(self.data.tiers()),
+                "placement_version": self.data.placement_version,
+            }
+            self.events.append(event)
+            return event
 
     def maybe_compact(self) -> Optional[Dict]:
         """Run one cycle if the policy says so (no-op otherwise). Safe to
@@ -259,6 +299,7 @@ class Compactor:
         while not self._stop.is_set():
             try:
                 self.maybe_compact()
+                self.maybe_place()
             except Exception as e:      # noqa: BLE001 - must not die silently
                 # a failed cycle (seal/prepare/commit error) is recorded
                 # and surfaced, never swallowed — the loop keeps serving

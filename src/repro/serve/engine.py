@@ -122,6 +122,13 @@ class ServeStats:
     coalesced: int = 0               # duplicates that shared an execution
     expired_requests: int = 0        # per-request deadlines enforced
 
+    # --- tiered-corpus accounting (memory hierarchy): all 0 while every
+    # segment is device-resident (the default placement)
+    cold_batches: int = 0            # batches touching ≥1 host-tier segment
+    bytes_streamed: int = 0          # cold candidate bytes uploaded
+    prefetch_hits: int = 0           # cold uploads pre-staged by lookahead
+    placement_swaps: int = 0         # tier placements adopted
+
     @property
     def qps(self) -> float:
         """Queries per second of *summed batch execution wall*
@@ -190,6 +197,10 @@ class ServeStats:
             "cache_invalidations": self.cache_invalidations,
             "coalesced": self.coalesced,
             "expired_requests": self.expired_requests,
+            "cold_batches": self.cold_batches,
+            "bytes_streamed": self.bytes_streamed,
+            "prefetch_hits": self.prefetch_hits,
+            "placement_swaps": self.placement_swaps,
             "p50_queue_wait_ms": self._pct_or_none(self.queue_wait_ms, 50),
             "p99_queue_wait_ms": self._pct_or_none(self.queue_wait_ms, 99),
             "p50_request_latency_ms": self._pct_or_none(self.request_latency_ms, 50),
@@ -205,6 +216,7 @@ class _SegmentState:
     decision: object                 # PlanDecision for this segment
     corpus: object                   # ShardedCorpus (host engine layout)
     executor: object = None          # SpmdExecutor, built lazily (spmd)
+    tier: str = "device"             # executor residency: "device" | "host"
 
     @property
     def int32_ids(self) -> bool:
@@ -295,6 +307,7 @@ class HarmonyServer(DataPlane):
         self._seg_states: Dict[int, _SegmentState] = {}
         self._staged: Dict[int, _SegmentState] = {}
         self._generation = -1
+        self._placement_version = -1
         self._plan_decision = None
         self._sync(self.data.snapshot())
 
@@ -326,7 +339,8 @@ class HarmonyServer(DataPlane):
         return max(segments, key=lambda s: (s.nb, -s.seg_id), default=None)
 
     def _build_state(self, seg: Segment,
-                     probes_sample: Optional[np.ndarray] = None) -> _SegmentState:
+                     probes_sample: Optional[np.ndarray] = None,
+                     tier: str = "device") -> _SegmentState:
         decision = plan_search(
             seg.index, self.cluster.n_live, self.cfg.replace(
                 nlist=seg.index.nlist,
@@ -341,6 +355,7 @@ class HarmonyServer(DataPlane):
         return _SegmentState(
             segment=seg, decision=decision,
             corpus=preassign(seg.index, decision.plan),
+            tier=tier,
         )
 
     def _executor_for(self, st: _SegmentState):
@@ -353,7 +368,7 @@ class HarmonyServer(DataPlane):
             if self.precision == "int8" and ecfg.precision != "int8":
                 ecfg = _dc.replace(ecfg, precision="int8",
                                    rerank_factor=self.cfg.rerank_factor)
-            st.executor = SpmdExecutor(st.segment.index, ecfg)
+            st.executor = SpmdExecutor(st.segment.index, ecfg, tier=st.tier)
         return st.executor
 
     def _sync(self, snap: DataSnapshot) -> bool:
@@ -365,16 +380,36 @@ class HarmonyServer(DataPlane):
         Generations only move forward: a thread carrying a snapshot older
         than the adopted generation must NOT roll the server back (it
         would destroy the compactor's freshly prepared state mid-swap) —
-        it returns False and the caller re-snapshots."""
+        it returns False and the caller re-snapshots. The same applies to
+        tier placement: a stale ``placement_version`` never demotes or
+        promotes a segment (results are tier-invariant, so serving a few
+        batches on the old residency is correct, just differently
+        paced)."""
         with self._dp_mu:
             if snap.generation < self._generation:
                 return False
+            tiers = snap.tiers or {}
+            fresh_placement = snap.placement_version >= self._placement_version
             for seg in snap.segments:
-                if seg.seg_id not in self._seg_states:
+                want = (tiers.get(seg.seg_id, "device")
+                        if fresh_placement else None)
+                st = self._seg_states.get(seg.seg_id)
+                if st is None:
                     st = self._staged.pop(seg.seg_id, None)
-                    if st is None:
-                        st = self._build_state(seg)
+                    if st is None or (want is not None and st.tier != want):
+                        st = self._build_state(seg, tier=want or "device")
                     self._seg_states[seg.seg_id] = st
+                elif want is not None and st.tier != want:
+                    # tier move: promote the placement-prepared state if
+                    # one is staged, else rebuild residency inline (the
+                    # lazy-resync path after a crashed swap)
+                    staged = self._staged.pop(seg.seg_id, None)
+                    if staged is not None and staged.tier == want:
+                        self._seg_states[seg.seg_id] = staged
+                    else:
+                        self._seg_states[seg.seg_id] = self._build_state(
+                            seg, tier=want
+                        )
             keep = {s.seg_id for s in snap.segments}
             for sid in list(self._seg_states):
                 if sid not in keep:
@@ -384,6 +419,10 @@ class HarmonyServer(DataPlane):
                 if self._generation >= 0:
                     self.stats.generation_swaps += 1
                 self._generation = snap.generation
+            if fresh_placement and snap.placement_version != self._placement_version:
+                if self._placement_version >= 0:
+                    self.stats.placement_swaps += 1
+                self._placement_version = snap.placement_version
             primary = self._primary(snap.segments)
             if primary is not None:
                 self._plan_decision = self._seg_states[primary.seg_id].decision
@@ -404,9 +443,57 @@ class HarmonyServer(DataPlane):
             with self._dp_mu:
                 self._staged[seg.seg_id] = st
 
+    def prepare_placement(self, tiers: Dict[int, str]) -> None:
+        """Pre-build executor state for segments whose tier is about to
+        change — the *prepare* leg of a placement swap
+        (:func:`repro.serve.placement.apply_placement`). Runs off the
+        serving path so the adopt is O(1), like a compaction swap."""
+        snap = self.data.snapshot()
+        seg_by_id = {s.seg_id: s for s in snap.segments}
+        for sid, want in tiers.items():
+            seg = seg_by_id.get(sid)
+            if seg is None:
+                continue
+            with self._dp_mu:
+                st = self._seg_states.get(sid)
+                staged = self._staged.get(sid)
+                ready = ((st is not None and st.tier == want)
+                         or (staged is not None and staged.tier == want))
+            if ready:
+                continue
+            new = self._build_state(seg, tier=want)
+            if self.backend == "spmd" and new.int32_ids:
+                self._executor_for(new).warmup(k=self.cfg.topk)
+            with self._dp_mu:
+                self._staged[sid] = new
+
+    def prefetch_batch(self, queries) -> None:
+        """Lookahead hook (called by the scheduler with the *next* formed
+        batch while the current one computes): stage every host-tier
+        segment's candidate upload so the async ``device_put`` overlaps
+        the in-flight batch's kernels. Purely advisory — a wrong or
+        missing prefetch is a ``prefetch_misses`` bump, never a wrong
+        answer. No-op on the host backend or an all-device placement."""
+        if self.backend != "spmd":
+            return
+        queries = np.atleast_2d(np.asarray(queries, np.float32))
+        snap = self.data.snapshot()
+        if (snap.generation != self._generation
+                or snap.placement_version != self._placement_version):
+            self._sync(snap)
+        with self._dp_mu:
+            states = [self._seg_states.get(s.seg_id) for s in snap.segments]
+        for st in states:
+            if st is None or st.tier != "host" or not st.int32_ids:
+                continue
+            probes = assign_queries(st.segment.index, queries)
+            self._executor_for(st).prefetch(
+                probes=probes, dead_rows=snap.dead_rows[st.segment.seg_id]
+            )
+
     def adopt(self) -> None:
-        """Hot-swap to the data plane's current generation now (otherwise
-        the next batch adopts lazily)."""
+        """Hot-swap to the data plane's current generation and tier
+        placement now (otherwise the next batch adopts lazily)."""
         self._sync(self.data.snapshot())
 
     def warmup_executors(self, k: Optional[int] = None) -> None:
@@ -579,7 +666,8 @@ class HarmonyServer(DataPlane):
         queries = np.asarray(queries, np.float32)
         while True:
             snap = self.data.snapshot()
-            if snap.generation != self._generation:
+            if (snap.generation != self._generation
+                    or snap.placement_version != self._placement_version):
                 self._sync(snap)
             with self._dp_mu:
                 if all(s.seg_id in self._seg_states for s in snap.segments):
@@ -600,6 +688,9 @@ class HarmonyServer(DataPlane):
                 # predicate pushdown: clusters with no allowed live row
                 # drop out of probe selection entirely
                 probes = filtered_assign_queries(seg.index, queries, dead_arg)
+            # feed the placement policy's cluster-hotness EWMA with the
+            # actual probe selection (every segment, every batch)
+            self.data.note_probes(seg.seg_id, probes)
             if seg is primary:
                 self._recent_probes.append(probes)
             if backend == "spmd" and st.int32_ids and prec == self.precision:
@@ -615,7 +706,8 @@ class HarmonyServer(DataPlane):
                 )
             else:
                 res = harmony_search(
-                    seg.index, st.corpus, queries, k=k, dead_rows=dead_arg,
+                    seg.index, st.corpus, queries, k=k, probes=probes,
+                    dead_rows=dead_arg,
                     # the dead-mask device cache is keyed by (generation,
                     # dead_version) only — a filter changes the mask under
                     # the same key, so it must bypass the cache
@@ -662,6 +754,16 @@ class HarmonyServer(DataPlane):
             f_scores, f_ids = reciprocal_rank_fusion(ranked, k)
             res = SearchResult(ids=f_ids, scores=f_scores,
                                stats={**res.stats, "fused": True})
+        cold_n = sum(int(r.stats.get("cold", 0)) for r in seg_results)
+        res.stats["cold_segments"] = cold_n
+        res.stats["bytes_streamed"] = sum(
+            int(r.stats.get("bytes_streamed", 0)) for r in seg_results)
+        res.stats["prefetch_hits"] = sum(
+            int(r.stats.get("prefetch_hits", 0)) for r in seg_results)
+        if cold_n:
+            self.stats.cold_batches += 1
+            self.stats.bytes_streamed += res.stats["bytes_streamed"]
+            self.stats.prefetch_hits += res.stats["prefetch_hits"]
         dt = time.perf_counter() - t0
         res.stats["wall_s"] = dt
         if backend == "spmd":

@@ -15,6 +15,16 @@ Design:
   and ``device_put`` on the mesh at construction. Serving a batch moves
   only the query block, probe table, τ seeds, and a small int32 row-index
   table host→device; the corpus never re-crosses the PCIe/ICI boundary.
+* **Cold tier** (``tier="host"``) — for host-resident (demoted) segments
+  nothing stays on the mesh: per batch, only the probed clusters' rows
+  are gathered host-side (:func:`repro.core.pipeline.gather_host_candidates`)
+  into the same static (qb, cap) bucket shapes and streamed up through a
+  double-buffered async upload — :meth:`SpmdExecutor.prefetch` stages
+  batch i+1's transfer while batch i's ring kernels run. int8 codes
+  stream 4× less PCIe traffic than fp32 rows, and the fp32 re-rank reads
+  host memory anyway, so the cold tier prefers the PR 6 quantized path.
+  Results are bit-identical to ``tier="device"``: same gathered
+  candidate set, same kernels, same bucket ladder.
 * **Candidate gather** — probed clusters are contiguous row ranges of the
   resident shards (the IVF pack is cluster-sorted), so the host computes a
   per-shard row-index union and the device gathers those rows into a
@@ -53,6 +63,7 @@ from repro.core.pipeline import (
     build_corpus_arrays,
     build_query_arrays,
     corpus_shardings,
+    gather_host_candidates,
     gather_local_candidates,
     ring_chunk_search,
 )
@@ -106,7 +117,10 @@ class SpmdExecutor:
         index: IVFIndex,
         cfg: Optional[ExecutorConfig] = None,
         mesh: Optional[Mesh] = None,
+        tier: str = "device",
     ):
+        assert tier in ("device", "host"), tier
+        self.tier = tier
         self.index = index
         self.cfg = cfg or ExecutorConfig()
         self.mesh = mesh if mesh is not None else _default_mesh(self.cfg.d_blocks)
@@ -166,7 +180,11 @@ class SpmdExecutor:
         caps.append(self.cap_full)
         self.cap_buckets = tuple(caps)
 
-        # corpus upload: once, at construction
+        # corpus residency is tier-dependent: "device" uploads the packed
+        # arrays to the mesh once at construction (the hot tier);
+        # "host" keeps them in host RAM and streams only the probed
+        # clusters' rows per batch through a double-buffered upload
+        # (the cold tier — int8 codes preferred, 4× less PCIe traffic)
         quant = index.int8_quant() if self.precision == "int8" else None
         arrays = build_corpus_arrays(self.corpus, self._base_scfg, quant=quant)
         self._quant_grid = arrays.pop("quant_grid", None)
@@ -174,9 +192,35 @@ class SpmdExecutor:
         names = ("x_blocks", "xn2_blocks", "cluster_ids", "row_ids")
         if self.precision == "int8":
             names = names + ("scale2",)
-        self._resident = tuple(
-            jax.device_put(arrays[name], sh[name]) for name in names
-        )
+        if tier == "device":
+            self._resident = tuple(
+                jax.device_put(arrays[name], sh[name]) for name in names
+            )
+            self._host_arrays = None
+        else:
+            self._resident = None
+            self._host_arrays = {name: arrays[name] for name in names}
+            # scale2 is B floats — park it on the mesh even for the cold
+            # tier rather than re-streaming it per batch
+            self._scale2_dev = (
+                jax.device_put(arrays["scale2"], sh["scale2"])
+                if self.precision == "int8" else None
+            )
+            ad, am = self._base_scfg.axis_data, self._base_scfg.axis_model
+            from jax.sharding import NamedSharding
+            self._stream_sh = (
+                NamedSharding(self.mesh, P(ad, None, am)),   # x_c
+                NamedSharding(self.mesh, P(am, ad, None)),   # xn2_c
+                NamedSharding(self.mesh, P(ad, None)),       # cl_c
+                NamedSharding(self.mesh, P(ad, None)),       # id_c
+            )
+            # double-buffered prefetch queue: candidate uploads staged by
+            # the scheduler's formed-batch lookahead, keyed on the gather
+            # table so the later dispatch recognizes its own rows. Two
+            # slots = the upload of batch i+1 in flight while batch i
+            # computes; device_put is async, so the transfer genuinely
+            # overlaps the ring kernels.
+            self._prefetched: Dict[tuple, tuple] = {}
         # stage-2 re-rank lookup (ext id → packed row), built lazily
         self._id_order: Optional[np.ndarray] = None
         self._sorted_ids: Optional[np.ndarray] = None
@@ -191,6 +235,12 @@ class SpmdExecutor:
         self.wall_s = 0.0
         self.tile_skipped = 0
         self.tile_total = 0
+        # cold-tier counters (always 0 for a device-tier executor)
+        self.cold_dispatches = 0
+        self.bytes_streamed = 0
+        self.prefetch_hits = 0
+        self.prefetch_misses = 0
+        self.prefetch_staged = 0
 
     def warmup(self, k: Optional[int] = None, nprobe=None):
         """Pre-compile the whole (qb, cap) bucket ladder.
@@ -230,8 +280,13 @@ class SpmdExecutor:
                         np.full((1,), np.inf, np.float32),
                         quant_grid=self._quant_grid,
                     )
-                    step(*self._resident, rows,
-                         qarr["queries"], qarr["probes"], qarr["tau0"])
+                    if self.tier == "host":
+                        cand, _ = self._upload_candidates(rows, cap)
+                        step(*cand,
+                             qarr["queries"], qarr["probes"], qarr["tau0"])
+                    else:
+                        step(*self._resident, rows,
+                             qarr["queries"], qarr["probes"], qarr["tau0"])
 
     # ----------------------------------------------------------- bucketing
     def _pick_bucket(self, ladder: Tuple[int, ...], need: int) -> int:
@@ -282,7 +337,8 @@ class SpmdExecutor:
         key = (bscfg.qb, bscfg.cap, bscfg.k, bscfg.nprobe)
         step = self._steps.get(key)
         if step is None:
-            step = self._make_step(bscfg, key)
+            step = (self._make_stream_step(bscfg, key)
+                    if self.tier == "host" else self._make_step(bscfg, key))
             self._steps[key] = step
         self._probe_widths.add(bscfg.nprobe)
         return step
@@ -333,6 +389,108 @@ class SpmdExecutor:
         )
         return jax.jit(fn)
 
+    def _make_stream_step(self, bscfg: SpmdConfig, key):
+        """Cold-tier step: the candidate arrays arrive *already gathered*
+        (host-side, :func:`gather_host_candidates`) and streamed to the
+        mesh, so the device body skips the resident gather and runs the
+        identical ring kernels over the same (qb, cap) bucket shapes —
+        one compile cache, bit-identical results to the resident path."""
+        db, counts = bscfg.db, self.trace_counts
+        int8 = self.precision == "int8"
+
+        def device_fn(x_c, xn2_c, cl_c, id_c, *rest):
+            counts[key] = counts.get(key, 0) + 1
+            if int8:
+                scale2, q_blk, probes, tau0 = rest
+            else:
+                scale2, (q_blk, probes, tau0) = None, rest
+            x_c = x_c.reshape(bscfg.cap, db)
+            xn2_c = xn2_c.reshape(bscfg.cap)
+            cl_c = cl_c.reshape(bscfg.cap)
+            id_c = id_c.reshape(bscfg.cap)
+            q_blk = q_blk.reshape(bscfg.qb, db)
+            return ring_chunk_search(
+                bscfg, x_c, xn2_c, cl_c, id_c, q_blk, probes, tau0,
+                scale2=scale2,
+            )
+
+        ad, am = bscfg.axis_data, bscfg.axis_model
+        cand_specs = (
+            P(ad, None, am),        # x_c  (streamed per batch)
+            P(am, ad, None),        # xn2_c
+            P(ad, None),            # cl_c
+            P(ad, None),            # id_c
+        )
+        if int8:
+            cand_specs = cand_specs + (P(am),)   # scale2 (resident)
+        in_specs = cand_specs + (
+            P(None, am),            # queries
+            P(None, None),          # probes
+            P(None),                # tau0
+        )
+        fn = shard_map_compat(
+            device_fn, mesh=self.mesh, in_specs=in_specs,
+            out_specs=(P(), P(), P()),
+        )
+        return jax.jit(fn)
+
+    # ---------------------------------------------------- cold-tier stream
+    def _upload_candidates(self, rows: np.ndarray, cap_b: int):
+        """Gather the probed rows host-side and start their (async)
+        upload. Returns ``(device_arrays, nbytes)`` — the arrays are
+        valid step inputs immediately; the actual transfer overlaps
+        whatever the device is computing when this is called."""
+        cand = gather_host_candidates(self._host_arrays, rows)
+        nbytes = sum(a.nbytes for a in cand.values())
+        xs, ns, cs, is_ = self._stream_sh
+        dev = (
+            jax.device_put(cand["x_c"], xs),
+            jax.device_put(cand["xn2_c"], ns),
+            jax.device_put(cand["cl_c"], cs),
+            jax.device_put(cand["id_c"], is_),
+        )
+        if self.precision == "int8":
+            dev = dev + (self._scale2_dev,)
+        return dev, nbytes
+
+    def prefetch(
+        self,
+        queries: Optional[np.ndarray] = None,
+        probes: Optional[np.ndarray] = None,
+        dead_rows: Optional[np.ndarray] = None,
+        nprobe: Optional[int] = None,
+    ) -> None:
+        """Stage the *next* batch's cold-candidate upload while the
+        current batch computes (the scheduler calls this with its
+        formed-batch lookahead). No-op on a device-tier executor.
+
+        The staged upload is keyed on the gather table itself, so the
+        later :meth:`search_batch` recognizes its own candidate set no
+        matter how the batch was predicted; a wrong prediction is just a
+        miss (the dispatch uploads synchronously), never a wrong answer.
+        The queue is bounded to two slots — classic double buffering."""
+        if self.tier != "host":
+            return
+        if probes is None:
+            if queries is None:
+                return
+            queries = np.asarray(queries, np.float32)
+            if queries.ndim == 1:
+                queries = queries[None]
+            probes = assign_queries(self.index, queries, nprobe)
+        max_qb = self.qb_buckets[-1]
+        for lo in range(0, probes.shape[0], max_qb):
+            rows, cap_b = self._gather_rows(probes[lo:lo + max_qb], dead_rows)
+            if cap_b == 0:
+                continue
+            key = (rows.tobytes(), cap_b)
+            if key in self._prefetched:
+                continue
+            self._prefetched[key] = self._upload_candidates(rows, cap_b)
+            self.prefetch_staged += 1
+            while len(self._prefetched) > 2:    # double buffer: 2 slots
+                self._prefetched.pop(next(iter(self._prefetched)))
+
     # ------------------------------------------------------------- serving
     def search_batch(
         self,
@@ -377,6 +535,11 @@ class SpmdExecutor:
                     "splits": len(parts),
                     "precision": self.precision,
                     "rerank_k": max(p.stats.get("rerank_k", 0) for p in parts),
+                    "cold": max(p.stats.get("cold", 0) for p in parts),
+                    "bytes_streamed": sum(p.stats.get("bytes_streamed", 0)
+                                          for p in parts),
+                    "prefetch_hits": sum(p.stats.get("prefetch_hits", 0)
+                                         for p in parts),
                 },
             )
 
@@ -402,6 +565,8 @@ class SpmdExecutor:
                     "tile_skipped": 0, "tile_total": 0, "pad_queries": 0,
                     "compiled": False, "splits": 1,
                     "precision": self.precision, "rerank_k": 0,
+                    "cold": int(self.tier == "host"),
+                    "bytes_streamed": 0, "prefetch_hits": 0,
                 },
             )
         int8 = self.precision == "int8"
@@ -436,10 +601,27 @@ class SpmdExecutor:
                                   quant_grid=self._quant_grid)
         compiles_before = self.compiles
         step = self._get_step(bscfg)
-        gs, gi, st = step(
-            *self._resident, rows,
-            qarr["queries"], qarr["probes"], qarr["tau0"],
-        )
+        cold_bytes, pf_hit = 0, 0
+        if self.tier == "host":
+            pkey = (rows.tobytes(), cap_b)
+            staged = self._prefetched.pop(pkey, None)
+            if staged is not None:
+                cand, cold_bytes = staged
+                pf_hit = 1
+                self.prefetch_hits += 1
+            else:
+                cand, cold_bytes = self._upload_candidates(rows, cap_b)
+                self.prefetch_misses += 1
+            self.cold_dispatches += 1
+            self.bytes_streamed += cold_bytes
+            gs, gi, st = step(
+                *cand, qarr["queries"], qarr["probes"], qarr["tau0"],
+            )
+        else:
+            gs, gi, st = step(
+                *self._resident, rows,
+                qarr["queries"], qarr["probes"], qarr["tau0"],
+            )
         scores = np.asarray(gs)[:nq]
         ids = np.asarray(gi)[:nq].astype(np.int64)
         ids[~np.isfinite(scores)] = -1
@@ -466,6 +648,9 @@ class SpmdExecutor:
                 "splits": 1,
                 "precision": self.precision,
                 "rerank_k": k_step if int8 else 0,
+                "cold": int(self.tier == "host"),
+                "bytes_streamed": cold_bytes,
+                "prefetch_hits": pf_hit,
             },
         )
 
@@ -519,6 +704,12 @@ class SpmdExecutor:
         serving results blob)."""
         return {
             "precision": self.precision,
+            "tier": self.tier,
+            "cold_dispatches": self.cold_dispatches,
+            "bytes_streamed": self.bytes_streamed,
+            "prefetch_hits": self.prefetch_hits,
+            "prefetch_misses": self.prefetch_misses,
+            "prefetch_staged": self.prefetch_staged,
             "dispatches": self.dispatches,
             "queries": self.queries,
             "wall_s": self.wall_s,

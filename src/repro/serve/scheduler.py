@@ -230,6 +230,15 @@ class DispatchTarget(DataPlane):
             res, _ = self.execute(queries, k, clock.now(), batch_id, options)
         return res, clock.now()
 
+    def prefetch(self, queries: np.ndarray) -> None:
+        """Advisory lookahead: the scheduler peeks the requests that will
+        form the *next* batch and offers their vectors before running the
+        current one, so a target serving host-tier segments can overlap
+        their candidate upload with the in-flight batch's compute
+        (:meth:`repro.serve.engine.HarmonyServer.prefetch_batch`). A
+        wrong or ignored prefetch costs nothing but the hint. Default:
+        no-op."""
+
     # --- skew-adaptation surface -----------------------------------------
     def window_probes(self) -> Iterable[np.ndarray]:
         """Probe arrays of recently executed batches, newest first."""
@@ -307,6 +316,11 @@ class SingleServerTarget(DispatchTarget):
 
     def next_free_s(self) -> float:
         return self.busy_until
+
+    def prefetch(self, queries: np.ndarray) -> None:
+        pf = getattr(self.server, "prefetch_batch", None)
+        if pf is not None:
+            pf(queries)
 
     def _exec_task(self, task):
         queries, k = task[:2]
@@ -744,6 +758,28 @@ class ServingScheduler:
                 plans[key] = (exec_rows, assign)
             else:
                 plans[key] = (rows, list(range(len(rows))))
+
+        # lookahead prefetch: the requests still queued behind this batch
+        # are (up to deadline expiry) exactly the next formed batch — hand
+        # their knob-free vectors to the target *before* executing, so a
+        # host-tier candidate upload can overlap this batch's compute.
+        # Coalescing is mirrored so the predicted query block matches the
+        # one the next dispatch will actually stack. Purely advisory.
+        if self.queue:
+            pf_seen: set = set()
+            pf_qs = []
+            for req in list(self.queue)[: self.max_batch]:
+                if req.options_key() is not None:
+                    continue
+                b = vec_bytes(req.query)
+                if self._coalesce and b in pf_seen:
+                    continue
+                pf_seen.add(b)
+                pf_qs.append(req.query)
+            if pf_qs:
+                pf = getattr(self.target, "prefetch", None)
+                if pf is not None:
+                    pf(np.stack(pf_qs))
 
         def _run(eff_dispatch_s):
             row_ids = [None] * len(batch)

@@ -1,0 +1,357 @@
+"""Tiered memory hierarchy: placement policy, host-tier streaming, and
+the tier lifecycle (demote/promote, compaction, checkpoint, crashes).
+
+The load-bearing invariant everywhere: results are *tier-invariant*. The
+host tier gathers the same packed rows into the same static (qb, cap)
+buckets and runs the same ring kernels, so a tier move may change pacing
+but never a single returned id or score.
+"""
+
+import numpy as np
+import pytest
+
+from repro.config import HarmonyConfig
+from repro.core import SegmentedIndex, TagIn, build_ivf, search_oracle
+from repro.core.search import filtered_assign_queries
+from repro.runtime.faults import FaultPlan, FaultSpec, InjectedFault, fault_scope
+from repro.serve import (
+    HarmonyServer,
+    PlacementConfig,
+    SchedulerConfig,
+    apply_placement,
+    device_bytes_by_segment,
+    plan_placement,
+)
+from repro.serve.compactor import CompactionConfig, Compactor
+
+CFG = HarmonyConfig(dim=16, nlist=8, nprobe=4, topk=5, kmeans_iters=3)
+
+
+def _plane(seed=0, nb=384, extra=192, cfg=CFG):
+    """Two sealed segments (build + sealed delta) with ids = row order."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((nb + extra, cfg.dim)).astype(np.float32)
+    data = SegmentedIndex.build(x[:nb], cfg)
+    if extra:
+        data.upsert(np.arange(nb, nb + extra), x[nb:])
+        data.compact_inline()
+    return x, data
+
+
+def _queries(x, n=12, seed=3):
+    rng = np.random.default_rng(seed)
+    picks = rng.integers(0, len(x), n)
+    return x[picks] + 0.05 * rng.standard_normal((n, x.shape[1])).astype(
+        np.float32
+    )
+
+
+# ------------------------------------------------------------------ policy
+def test_plan_placement_no_budget_is_all_device():
+    _, data = _plane()
+    tiers = plan_placement(data, PlacementConfig())
+    assert set(tiers.values()) == {"device"}
+
+
+def test_plan_placement_budget_keeps_hottest():
+    _, data = _plane()
+    sids = [s.seg_id for s in data.segments]
+    # heat segment 1 only
+    data.note_probes(sids[1], np.array([[0, 1, 2, 3]]))
+    costs = device_bytes_by_segment(data)
+    budget = costs[sids[1]]  # room for exactly the hot segment
+    tiers = plan_placement(data, PlacementConfig(device_budget_bytes=budget))
+    assert tiers[sids[1]] == "device"
+    assert tiers[sids[0]] == "host"
+
+
+def test_plan_placement_hysteresis_is_sticky():
+    _, data = _plane(nb=192, extra=192)      # equal-size → equal cost
+    s0, s1 = [s.seg_id for s in data.segments]
+    costs = device_bytes_by_segment(data)
+    assert costs[s0] == costs[s1]
+    data.set_tiers({s0: "device", s1: "host"})
+    # s1 is 5% hotter — inside the incumbent's 10% bonus, so the device
+    # set must NOT flap; beyond it (2× hotter) the move must happen
+    data.note_probes(s0, np.zeros((1, 20), np.int64))
+    data.note_probes(s1, np.zeros((1, 21), np.int64))
+    cfg = PlacementConfig(device_budget_bytes=costs[s0])
+    tiers = plan_placement(data, cfg)
+    assert tiers == {s0: "device", s1: "host"}
+    data.note_probes(s1, np.zeros((1, 200), np.int64))
+    assert plan_placement(data, cfg) == {s0: "host", s1: "device"}
+
+
+def test_set_tiers_validates_and_bumps_version():
+    _, data = _plane()
+    v0 = data.placement_version
+    sid = data.segments[0].seg_id
+    assert data.set_tiers({sid: "host"}) == v0 + 1
+    assert data.tier_of(sid) == "host"
+    data.set_tiers({9999: "host"})       # unknown id ignored
+    assert data.tiers().get(9999) is None
+    with pytest.raises(ValueError, match="unknown tier"):
+        data.set_tiers({sid: "warm"})
+
+
+def test_memory_report_per_tier():
+    _, data = _plane()
+    rep = data.memory_report()
+    assert rep["device_bytes"] > 0 and rep["host_bytes"] > 0
+    assert data.memory_bytes() == rep["host_bytes"] + rep["device_bytes"]
+    # int8 residency: device cost collapses toward d + overhead per row
+    rep8 = data.memory_report(precision="int8")
+    assert rep8["device_bytes"] < rep["device_bytes"]
+    # demoting everything frees all device bytes; host side is unchanged
+    data.set_tiers({s.seg_id: "host" for s in data.segments})
+    cold = data.memory_report()
+    assert cold["device_bytes"] == 0
+    assert cold["host_bytes"] == rep["host_bytes"]
+
+
+def test_memory_report_counts_metadata_and_bm25():
+    cfg = CFG
+    rng = np.random.default_rng(5)
+    x = rng.standard_normal((128, cfg.dim)).astype(np.float32)
+    data = SegmentedIndex.build(x, cfg)
+    base = data.memory_report()["host_bytes"]
+    data2 = SegmentedIndex.build(x, cfg)
+    data2.upsert(
+        np.arange(128, 192),
+        rng.standard_normal((64, cfg.dim)).astype(np.float32),
+        meta={"color": np.arange(64) % 3,
+              "text": [f"doc number {i}" for i in range(64)]},
+    )
+    data2.compact_inline()
+    rep = data2.memory_report()
+    assert rep["host_bytes"] > base
+    # force the lazy BM25 build, then the report must grow again
+    from repro.core.fusion import segment_bm25
+    bm = segment_bm25(data2.segments[-1].index)
+    assert bm is not None
+    assert data2.memory_report()["host_bytes"] == rep["host_bytes"] + \
+        bm.memory_bytes()
+
+
+# ----------------------------------------------------- tier-invariant serving
+@pytest.mark.parametrize("precision", ["fp32", "int8"])
+def test_demote_promote_bit_identical_roundtrip(precision):
+    x, data = _plane()
+    srv = HarmonyServer(data, n_nodes=2, backend="spmd", precision=precision)
+    q = _queries(x)
+    hot = srv.search_batch(q)
+    assert hot.stats["cold_segments"] == 0
+    # demote everything
+    apply_placement(data, [srv],
+                    {s.seg_id: "host" for s in data.segments})
+    cold = srv.search_batch(q)
+    assert cold.stats["cold_segments"] == data.n_segments
+    assert cold.stats["bytes_streamed"] > 0
+    assert np.array_equal(hot.ids, cold.ids)
+    assert np.array_equal(hot.scores, cold.scores)
+    # promote back: again bit-identical, nothing streamed
+    apply_placement(data, [srv],
+                    {s.seg_id: "device" for s in data.segments})
+    hot2 = srv.search_batch(q)
+    assert hot2.stats["cold_segments"] == 0
+    assert np.array_equal(hot.ids, hot2.ids)
+    assert np.array_equal(hot.scores, hot2.scores)
+
+
+@pytest.mark.parametrize("backend", ["host", "spmd"])
+@pytest.mark.parametrize("precision", ["fp32", "int8"])
+def test_host_tier_matches_oracle(backend, precision):
+    cfg = CFG.replace(nprobe=8)              # all clusters: exact
+    x, data = _plane(cfg=cfg, extra=0)       # single segment vs oracle
+    data.set_tiers({data.segments[0].seg_id: "host"})
+    srv = HarmonyServer(data, n_nodes=2, backend=backend,
+                        precision=precision)
+    q = _queries(x)
+    res = srv.search_batch(q)
+    ref = search_oracle(data.segments[0].index, q, k=cfg.topk)
+    assert np.array_equal(res.ids, ref.ids)
+    np.testing.assert_allclose(res.scores, ref.scores, rtol=1e-5, atol=1e-5)
+
+
+def test_tier_moves_do_not_bump_generation():
+    x, data = _plane()
+    srv = HarmonyServer(data, n_nodes=2, backend="spmd")
+    gen = srv.generation
+    swaps = srv.stats.generation_swaps
+    apply_placement(data, [srv],
+                    {s.seg_id: "host" for s in data.segments})
+    srv.search_batch(_queries(x))
+    assert srv.generation == gen
+    assert srv.stats.generation_swaps == swaps
+    assert srv.stats.placement_swaps == 1
+
+
+# ------------------------------------------------------------- lifecycles
+def test_placement_survives_compaction():
+    x, data = _plane()
+    srv = HarmonyServer(data, n_nodes=2, backend="spmd")
+    sids = [s.seg_id for s in data.segments]
+    budget = device_bytes_by_segment(data)[sids[0]]
+    comp = Compactor(data, srv, CompactionConfig(
+        delta_threshold=16,
+        placement=PlacementConfig(device_budget_bytes=budget),
+    ))
+    # heat segment 0, install the placement
+    data.note_probes(sids[0], np.array([[0, 1, 2, 3]]))
+    assert comp.maybe_place() is not None
+    assert data.tier_of(sids[1]) == "host"
+    # seal a delta: commit prunes retired tiers, re-plans, and the server
+    # keeps serving correct results across the whole cycle
+    rng = np.random.default_rng(9)
+    data.upsert(np.arange(2000, 2032),
+                rng.standard_normal((32, CFG.dim)).astype(np.float32))
+    ev = comp.maybe_compact()
+    assert ev is not None and ev["placed"] in (True, False)
+    assert set(data.tiers()) == {s.seg_id for s in data.segments}
+    q = _queries(x)
+    res = srv.search_batch(q)
+    ref = srv.search_batch(q, backend="host")
+    assert np.array_equal(res.ids, ref.ids)
+
+
+def test_placement_survives_checkpoint_restore(tmp_path):
+    from repro.checkpoint import Checkpointer
+    from repro.checkpoint.index_io import (
+        load_segmented_index,
+        save_segmented_index,
+    )
+
+    x, data = _plane()
+    sids = [s.seg_id for s in data.segments]
+    data.note_probes(sids[0], np.array([[0, 1], [2, 3]]))
+    data.set_tiers({sids[0]: "device", sids[1]: "host"})
+    save_segmented_index(Checkpointer(tmp_path), data)
+    data2 = load_segmented_index(Checkpointer(tmp_path))
+    assert data2.tiers() == data.tiers()
+    assert data2.placement_version == data.placement_version
+    for sid in sids:
+        np.testing.assert_allclose(data2.hotness(sid), data.hotness(sid))
+    # the restored plane serves the host tier bit-identically
+    srv = HarmonyServer(data, n_nodes=2, backend="spmd")
+    srv2 = HarmonyServer(data2, n_nodes=2, backend="spmd")
+    q = _queries(x)
+    a, b = srv.search_batch(q), srv2.search_batch(q)
+    assert np.array_equal(a.ids, b.ids)
+    assert np.array_equal(a.scores, b.scores)
+
+
+def test_crash_at_tier_swap_never_loses_a_segment():
+    x, data = _plane()
+    srv = HarmonyServer(data, n_nodes=2, backend="spmd")
+    q = _queries(x)
+    before = srv.search_batch(q)
+    tiers = {s.seg_id: "host" for s in data.segments}
+    # die between set_tiers and the replica adopt — the worst boundary
+    with fault_scope(FaultPlan(FaultSpec("placement.swap"))):
+        with pytest.raises(InjectedFault):
+            apply_placement(data, [srv], tiers)
+    assert data.tiers() == tiers                 # swap itself committed
+    assert srv._placement_version != data.placement_version
+    # next batch lazily re-syncs residency; every segment stays
+    # reachable and the answers don't move
+    after = srv.search_batch(q)
+    assert np.array_equal(before.ids, after.ids)
+    assert np.array_equal(before.scores, after.scores)
+    assert after.stats["cold_segments"] == data.n_segments
+    # crash at prepare: nothing committed, placement unchanged
+    with fault_scope(FaultPlan(FaultSpec("placement.prepare"))):
+        with pytest.raises(InjectedFault):
+            apply_placement(data, [srv],
+                            {s.seg_id: "device" for s in data.segments})
+    assert data.tiers() == tiers
+    again = srv.search_batch(q)
+    assert np.array_equal(before.ids, again.ids)
+
+
+# ------------------------------------------------------------- prefetch
+def test_prefetch_hits_and_lookahead():
+    x, data = _plane()
+    data.set_tiers({s.seg_id: "host" for s in data.segments})
+    srv = HarmonyServer(data, n_nodes=2, backend="spmd")
+    q = _queries(x, n=8)
+    srv.prefetch_batch(q)
+    res = srv.search_batch(q)
+    assert res.stats["prefetch_hits"] == data.n_segments
+    assert srv.stats.prefetch_hits == data.n_segments
+    # scheduler lookahead: queued next batch is prefetched automatically
+    hits0 = srv.stats.prefetch_hits
+    srv.serve([q[i: i + 2] for i in range(0, 8, 2)],
+              sched=SchedulerConfig(backend="spmd", max_batch=2))
+    assert srv.stats.prefetch_hits > hits0
+
+
+def test_engine_feeds_hotness():
+    x, data = _plane()
+    srv = HarmonyServer(data, n_nodes=2)
+    assert all(v == 0.0 for v in data.segment_hotness().values())
+    srv.search_batch(_queries(x))
+    heat = data.segment_hotness()
+    assert any(v > 0.0 for v in heat.values())
+
+
+# ------------------------------------- selectivity-aware probe widening
+def _meta_corpus(nb=2048, sel_mod=100):
+    """1-in-``sel_mod`` rows carry the target tag (selectivity 0.01).
+    The 21 allowed rows scatter across clusters, so a sel=0.01 filter
+    needs probes ∝ 1/sel to see its candidate set — the widen cap is
+    raised so the threshold/selectivity ratio (~20×) binds at nlist."""
+    cfg = HarmonyConfig(dim=16, nlist=32, nprobe=2, topk=5, kmeans_iters=3,
+                        filter_widen_cap=16.0)
+    rng = np.random.default_rng(11)
+    x = rng.standard_normal((nb, cfg.dim)).astype(np.float32)
+    meta = {"bucket": np.arange(nb) % sel_mod}
+    return cfg, x, meta
+
+
+def test_filtered_widening_recovers_recall_at_low_selectivity():
+    cfg, x, meta = _meta_corpus()
+    flt = TagIn("bucket", (0,))
+    narrow_cfg = cfg.replace(filter_widen_threshold=0.0)   # widening off
+    idx_wide = build_ivf(x, cfg, meta=meta)
+    idx_narrow = build_ivf(x, narrow_cfg, meta=meta)
+    q = _queries(x, n=24, seed=7)
+    truth = search_oracle(idx_wide, q, nprobe=cfg.nlist, flt=flt)
+
+    def recall(idx):
+        srv = HarmonyServer(idx, n_nodes=2)
+        res = srv.search_batch(q, flt=flt)
+        hits = sum(
+            len(set(res.ids[i].tolist()) & set(truth.ids[i].tolist())
+                - {-1})
+            for i in range(len(q))
+        )
+        denom = int((truth.ids >= 0).sum())
+        return hits / max(denom, 1)
+
+    r_narrow, r_wide = recall(idx_narrow), recall(idx_wide)
+    assert r_wide > r_narrow
+    # widened to every live cluster → exact filtered results; the fixed
+    # 2-probe budget sees only a sliver of the 21-row candidate set
+    assert r_wide >= 0.99
+    assert r_narrow <= 0.5
+
+
+def test_filtered_widening_math_and_override():
+    cfg, x, meta = _meta_corpus()
+    idx = build_ivf(x, cfg, meta=meta)
+    excluded = np.asarray(meta["bucket"] != 0)[np.argsort(idx.ids)]
+    # packed order: recompute the mask in row order
+    excluded = np.zeros(idx.nb, bool)
+    excluded[:] = True
+    excluded[np.isin(idx.ids, np.nonzero(
+        np.asarray(meta["bucket"]) == 0)[0])] = False
+    q = x[:4]
+    probes = filtered_assign_queries(idx, q, excluded)
+    # sel≈0.0103 < threshold 0.2 → widen by min(cap, thr/sel)≈16×,
+    # clamped to nlist
+    assert probes.shape[1] == min(cfg.nlist, cfg.nprobe * 16)
+    # an explicit nprobe is a caller override: never widened
+    assert filtered_assign_queries(idx, q, excluded, nprobe=3).shape[1] == 3
+    # high selectivity: untouched
+    assert filtered_assign_queries(
+        idx, q, np.zeros(idx.nb, bool)).shape[1] == cfg.nprobe

@@ -70,9 +70,10 @@ def _digest(sched, target) -> dict:
             for k, v in stats.summary().items()
             # execution-side and data-plane-side counters are not replay
             # state (the data plane grew upsert/delete/swap counters in
-            # PR 5, resilience counters in PR 7, and cache/coalescing/
-            # deadline counters in PR 9 — always 0 in these read-only,
-            # fault-free, cache-off scenarios)
+            # PR 5, resilience counters in PR 7, cache/coalescing/
+            # deadline counters in PR 9, and tiered-placement counters
+            # in PR 10 — always 0 in these read-only, fault-free,
+            # cache-off, all-device scenarios)
             if k not in ("batches", "queries",
                          "upserts", "deletes", "generation_swaps",
                          "replica_failures", "breaker_opens",
@@ -81,7 +82,9 @@ def _digest(sched, target) -> dict:
                          "failed_requests", "shutdown_leaks",
                          "cache_hits_exact", "cache_hits_semantic",
                          "cache_misses", "cache_invalidations",
-                         "coalesced", "expired_requests")
+                         "coalesced", "expired_requests",
+                         "cold_batches", "bytes_streamed",
+                         "prefetch_hits", "placement_swaps")
         },
     }
     hedge = getattr(target, "_hedge", None) or getattr(
